@@ -1,0 +1,77 @@
+"""Shared benchmark scaffolding: paper-scale hardware models, workload
+calibration, and pretty-printing.
+
+Calibration: one scalar `calib` (per model scale) anchors the simulator's
+absolute decode latency to the paper's measured Table 1 rollout latency
+(GSM8K on qwen3-0.6b = 23.45 s). Relative behaviour across scheduling
+regimes comes from the model structure, never from the knob.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.configs import get_config
+from repro.core.admission import AdmissionConfig
+from repro.core.manager import TaskSpec
+from repro.core.metrics import summarize
+from repro.core.policies import run_sim
+from repro.core.simulator import (HardwareModel, PAPER_WORKLOADS, Simulator,
+                                  WorkloadModel)
+
+PAPER_T1_GSM8K_S = 23.45       # paper Table 1, rollout latency seconds
+
+
+def hardware_for(model_name: str) -> HardwareModel:
+    """Paper §5: 0.6B→2 train devs, 14B→4, 32B→16 (two nodes = 32 devs)."""
+    if model_name == "qwen3-32b":
+        return HardwareModel(n_devices=32, train_devices=16)
+    if model_name == "qwen3-14b":
+        return HardwareModel(n_devices=16, train_devices=4)
+    return HardwareModel(n_devices=16, train_devices=2)
+
+
+def calibrate(hw: HardwareModel, model_name: str = "qwen3-0.6b") -> float:
+    """Anchor the simulator to the paper's measured solo GSM8K rollout
+    latency (Table 1: 23.45 s on qwen3-0.6b): solve the fixed per-decode-step
+    latency so the solo run matches; the bandwidth model still governs the
+    saturated (high-concurrency / big-model) regime. Sets hw.step_overhead_s
+    and returns it."""
+    cfg = get_config(model_name)
+    wl = PAPER_WORKLOADS["gsm8k"]
+    N = cfg.active_param_count()
+    prefill_s = (2 * N * wl.prompt_len * wl.rows
+                 / (hw.rollout_devices * hw.peak_flops_per_dev
+                    * hw.prefill_mfu))
+    hw.step_overhead_s = max(0.0, (PAPER_T1_GSM8K_S - prefill_s) / wl.gen_len)
+    return hw.step_overhead_s
+
+
+def make_specs(env: str, n: int, steps: int) -> List[TaskSpec]:
+    return [TaskSpec(f"{env}-{i}", env, target_steps=steps) for i in range(n)]
+
+
+def run_policy(policy: str, model_name: str, env: str, n_tasks: int,
+               steps: int, budget: float = 400e9) -> Dict[str, float]:
+    cfg = get_config(model_name)
+    hw = hardware_for(model_name)
+    calibrate(hw)
+    specs = make_specs(env, n_tasks, steps)
+    wls = {s.task_id: PAPER_WORKLOADS[env] for s in specs}
+    mgr, rec = run_sim(policy, cfg, hw, specs, wls,
+                       AdmissionConfig(memory_budget_bytes=budget))
+    return summarize(mgr, rec)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.monotonic() - self.t0
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The harness-wide CSV line: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,81 @@
+"""Paper Figure 1 — reward trajectories under multi-tenant load: MARLaaS
+keeps per-task reward improving with N concurrent LoRA tasks comparable to
+single-task training. REAL runtime (threads + JAX GRPO) at toy scale, NOT
+the simulator: tiny SFT-warmed base, copy-task tenants, graded rewards.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import REGISTRY, LoRAConfig, reduced
+from repro.core.manager import TaskSpec
+from repro.core.runtime import MARLaaSRuntime, RuntimeConfig
+from repro.data import tokenizer as tok
+from repro.envs.tasks import make_env
+from repro.models import init_params
+from repro.train.optimizer import AdamWConfig
+from repro.train.sft import make_sft_step, sft_init
+
+from .common import Timer, emit
+
+
+def _warmed_base(key, cfg, steps=40):
+    params = init_params(key, cfg)
+    env = make_env("copy", length=2, alphabet="012")
+    rng = random.Random(0)
+    sft = jax.jit(make_sft_step(cfg, AdamWConfig(lr=3e-3), trainable="full"))
+    opt = sft_init(params)
+    for _ in range(steps):
+        rows, S = 16, 16
+        tokens = np.zeros((rows, S), np.int32)
+        p_l = np.zeros((rows,), np.int32)
+        t_l = np.zeros((rows,), np.int32)
+        for j in range(rows):
+            prompt, truth = env.sample_prompt(rng)
+            seq = prompt + tok.encode(truth) + [tok.EOS]
+            tokens[j, :len(seq)] = seq
+            p_l[j], t_l[j] = len(prompt), len(seq)
+        batch = {"tokens": jnp.asarray(tokens), "prompt_lens": jnp.asarray(p_l),
+                 "total_lens": jnp.asarray(t_l)}
+        params, opt, _ = sft(None, params, opt, batch)
+    return params
+
+
+def run(n_tasks=3, steps=4, verbose=True):
+    cfg = dataclasses.replace(
+        reduced(REGISTRY["granite-3-2b"], dtype="float32"),
+        vocab_size=tok.VOCAB_SIZE, lora=LoRAConfig(rank=8, alpha=32.0))
+    params = _warmed_base(jax.random.PRNGKey(0), cfg)
+    rt = MARLaaSRuntime(cfg, params, RuntimeConfig(policy="marlaas",
+                                                   max_len=48, seed=0))
+    for i in range(n_tasks):
+        rt.submit_task(TaskSpec(f"copy-{i}", "copy", group_size=4,
+                                num_groups=2, max_new_tokens=4,
+                                target_steps=steps, lr=3e-3))
+    rt.run(timeout_s=420)
+    curves = {tid: st.reward_history for tid, st in rt.mgr.tasks.items()}
+    if verbose:
+        print(f"\n# Fig 1 — reward under {n_tasks}-tenant load "
+              f"(real runtime, SFT-warmed toy base)")
+        for tid, c in curves.items():
+            print(f"  {tid}: " + " ".join(f"{r:.2f}" for r in c))
+    return curves
+
+
+def main():
+    with Timer() as t:
+        curves = run()
+    mean_first = np.mean([c[0] for c in curves.values() if c])
+    mean_last = np.mean([c[-1] for c in curves.values() if c])
+    emit("fig1_multi_tenant_reward", t.seconds * 1e6,
+         f"reward_first={mean_first:.3f} reward_last={mean_last:.3f} "
+         f"tasks={len(curves)}")
+
+
+if __name__ == "__main__":
+    main()

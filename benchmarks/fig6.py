@@ -1,0 +1,37 @@
+"""Paper Figure 6 — scaling under increasing task concurrency (1→32 GSM8K
+replicas on qwen3-0.6b, 100 steps each): time, throughput, util, idle."""
+from __future__ import annotations
+
+from .common import Timer, emit, run_policy
+
+CONCURRENCY = (1, 2, 4, 8, 16, 32)
+POLS = ("single_disagg", "multilora_sync", "marlaas")
+
+
+def run(verbose: bool = True):
+    out = {}
+    for n in CONCURRENCY:
+        for pol in POLS:
+            out[(pol, n)] = run_policy(pol, "qwen3-0.6b", "gsm8k", n, 100)
+    if verbose:
+        print("\n# Fig 6 — concurrency scaling (GSM8K × 100 steps, sim)")
+        print(f"{'policy':16s} {'n':>3s} {'hrs':>7s} {'steps/hr':>9s} "
+              f"{'util%':>7s} {'idle%':>7s}")
+        for (pol, n), s in out.items():
+            print(f"{pol:16s} {n:3d} {s['time_hrs']:7.2f} "
+                  f"{s['steps_per_hr']:9.1f} {s['utilization_pct']:7.2f} "
+                  f"{s['idle_pct']:7.2f}")
+    return out
+
+
+def main():
+    with Timer() as t:
+        out = run()
+    for (pol, n), s in out.items():
+        emit(f"fig6_{pol}_n{n}", t.seconds * 1e6 / len(out),
+             f"steps_per_hr={s['steps_per_hr']:.1f} "
+             f"util={s['utilization_pct']:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

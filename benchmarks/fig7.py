@@ -1,0 +1,35 @@
+"""Paper Figure 7 — user-facing latency vs concurrency: TTFS (time to first
+step) and TPTS (time per training step)."""
+from __future__ import annotations
+
+from .common import Timer, emit, run_policy
+
+CONCURRENCY = (1, 2, 4, 8, 16, 32)
+POLS = ("single_disagg", "multilora_sync", "marlaas")
+
+
+def run(verbose: bool = True):
+    out = {}
+    for n in CONCURRENCY:
+        for pol in POLS:
+            out[(pol, n)] = run_policy(pol, "qwen3-0.6b", "gsm8k", n, 20)
+    if verbose:
+        print("\n# Fig 7 — TTFS / TPTS vs concurrency (sim)")
+        print(f"{'policy':16s} {'n':>3s} {'ttfs_mean_s':>12s} "
+              f"{'ttfs_max_s':>11s} {'tpts_mean_s':>12s}")
+        for (pol, n), s in out.items():
+            print(f"{pol:16s} {n:3d} {s['ttfs_mean_s']:12.1f} "
+                  f"{s['ttfs_max_s']:11.1f} {s['tpts_mean_s']:12.1f}")
+    return out
+
+
+def main():
+    with Timer() as t:
+        out = run()
+    for (pol, n), s in out.items():
+        emit(f"fig7_{pol}_n{n}", t.seconds * 1e6 / len(out),
+             f"ttfs={s['ttfs_mean_s']:.1f}s tpts={s['tpts_mean_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

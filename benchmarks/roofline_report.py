@@ -1,0 +1,64 @@
+"""Render the dry-run roofline table (deliverable g) from
+benchmarks/results/dryrun.jsonl."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
+
+
+def load(path: str = RESULTS, tag: str = None):
+    rows = {}
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if tag and r.get("tag") != tag:
+                continue
+            key = (r["arch"], r["shape"], r["mesh"], r.get("tag", "base"))
+            rows[key] = r            # later lines win (reruns)
+    return rows
+
+
+def render(rows, mesh="single", tag="base"):
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'dom':>10s} {'frac':>5s} {'useful':>7s} "
+           f"{'GB/dev':>7s} {'ok':>3s}")
+    lines = [hdr, "-" * len(hdr)]
+    for (arch, shape, m, t), r in sorted(rows.items()):
+        if m != mesh or t != tag:
+            continue
+        if not r.get("ok"):
+            lines.append(f"{arch:22s} {shape:12s} FAILED: "
+                         f"{r.get('error', '?')[:60]}")
+            continue
+        lines.append(
+            f"{arch:22s} {shape:12s} {r['compute_s']:10.3e} "
+            f"{r['memory_s']:10.3e} {r['collective_s']:10.3e} "
+            f"{r['dominant']:>10s} {r['roofline_frac']:5.2f} "
+            f"{r['useful_ratio']:7.2f} "
+            f"{r.get('bytes_per_device', 0) / 1e9:7.2f}  ok")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load()
+    n_ok = sum(1 for r in rows.values() if r.get("ok"))
+    print(f"\n# Roofline table ({n_ok}/{len(rows)} cells ok)")
+    for mesh in ("single", "multipod"):
+        print(f"\n## mesh = {mesh}")
+        print(render(rows, mesh=mesh))
+    from .common import emit
+    for (arch, shape, m, t), r in sorted(rows.items()):
+        if r.get("ok") and t == "base":
+            emit(f"roofline_{arch}_{shape}_{m}", r.get("compile_s", 0) * 1e6,
+                 f"dom={r['dominant']} frac={r['roofline_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Benchmark harness aggregator — one module per paper table/figure.
+Each prints ``name,us_per_call,derived`` CSV lines (plus a readable table).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table2     # one table
+"""
+import sys
+
+
+def main() -> None:
+    from . import (fig1, fig6, fig7, kernels, roofline_report, table1,
+                   table2, table3, table4)
+    mods = {"table1": table1, "table2": table2, "table3": table3,
+            "table4": table4, "fig1": fig1, "fig6": fig6, "fig7": fig7,
+            "kernels": kernels, "roofline": roofline_report}
+    wanted = sys.argv[1:] or list(mods)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        mods[name].main()
+
+
+if __name__ == '__main__':
+    main()

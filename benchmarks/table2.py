@@ -1,0 +1,54 @@
+"""Paper Table 2 — end-to-end training performance (wall hours, steps/hr)
+across scheduling regimes and model scales: 10 replicas of the search-agent
+workload × 100 steps each."""
+from __future__ import annotations
+
+from repro.core.policies import POLICIES
+
+from .common import Timer, emit, run_policy
+
+PAPER = {   # (hours, steps/hr) per (policy, scale)
+    ("single_disagg", "qwen3-0.6b"): (18.33, 54.0),
+    ("single_colloc", "qwen3-0.6b"): (10.64, 93.6),
+    ("multilora_sync", "qwen3-0.6b"): (6.07, 164.88),
+    ("marlaas", "qwen3-0.6b"): (3.42, 292.83),
+    ("single_disagg", "qwen3-14b"): (24.48, 39.6),
+    ("single_colloc", "qwen3-14b"): (12.70, 79.2),
+    ("multilora_sync", "qwen3-14b"): (16.21, 61.56),
+    ("marlaas", "qwen3-14b"): (3.72, 226.8),
+    ("single_disagg", "qwen3-32b"): (25.13, 38.88),
+    ("single_colloc", "qwen3-32b"): (17.98, 55.62),
+    ("multilora_sync", "qwen3-32b"): (18.89, 52.92),
+    ("marlaas", "qwen3-32b"): (9.87, 101.30),
+}
+
+N_TASKS, STEPS = 10, 100
+
+
+def run(verbose: bool = True):
+    out = {}
+    for scale in ("qwen3-0.6b", "qwen3-14b", "qwen3-32b"):
+        for pol in POLICIES:
+            s = run_policy(pol, scale, "search", N_TASKS, STEPS)
+            out[(pol, scale)] = s
+    if verbose:
+        print("\n# Table 2 — end-to-end (10× search-agent × 100 steps, sim)")
+        print(f"{'policy':16s} {'scale':12s} {'hrs':>7s} {'steps/hr':>9s}"
+              f" {'paper_hrs':>9s} {'paper_sph':>9s}")
+        for (pol, scale), s in out.items():
+            ph, ps = PAPER[(pol, scale)]
+            print(f"{pol:16s} {scale:12s} {s['time_hrs']:7.2f} "
+                  f"{s['steps_per_hr']:9.1f} {ph:9.2f} {ps:9.1f}")
+    return out
+
+
+def main():
+    with Timer() as t:
+        out = run()
+    for (pol, scale), s in out.items():
+        emit(f"table2_{pol}_{scale}", t.seconds * 1e6 / len(out),
+             f"hrs={s['time_hrs']:.2f} steps_per_hr={s['steps_per_hr']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

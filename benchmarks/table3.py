@@ -1,0 +1,50 @@
+"""Paper Table 3 — NPU utilization % and idle % under the same Table-2
+setup (10× search-agent, 100 steps)."""
+from __future__ import annotations
+
+from repro.core.policies import POLICIES
+
+from .common import Timer, emit, run_policy
+
+PAPER = {
+    ("single_disagg", "qwen3-0.6b"): (1.56, 74.18),
+    ("single_colloc", "qwen3-0.6b"): (3.78, 58.03),
+    ("multilora_sync", "qwen3-0.6b"): (1.78, 85.16),
+    ("marlaas", "qwen3-0.6b"): (6.67, 40.52),
+    ("single_disagg", "qwen3-14b"): (4.45, 72.52),
+    ("single_colloc", "qwen3-14b"): (5.51, 73.71),
+    ("multilora_sync", "qwen3-14b"): (3.08, 86.70),
+    ("marlaas", "qwen3-14b"): (8.67, 40.46),
+    ("single_disagg", "qwen3-32b"): (1.58, 93.18),
+    ("single_colloc", "qwen3-32b"): (2.65, 81.06),
+    ("multilora_sync", "qwen3-32b"): (1.77, 87.88),
+    ("marlaas", "qwen3-32b"): (4.35, 78.98),
+}
+
+
+def run(verbose: bool = True):
+    out = {}
+    for scale in ("qwen3-0.6b", "qwen3-14b", "qwen3-32b"):
+        for pol in POLICIES:
+            out[(pol, scale)] = run_policy(pol, scale, "search", 10, 100)
+    if verbose:
+        print("\n# Table 3 — utilization / idle (10× search-agent, sim)")
+        print(f"{'policy':16s} {'scale':12s} {'util%':>7s} {'idle%':>7s}"
+              f" {'paper_u':>8s} {'paper_i':>8s}")
+        for (pol, scale), s in out.items():
+            pu, pi = PAPER[(pol, scale)]
+            print(f"{pol:16s} {scale:12s} {s['utilization_pct']:7.2f} "
+                  f"{s['idle_pct']:7.2f} {pu:8.2f} {pi:8.2f}")
+    return out
+
+
+def main():
+    with Timer() as t:
+        out = run()
+    for (pol, scale), s in out.items():
+        emit(f"table3_{pol}_{scale}", t.seconds * 1e6 / len(out),
+             f"util={s['utilization_pct']:.2f}% idle={s['idle_pct']:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table 4 — ablation: MARLaaS (full) vs w/o async (synchronous
+barrier) vs w/o multi-LoRA (per-task weight streaming). Ten concurrent
+AMC12 replicas on qwen3-0.6b for one epoch (≈25 steps each)."""
+from __future__ import annotations
+
+from .common import Timer, emit, run_policy
+
+PAPER = {  # throughput steps/hr, util %, idle %, hours
+    "marlaas": (255.6, 22.55, 17.73, 1.81),
+    "w/o async": (86.4, 7.04, 45.01, 8.13),
+    "w/o multi-LoRA": (54.0, 5.29, 34.12, 12.98),
+}
+
+VARIANTS = {
+    "marlaas": "marlaas",
+    "w/o async": "multilora_sync",
+    "w/o multi-LoRA": "marlaas_nomlora",
+}
+STEPS = 25
+
+
+def run(verbose: bool = True):
+    out = {}
+    for label, pol in VARIANTS.items():
+        out[label] = run_policy(pol, "qwen3-0.6b", "amc12", 10, STEPS)
+    if verbose:
+        print("\n# Table 4 — ablation (10× AMC12, one epoch, sim)")
+        print(f"{'variant':16s}{'steps/hr':>9s} {'util%':>7s} "
+              f"{'idle%':>7s} {'hrs':>6s}  | paper: sph/util/idle/hrs")
+        for label, s in out.items():
+            p = PAPER[label]
+            print(f"{label:16s}{s['steps_per_hr']:9.1f} "
+                  f"{s['utilization_pct']:7.2f} {s['idle_pct']:7.2f} "
+                  f"{s['time_hrs']:6.2f}  | {p[0]:.1f}/{p[1]:.2f}/"
+                  f"{p[2]:.2f}/{p[3]:.2f}")
+    return out
+
+
+def main():
+    with Timer() as t:
+        out = run()
+    for label, s in out.items():
+        emit(f"table4_{label.replace(' ', '_').replace('/', '')}",
+             t.seconds * 1e6 / 3,
+             f"steps_per_hr={s['steps_per_hr']:.1f} "
+             f"util={s['utilization_pct']:.2f}% idle={s['idle_pct']:.2f}% "
+             f"hrs={s['time_hrs']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

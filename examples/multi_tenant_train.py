@@ -1,0 +1,85 @@
+"""End-to-end driver (deliverable b): multi-tenant asynchronous RL training
+— Algorithm 1 on real threads with real GRPO updates.
+
+    PYTHONPATH=src python examples/multi_tenant_train.py \
+        --tasks 3 --steps 5 --policy marlaas [--preset 100m]
+
+Tenants (gsm8k / amc12 / agentic search, round-robin) share one frozen base
+model; each owns LoRA adapters + optimizer state in the multi-task manager.
+Rollouts are fused cross-task multi-LoRA batches; training is serialized;
+environment tool calls overlap decode. Prints per-task reward curves and the
+paper's system metrics (util/idle/TTFS/TPTS).
+
+--preset tiny (default) runs in ~a minute on 1 CPU core; --preset 100m
+builds a ~100M-param base (use on a real machine; a few hundred steps of
+GRPO at that scale is hours on laptop CPUs, minutes on accelerators).
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import REGISTRY, reduced, ModelConfig, LoRAConfig
+from repro.core.manager import TaskSpec
+from repro.core.metrics import summarize
+from repro.core.runtime import MARLaaSRuntime, RuntimeConfig
+from repro.data import tokenizer as tok
+from repro.models import init_params
+
+ENVS = ["gsm8k", "amc12", "search"]
+
+
+def base_config(preset: str) -> ModelConfig:
+    if preset == "tiny":
+        return dataclasses.replace(
+            reduced(REGISTRY["granite-3-2b"], dtype="float32"),
+            vocab_size=tok.VOCAB_SIZE)
+    if preset == "100m":
+        return dataclasses.replace(
+            REGISTRY["granite-3-2b"], num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+            vocab_size=tok.VOCAB_SIZE, dtype="float32", remat=False,
+            lora=LoRAConfig(rank=16))
+    raise ValueError(preset)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--policy", default="marlaas",
+                    choices=["marlaas", "multilora_sync", "single_disagg"])
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--timeout", type=float, default=3600.0)
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = base_config(args.preset)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_par = sum(x.size for x in jax.tree.leaves(params))
+    print(f"base model: {cfg.name}-{args.preset} ({n_par/1e6:.1f}M params), "
+          f"policy={args.policy}")
+
+    rt = MARLaaSRuntime(cfg, params, RuntimeConfig(
+        policy=args.policy, max_len=64, seed=0,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=5 if args.checkpoint_dir else 0))
+    for i in range(args.tasks):
+        env = ENVS[i % len(ENVS)]
+        rt.submit_task(TaskSpec(f"{env}-{i}", env, group_size=4, num_groups=1,
+                                max_new_tokens=6 if env != "search" else 12,
+                                target_steps=args.steps, lr=3e-3))
+    rt.run(timeout_s=args.timeout)
+
+    print("\nper-task reward curves (graded verifier reward ∈ [0,1]):")
+    for tid, st in rt.mgr.tasks.items():
+        curve = " ".join(f"{r:.2f}" for r in st.reward_history)
+        print(f"  {tid:12s} v{st.version}: {curve}")
+    print("\nsystem metrics:")
+    print(json.dumps({k: round(v, 3) for k, v in
+                      summarize(rt.mgr, rt.rec).items()}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Quickstart: single-task GRPO fine-tuning with LoRA on a tiny base model.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 8]
+
+Builds a reduced granite-family model, rolls out arithmetic prompts,
+verifies rewards, and applies GRPO updates through the same PolicyUpdate
+the service uses. Prints the reward curve.
+"""
+import argparse
+import dataclasses
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import REGISTRY, reduced
+from repro.data import tokenizer as tok
+from repro.envs.tasks import make_env
+from repro.lora.adapters import init_lora
+from repro.models import init_params
+from repro.rollout.engine import RolloutEngine, RolloutRequest, to_trajectory_batch
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainConfig, init_opt_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--groups", type=int, default=2)
+    ap.add_argument("--group-size", type=int, default=4)
+    ap.add_argument("--arch", default="granite-3-2b")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(reduced(REGISTRY[args.arch], dtype="float32"),
+                              vocab_size=tok.VOCAB_SIZE)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    adapters = init_lora(key, cfg)
+    tc = TrainConfig(group_size=args.group_size,
+                     adamw=AdamWConfig(lr=3e-3))
+    opt = init_opt_state(cfg, tc, params, adapters)
+    step = jax.jit(make_train_step(cfg, tc))
+    engine = RolloutEngine(cfg, params, max_len=64, seed=0)
+    env = make_env("gsm8k", max_operand=9)
+    rng = random.Random(0)
+
+    print(f"arch={cfg.name} params={sum(x.size for x in jax.tree.leaves(params)):,}")
+    for v in range(args.steps):
+        reqs = []
+        for _ in range(args.groups):
+            prompt, truth = env.sample_prompt(rng)
+            for _ in range(args.group_size):
+                reqs.append(RolloutRequest("quickstart", 0, prompt, truth,
+                                           env, max_new_tokens=4,
+                                           temperature=1.0))
+        t0 = time.time()
+        results, stats = engine.generate(reqs, [adapters])
+        tb = to_trajectory_batch(results, "quickstart", v, args.group_size,
+                                 pad_to=64)
+        batch = {"tokens": jnp.asarray(tb.tokens),
+                 "prompt_lens": jnp.asarray(tb.prompt_lens),
+                 "total_lens": jnp.asarray(tb.total_lens),
+                 "rewards": jnp.asarray(tb.rewards),
+                 "loss_mask": jnp.asarray(tb.meta["loss_mask"])}
+        adapters, opt, m = step(params, adapters, opt, batch)
+        print(f"step {v:2d}  reward={np.mean(tb.rewards):.3f}  "
+              f"loss={float(m['loss']):+.4f}  entropy={float(m['entropy']):.2f}  "
+              f"({time.time()-t0:.1f}s)")
+    print("done — the adapters are the tenant's θ^(v); the base never moved.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Learning demo (paper Fig 1 shape): SFT warmup → GRPO lifts verifiable
+reward. Tiny model, single CPU core, ~2 minutes.
+
+    PYTHONPATH=src python examples/rl_learning_demo.py
+"""
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import REGISTRY, LoRAConfig, reduced
+from repro.data import tokenizer as tok
+from repro.envs.tasks import make_env
+from repro.lora.adapters import init_lora
+from repro.models import init_params
+from repro.rollout.engine import RolloutEngine, RolloutRequest, to_trajectory_batch
+from repro.train.optimizer import AdamWConfig
+from repro.train.sft import make_sft_step, sft_init
+from repro.train.train_step import TrainConfig, init_opt_state, make_train_step
+
+
+def build_sft_batch(env, rng, rows, S):
+    tokens = np.zeros((rows, S), np.int32)
+    p_lens = np.zeros((rows,), np.int32)
+    t_lens = np.zeros((rows,), np.int32)
+    for j in range(rows):
+        prompt, truth = env.sample_prompt(rng)
+        answer = tok.encode(truth) + [tok.EOS]
+        seq = prompt + answer
+        tokens[j, :len(seq)] = seq
+        p_lens[j], t_lens[j] = len(prompt), len(seq)
+    return {"tokens": jnp.asarray(tokens),
+            "prompt_lens": jnp.asarray(p_lens),
+            "total_lens": jnp.asarray(t_lens)}
+
+
+def main():
+    cfg = dataclasses.replace(reduced(REGISTRY["granite-3-2b"],
+                                      dtype="float32"),
+                              vocab_size=tok.VOCAB_SIZE,
+                              lora=LoRAConfig(rank=8, alpha=32.0))
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    env = make_env("copy", length=3, alphabet="0123456789")
+    rng = random.Random(0)
+
+    # ---- stage 1: SFT warmup of the (shared) base on the task format ----
+    sft = jax.jit(make_sft_step(cfg, AdamWConfig(lr=3e-3), trainable="full"))
+    sopt = sft_init(params)
+    for i in range(45):
+        batch = build_sft_batch(env, rng, 16, 24)
+        params, sopt, m = sft(None, params, sopt, batch)
+        if i % 50 == 0:
+            print(f"sft {i:3d}: loss={float(m['loss']):.3f}")
+    print(f"sft done: loss={float(m['loss']):.3f} — base now knows the "
+          f"format; tenants specialize via LoRA + GRPO:")
+
+    # ---- stage 2: per-tenant GRPO on verifiable reward ----
+    adapters = init_lora(key, cfg)
+    tc = TrainConfig(group_size=8, adamw=AdamWConfig(lr=4e-3))
+    opt = init_opt_state(cfg, tc, params, adapters)
+    step = jax.jit(make_train_step(cfg, tc))
+    engine = RolloutEngine(cfg, params, max_len=48, seed=0)
+    rews, exact = [], []
+    for v in range(40):
+        reqs = []
+        for _ in range(3):
+            prompt, truth = env.sample_prompt(rng)
+            for _ in range(8):
+                reqs.append(RolloutRequest("t", 0, prompt, truth, env, 4, 1.0))
+        results, _ = engine.generate(reqs, [adapters])
+        tb = to_trajectory_batch(results, "t", v, 8, pad_to=48)
+        batch = {"tokens": jnp.asarray(tb.tokens),
+                 "prompt_lens": jnp.asarray(tb.prompt_lens),
+                 "total_lens": jnp.asarray(tb.total_lens),
+                 "rewards": jnp.asarray(tb.rewards),
+                 "loss_mask": jnp.asarray(tb.meta["loss_mask"])}
+        adapters, opt, m = step(params, adapters, opt, batch)
+        rews.append(float(np.mean(tb.rewards)))
+        exact.append(float(np.mean(tb.rewards >= 1.0)))
+        if v % 5 == 0:
+            print(f"grpo v{v:2d}: reward={rews[-1]:.3f} exact={exact[-1]:.2f}")
+    a, b = np.mean(rews[:5]), np.mean(rews[-5:])
+    print(f"\nreward first5={a:.3f} → last5={b:.3f} "
+          f"({'improved' if b > a else 'flat'})")
+
+
+if __name__ == "__main__":
+    main()

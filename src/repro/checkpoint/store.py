@@ -1,0 +1,172 @@
+"""Fault-tolerant checkpointing of the full multi-task manager state.
+
+Design (DESIGN.md §6):
+- one atomic snapshot = manifest.json + per-task .npz blobs, written to a
+  temp dir then os.rename'd into place (crash-safe: a half-written snapshot
+  is never visible);
+- snapshots are *mesh-agnostic* (host numpy trees keyed by tree path) → an
+  elastic restart under a different device count/mesh re-shards on load;
+- MARLaaS's strict on-policy invariant makes recovery exact: every task
+  resumes at its last committed (θ_t^(v), φ_t^(v)); in-flight rollouts of
+  uncommitted versions are simply regenerated — no stale trajectory can ever
+  be trained on, so a crash never corrupts optimization state;
+- the FIFO buffer is serialized too: committed-but-untrained trajectories
+  survive restart (still on-policy by the invariant above).
+
+Trees are serialized by key path ("layers/attn_q/a"), so any nested-dict
+pytree round-trips without treedef pickling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core.manager import MultiTaskManager, TaskSpec, TaskState
+from repro.rl.types import TrajectoryBatch
+
+_SEP = "/"
+
+
+def tree_to_flat(tree, prefix="") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(tree_to_flat(v, f"{prefix}{k}{_SEP}"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix.rstrip(_SEP)] = np.asarray(tree)
+    return out
+
+
+def flat_to_tree(flat: Dict[str, np.ndarray]):
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def save_checkpoint(directory: str, mgr: MultiTaskManager,
+                    step_tag: Optional[str] = None) -> str:
+    """Atomic snapshot; returns the snapshot path."""
+    tag = step_tag or f"step_{sum(s.steps_done for s in mgr.tasks.values()):08d}"
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(prefix=".ckpt_tmp_", dir=directory)
+    manifest: Dict[str, Any] = {"tag": tag, "time": time.time(), "tasks": {},
+                                "buffer": []}
+    with mgr._lock:
+        for tid, st in mgr.tasks.items():
+            entry = {
+                "spec": dataclasses.asdict(st.spec),
+                "version": st.version,
+                "steps_done": st.steps_done,
+                "status": st.status,
+                "reward_history": st.reward_history,
+                "has_adapters": st.adapters is not None,
+                "has_opt": st.opt_state is not None,
+            }
+            if st.adapters is not None:
+                np.savez(os.path.join(tmp, f"{tid}_adapters.npz"),
+                         **tree_to_flat(st.adapters))
+            if st.opt_state is not None:
+                np.savez(os.path.join(tmp, f"{tid}_opt.npz"),
+                         **tree_to_flat(st.opt_state))
+            manifest["tasks"][tid] = entry
+        for i, tb in enumerate(mgr.q_buffer):
+            np.savez(os.path.join(tmp, f"buffer_{i}.npz"),
+                     tokens=tb.tokens, prompt_lens=tb.prompt_lens,
+                     total_lens=tb.total_lens, rewards=tb.rewards,
+                     behavior=(tb.behavior_logprobs
+                               if tb.behavior_logprobs is not None
+                               else np.zeros((0,))),
+                     loss_mask=tb.meta.get("loss_mask", np.zeros((0,))))
+            manifest["buffer"].append({
+                "task_id": tb.task_id, "version": tb.version,
+                "group_size": tb.group_size, "idx": i,
+            })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    final = os.path.join(directory, tag)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    _write_latest(directory, tag)
+    return final
+
+
+def _write_latest(directory: str, tag: str):
+    tmp = os.path.join(directory, ".latest_tmp")
+    with open(tmp, "w") as f:
+        f.write(tag)
+    os.rename(tmp, os.path.join(directory, "LATEST"))
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    p = os.path.join(directory, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        tag = f.read().strip()
+    full = os.path.join(directory, tag)
+    return full if os.path.exists(full) else None
+
+
+def load_checkpoint(path: str, mgr: MultiTaskManager) -> MultiTaskManager:
+    """Restore manager state in place (tasks + buffer). Adapters come back
+    as host numpy trees; device placement/resharding happens lazily on first
+    use under whatever mesh is now active (elastic restart).
+
+    `rollout_issued_version` is reset to version-1 so the next policy
+    version is re-issued for rollout — in-flight work at crash time is
+    regenerated, never resumed stale."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with mgr._lock:
+        mgr.q_buffer.clear()
+        for tid, entry in manifest["tasks"].items():
+            spec = TaskSpec(**entry["spec"])
+            adapters = opt_state = None
+            if entry["has_adapters"]:
+                adapters = flat_to_tree(
+                    dict(np.load(os.path.join(path, f"{tid}_adapters.npz"))))
+            if entry["has_opt"]:
+                opt_state = flat_to_tree(
+                    dict(np.load(os.path.join(path, f"{tid}_opt.npz"))))
+            st = TaskState(spec=spec, adapters=adapters, opt_state=opt_state,
+                           version=entry["version"],
+                           steps_done=entry["steps_done"],
+                           status=entry["status"],
+                           rollout_issued_version=entry["version"] - 1,
+                           submitted_at=mgr.clock())
+            st.reward_history = list(entry.get("reward_history", []))
+            mgr.tasks[spec.task_id] = st
+        for b in manifest["buffer"]:
+            arrs = dict(np.load(os.path.join(path, f"buffer_{b['idx']}.npz")))
+            tb = TrajectoryBatch(
+                task_id=b["task_id"], version=b["version"],
+                tokens=arrs["tokens"], prompt_lens=arrs["prompt_lens"],
+                total_lens=arrs["total_lens"], rewards=arrs["rewards"],
+                group_size=b["group_size"],
+                behavior_logprobs=(arrs["behavior"]
+                                   if arrs["behavior"].size else None),
+                meta=({"loss_mask": arrs["loss_mask"]}
+                      if arrs["loss_mask"].size else {}))
+            mgr.q_buffer.append(tb)
+            # this version's rollout survived in the buffer — do NOT
+            # re-issue it, or the duplicate would train stale after the
+            # buffered copy commits
+            st = mgr.tasks[tb.task_id]
+            if tb.version == st.version:
+                st.rollout_issued_version = st.version
+    return mgr

@@ -1,0 +1,6 @@
+"""Selectable config — see archs.py for the exact published spec."""
+from .archs import DEEPSEEK_MOE_16B as CONFIG
+from .base import reduced, shapes_for
+
+SMOKE = reduced(CONFIG)
+SHAPES = shapes_for(CONFIG)

@@ -1,0 +1,6 @@
+"""Selectable config — see archs.py for the exact published spec."""
+from .archs import QWEN3_32B as CONFIG
+from .base import reduced, shapes_for
+
+SMOKE = reduced(CONFIG)
+SHAPES = shapes_for(CONFIG)

@@ -1,0 +1,14 @@
+# The paper's primary contribution — the MARLaaS system itself:
+#   manager.py    multi-task manager M (versioned θ/φ store + FIFO Q_buffer)
+#   admission.py  KV-cache-aware admission control (generalized to SSM state)
+#   runtime.py    real threaded disaggregated runtime (fused multi-LoRA
+#                 rollout worker + serialized trainer, Algorithm 1)
+#   simulator.py  virtual-time discrete-event executor (paper-scale tables)
+#   policies.py   the 4 scheduling regimes + ablation variants
+#   metrics.py    occupancy timeline -> util/idle/steps-per-hr/TTFS/TPTS
+from .admission import AdmissionConfig, AdmissionController
+from .manager import MultiTaskManager, TaskSpec, TaskState
+from .metrics import MetricsRecorder, summarize
+
+__all__ = ["AdmissionConfig", "AdmissionController", "MultiTaskManager",
+           "TaskSpec", "TaskState", "MetricsRecorder", "summarize"]

@@ -1,0 +1,171 @@
+"""The multi-task manager M (paper §4.2) — the centre of MARLaaS.
+
+Maintains, per task t: LoRA parameters θ_t^(v), optimizer state φ_t^(v) and
+the version counter v; plus the global FIFO trajectory buffer Q_buffer whose
+entries are (t, τ_t^(v), v).
+
+Strict per-task policy consistency (paper §1): `next_policy(t)` yields a
+given version exactly once — the rollout engine can only generate from the
+latest *committed* version, and `commit` only accepts an update for the
+exact version the trajectories were generated under. There is no staleness
+anywhere in the pipeline by construction; asynchrony is purely cross-task.
+
+Thread-safe: the real runtime drives it from rollout/train threads; the
+simulator drives it single-threaded in virtual time. All timestamps come
+through the injected `clock` so both modes share metric definitions.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+from repro.rl.types import TrajectoryBatch
+
+
+@dataclass
+class TaskSpec:
+    task_id: str
+    env_name: str
+    group_size: int = 4
+    num_groups: int = 2            # groups per rollout batch
+    max_new_tokens: int = 16
+    target_steps: int = 20         # requested train steps
+    temperature: float = 1.0
+    lr: float = 3e-3
+
+    @property
+    def rows_per_batch(self) -> int:
+        return self.group_size * self.num_groups
+
+
+@dataclass
+class TaskState:
+    spec: TaskSpec
+    adapters: Any = None            # θ_t^(v)
+    opt_state: Any = None           # φ_t^(v)
+    version: int = 0
+    steps_done: int = 0
+    status: str = "pending"         # pending|admitted|finished
+    rollout_issued_version: int = -1   # highest v handed to the rollout engine
+    submitted_at: float = 0.0
+    admitted_at: float = 0.0
+    first_step_at: Optional[float] = None
+    last_step_at: Optional[float] = None
+    step_times: List[float] = field(default_factory=list)
+    reward_history: List[float] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.steps_done >= self.spec.target_steps
+
+
+class MultiTaskManager:
+    def __init__(self, clock: Callable[[], float] = None):
+        import time
+        self.clock = clock or time.monotonic
+        self.tasks: Dict[str, TaskState] = {}
+        self.q_buffer: Deque[TrajectoryBatch] = deque()
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+
+    # -- task lifecycle -------------------------------------------------
+    def submit(self, spec: TaskSpec, adapters=None, opt_state=None) -> TaskState:
+        with self._lock:
+            st = TaskState(spec=spec, adapters=adapters, opt_state=opt_state,
+                           submitted_at=self.clock())
+            self.tasks[spec.task_id] = st
+            self._cv.notify_all()
+            return st
+
+    def admit(self, task_id: str):
+        with self._lock:
+            st = self.tasks[task_id]
+            if st.status == "pending":
+                st.status = "admitted"
+                st.admitted_at = self.clock()
+                self._cv.notify_all()
+
+    # -- Algorithm 1, line 5: M.next_policy(t) ---------------------------
+    def next_policy(self, task_id: str):
+        """Return (version, adapters) if an unconsumed committed version
+        exists for this task, else None. Hands each version out ONCE."""
+        with self._lock:
+            st = self.tasks[task_id]
+            if st.status != "admitted" or st.done:
+                return None
+            if st.rollout_issued_version >= st.version:
+                return None                       # waiting for a commit
+            st.rollout_issued_version = st.version
+            return st.version, st.adapters
+
+    def rollout_ready_tasks(self) -> List[str]:
+        with self._lock:
+            return [tid for tid, st in self.tasks.items()
+                    if st.status == "admitted" and not st.done
+                    and st.rollout_issued_version < st.version]
+
+    # -- Algorithm 1, line 8: enqueue -------------------------------------
+    def enqueue(self, batch: TrajectoryBatch):
+        with self._lock:
+            st = self.tasks[batch.task_id]
+            assert batch.version == st.version, (
+                f"stale trajectory: task {batch.task_id} v{batch.version} "
+                f"vs committed v{st.version} — on-policy invariant broken")
+            self.q_buffer.append(batch)
+            self._cv.notify_all()
+
+    # -- Algorithm 1, line 13: pop (global FIFO) --------------------------
+    def pop_batch(self, timeout: Optional[float] = None) -> Optional[TrajectoryBatch]:
+        with self._cv:
+            if not self.q_buffer and timeout:
+                self._cv.wait(timeout)
+            if not self.q_buffer:
+                return None
+            return self.q_buffer.popleft()
+
+    # -- Algorithm 1, line 15: commit θ,φ^(v+1) ---------------------------
+    def commit(self, task_id: str, adapters, opt_state, trained_version: int,
+               reward_mean: float = 0.0):
+        with self._lock:
+            st = self.tasks[task_id]
+            assert trained_version == st.version, (
+                f"commit for v{trained_version} but task at v{st.version}")
+            st.adapters = adapters
+            st.opt_state = opt_state
+            st.version += 1
+            st.steps_done += 1
+            now = self.clock()
+            if st.first_step_at is None:
+                st.first_step_at = now
+            st.step_times.append(now)
+            st.last_step_at = now
+            st.reward_history.append(float(reward_mean))
+            if st.done:
+                st.status = "finished"
+            self._cv.notify_all()
+
+    # -- introspection ----------------------------------------------------
+    def all_done(self) -> bool:
+        with self._lock:
+            return bool(self.tasks) and all(
+                st.done for st in self.tasks.values())
+
+    def active_tasks(self) -> List[str]:
+        with self._lock:
+            return [tid for tid, st in self.tasks.items()
+                    if st.status == "admitted" and not st.done]
+
+    def pending_tasks(self) -> List[str]:
+        with self._lock:
+            return [tid for tid, st in self.tasks.items()
+                    if st.status == "pending"]
+
+    def snapshot_versions(self) -> Dict[str, int]:
+        with self._lock:
+            return {tid: st.version for tid, st in self.tasks.items()}
+
+    def wait(self, predicate, timeout: float = None) -> bool:
+        with self._cv:
+            return self._cv.wait_for(predicate, timeout)

@@ -1,0 +1,303 @@
+"""Real (threaded) MARLaaS runtime: the disaggregated engines of Fig 5
+executing actual JAX rollout + GRPO training on this host.
+
+  RolloutWorker thread — gathers every task with an unconsumed policy
+    version, fuses their requests into ONE multi-LoRA batched generate()
+    (paper §4.5), verifies rewards, enqueues (t, τ, v) into Q_buffer.
+  Trainer thread — pops FIFO, runs the task's PolicyUpdate, commits v+1.
+  Environment interactions run on the engine's tool thread-pool and overlap
+  decode of the other rows (paper's rollout/env overlap).
+
+The same MultiTaskManager/MetricsRecorder as the simulator; scheduling
+regimes: marlaas (async), multilora_sync (barrier), single_disagg
+(sequential tasks).
+
+Fault tolerance: `checkpoint_every` writes atomic manager snapshots
+(repro.checkpoint); `FailureInjector` can kill a step to exercise
+restart-from-checkpoint in tests. Straggler mitigation: rollout rows hitting
+the step budget are returned partially (graded reward on what exists) rather
+than stalling the batch.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.envs.tasks import make_env
+from repro.lora.adapters import init_lora
+from repro.rollout.engine import (RolloutEngine, RolloutRequest,
+                                  to_trajectory_batch)
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainConfig, init_opt_state, make_train_step
+from .admission import AdmissionConfig, AdmissionController
+from .manager import MultiTaskManager, TaskSpec
+from .metrics import MetricsRecorder
+
+
+@dataclass
+class RuntimeConfig:
+    policy: str = "marlaas"           # marlaas | multilora_sync | single_disagg
+    max_len: int = 96
+    use_kernel: bool = False
+    seed: int = 0
+    rollout_pool_devices: int = 1     # metric bookkeeping (host has 1 CPU)
+    train_pool_devices: int = 1
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0         # commits between snapshots (0 = off)
+    env_threads: int = 4
+
+
+class FailureInjector:
+    """Crashes the trainer after N commits (tests restart-from-checkpoint)."""
+
+    def __init__(self, fail_after_commits: Optional[int] = None):
+        self.fail_after = fail_after_commits
+        self.commits = 0
+
+    def on_commit(self):
+        self.commits += 1
+        if self.fail_after is not None and self.commits >= self.fail_after:
+            raise RuntimeError("injected node failure")
+
+
+class MARLaaSRuntime:
+    def __init__(self, cfg: ModelConfig, base_params, rcfg: RuntimeConfig,
+                 acfg: Optional[AdmissionConfig] = None,
+                 train_cfg: Optional[TrainConfig] = None,
+                 failure: Optional[FailureInjector] = None):
+        self.cfg = cfg
+        self.base_params = base_params
+        self.rcfg = rcfg
+        self.acfg = acfg or AdmissionConfig(memory_budget_bytes=1e9,
+                                            strict=False)
+        self.mgr = MultiTaskManager()
+        self.admission = AdmissionController(cfg, self.acfg)
+        self.rec = MetricsRecorder({"rollout": rcfg.rollout_pool_devices,
+                                    "train": rcfg.train_pool_devices})
+        self.engine = RolloutEngine(cfg, base_params, max_len=rcfg.max_len,
+                                    use_kernel=rcfg.use_kernel, seed=rcfg.seed)
+        self.envs: Dict[str, object] = {}
+        self.datagens: Dict[str, random.Random] = {}
+        self._train_cfg_base = train_cfg or TrainConfig()
+        self._train_steps: Dict[int, object] = {}   # group_size -> jitted fn
+        self._tool_pool = ThreadPoolExecutor(max_workers=rcfg.env_threads)
+        self._stop = threading.Event()
+        self.failure = failure
+        self.error: Optional[BaseException] = None
+
+    # -- task submission ---------------------------------------------------
+    def submit_task(self, spec: TaskSpec, adapters=None, opt_state=None):
+        if adapters is None:
+            key = jax.random.PRNGKey(hash(spec.task_id) % (2 ** 31))
+            adapters = init_lora(key, self.cfg)
+        tc = self._tc(spec)
+        if opt_state is None:
+            opt_state = init_opt_state(self.cfg, tc, self.base_params, adapters)
+        self.mgr.submit(spec, adapters, opt_state)
+        self.envs[spec.task_id] = make_env(spec.env_name)
+        self.datagens[spec.task_id] = random.Random(
+            hash((self.rcfg.seed, spec.task_id)) % (2 ** 31))
+
+    def _tc(self, spec: TaskSpec) -> TrainConfig:
+        return TrainConfig(group_size=spec.group_size,
+                           use_logprob_kernel=self.rcfg.use_kernel,
+                           adamw=AdamWConfig(lr=spec.lr))
+
+    def _train_step_for(self, spec: TaskSpec):
+        if spec.group_size not in self._train_steps:
+            self._train_steps[spec.group_size] = jax.jit(
+                make_train_step(self.cfg, self._tc(spec)))
+        return self._train_steps[spec.group_size]
+
+    # -- request building ----------------------------------------------------
+    def _build_requests(self, tids: List[str], adapter_order: Dict[str, int]):
+        reqs = []
+        for tid in tids:
+            st = self.mgr.tasks[tid]
+            env = self.envs[tid]
+            rng = self.datagens[tid]
+            for _ in range(st.spec.num_groups):
+                prompt, truth = env.sample_prompt(rng)
+                for _ in range(st.spec.group_size):
+                    reqs.append(RolloutRequest(
+                        task_id=tid, adapter_index=adapter_order[tid],
+                        prompt=prompt, truth=truth, env=env,
+                        max_new_tokens=st.spec.max_new_tokens,
+                        temperature=st.spec.temperature))
+        return reqs
+
+    # -- rollout worker -------------------------------------------------------
+    def _rollout_round(self) -> bool:
+        """One fused cross-task rollout round. Returns True if work done."""
+        ready = self.mgr.rollout_ready_tasks()
+        # admission control gates which tenants join the fused batch
+        batch_tids, versions = [], {}
+        for tid in ready:
+            st = self.mgr.tasks[tid]
+            if st.status == "pending":
+                continue
+            np_ = self.mgr.next_policy(tid)
+            if np_ is None:
+                continue
+            versions[tid] = np_[0]
+            batch_tids.append(tid)
+        if not batch_tids:
+            return False
+        adapters = [self.mgr.tasks[t].adapters for t in batch_tids]
+        order = {t: i for i, t in enumerate(batch_tids)}
+        reqs = self._build_requests(batch_tids, order)
+        t0 = time.monotonic()
+        results, stats = self.engine.generate(reqs, adapters,
+                                              tool_executor=self._tool_pool)
+        t1 = time.monotonic()
+        self.rec.record("rollout", "decode", "+".join(batch_tids), t0, t1,
+                        self.rcfg.rollout_pool_devices)
+        for tid in batch_tids:
+            tb = to_trajectory_batch(results, tid, versions[tid],
+                                     self.mgr.tasks[tid].spec.group_size,
+                                     pad_to=self.rcfg.max_len)
+            self.mgr.enqueue(tb)
+        return True
+
+    def _rollout_loop(self):
+        try:
+            while not self._stop.is_set():
+                did = self._rollout_round()
+                if not did:
+                    if self.mgr.all_done():
+                        return
+                    time.sleep(0.002)
+        except BaseException as e:       # surface to the driver
+            self.error = e
+            self._stop.set()
+
+    # -- trainer ---------------------------------------------------------------
+    def _train_one(self, tb) -> None:
+        import jax.numpy as jnp
+        st = self.mgr.tasks[tb.task_id]
+        step_fn = self._train_step_for(st.spec)
+        S = tb.tokens.shape[1]
+        batch = {
+            "tokens": jnp.asarray(tb.tokens),
+            "prompt_lens": jnp.asarray(tb.prompt_lens),
+            "total_lens": jnp.asarray(tb.total_lens),
+            "rewards": jnp.asarray(tb.rewards),
+        }
+        if "loss_mask" in tb.meta:
+            batch["loss_mask"] = jnp.asarray(tb.meta["loss_mask"])
+        t0 = time.monotonic()
+        new_adapters, new_opt, metrics = step_fn(self.base_params, st.adapters,
+                                                 st.opt_state, batch)
+        jax.block_until_ready(jax.tree.leaves(new_adapters)[0])
+        t1 = time.monotonic()
+        self.rec.record("train", "train", tb.task_id, t0, t1,
+                        self.rcfg.train_pool_devices)
+        self.mgr.commit(tb.task_id, new_adapters, new_opt, tb.version,
+                        reward_mean=float(np.mean(tb.rewards)))
+        if self.failure:
+            self.failure.on_commit()
+        if (self.rcfg.checkpoint_dir and self.rcfg.checkpoint_every and
+                sum(s.steps_done for s in self.mgr.tasks.values())
+                % self.rcfg.checkpoint_every == 0):
+            from repro.checkpoint.store import save_checkpoint
+            save_checkpoint(self.rcfg.checkpoint_dir, self.mgr)
+
+    def _train_loop(self):
+        try:
+            while not self._stop.is_set():
+                tb = self.mgr.pop_batch(timeout=0.05)
+                if tb is None:
+                    if self.mgr.all_done():
+                        return
+                    continue
+                self._train_one(tb)
+        except BaseException as e:
+            self.error = e
+            self._stop.set()
+
+    # -- drivers ----------------------------------------------------------------
+    def run(self, timeout_s: float = 600.0):
+        """Run to completion under the configured policy."""
+        for tid in self.mgr.pending_tasks():
+            st = self.mgr.tasks[tid]
+            wl_prompt = 32
+            if (self.rcfg.policy == "marlaas"
+                    and not self.admission.try_admit(st.spec, wl_prompt)
+                    and self.acfg.strict):
+                continue                      # stays pending until release
+            self.mgr.admit(tid)
+        if self.rcfg.policy == "marlaas":
+            self._run_async(timeout_s)
+        elif self.rcfg.policy == "multilora_sync":
+            self._run_sync(timeout_s)
+        elif self.rcfg.policy == "single_disagg":
+            self._run_sequential(timeout_s)
+        else:
+            raise ValueError(self.rcfg.policy)
+        if self.error:
+            raise self.error
+
+    def _run_async(self, timeout_s):
+        rt = threading.Thread(target=self._rollout_loop, daemon=True)
+        tt = threading.Thread(target=self._train_loop, daemon=True)
+        rt.start(); tt.start()
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            if self.mgr.all_done() or self._stop.is_set():
+                break
+            # admit pending tasks as slots free up
+            for tid in self.mgr.pending_tasks():
+                st = self.mgr.tasks[tid]
+                if self.admission.try_admit(st.spec, 32):
+                    self.mgr.admit(tid)
+            for tid, st in self.mgr.tasks.items():
+                if st.done and tid in self.admission.admitted():
+                    self.admission.release(tid)
+            time.sleep(0.01)
+        self._stop.set()
+        rt.join(timeout=10); tt.join(timeout=10)
+
+    def _run_sync(self, timeout_s):
+        """Barrier rounds: fused rollout for all, then train all, repeat."""
+        deadline = time.monotonic() + timeout_s
+        while not self.mgr.all_done() and time.monotonic() < deadline:
+            if not self._rollout_round():
+                break
+            while True:
+                tb = self.mgr.pop_batch()
+                if tb is None:
+                    break
+                self._train_one(tb)
+        if self.error:
+            raise self.error
+
+    def _run_sequential(self, timeout_s):
+        deadline = time.monotonic() + timeout_s
+        for tid in list(self.mgr.tasks):
+            st = self.mgr.tasks[tid]
+            while not st.done and time.monotonic() < deadline:
+                np_ = self.mgr.next_policy(tid)
+                if np_ is None:
+                    break
+                v, _ = np_
+                order = {tid: 0}
+                reqs = self._build_requests([tid], order)
+                t0 = time.monotonic()
+                results, _ = self.engine.generate(reqs, [st.adapters],
+                                                  tool_executor=self._tool_pool)
+                self.rec.record("rollout", "decode", tid, t0, time.monotonic(),
+                                self.rcfg.rollout_pool_devices)
+                tb = to_trajectory_batch(results, tid, v, st.spec.group_size,
+                                         pad_to=self.rcfg.max_len)
+                self.mgr.enqueue(tb)
+                self._train_one(self.mgr.pop_batch())
+        if self.error:
+            raise self.error

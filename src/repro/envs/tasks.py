@@ -1,0 +1,142 @@
+"""The paper's three workload archetypes, self-contained and synthetic:
+
+  ArithmeticEnv ("gsm8k")  — short math, no tools, short rollouts
+  LongMathEnv   ("amc12")  — longer chains, higher rollout latency
+  SearchEnv     ("search") — agentic: CALL → synthetic-KB lookup with
+                             external latency → force-fed RESP tokens
+These are deliberately heterogeneous in rollout length and env latency, the
+property Table 1 / Fig 3 of the paper exploits.
+"""
+from __future__ import annotations
+
+import random
+from typing import List, Sequence, Tuple
+
+from repro.data import tokenizer as tok
+from .base import Env, _answer_reward
+
+
+class ArithmeticEnv(Env):
+    name = "gsm8k"
+    is_agentic = False
+    max_new_tokens = 8
+
+    def __init__(self, max_operand: int = 20):
+        self.max_operand = max_operand
+
+    def sample_prompt(self, rng: random.Random) -> Tuple[List[int], str]:
+        a = rng.randint(0, self.max_operand)
+        b = rng.randint(0, self.max_operand)
+        prompt = f"{a}+{b}="
+        answer = str(a + b)
+        return [tok.BOS] + tok.encode(prompt), answer
+
+    def verify(self, truth: str, completion_ids: Sequence[int]) -> float:
+        return _answer_reward(truth, completion_ids)
+
+
+class LongMathEnv(Env):
+    name = "amc12"
+    is_agentic = False
+    max_new_tokens = 24
+
+    def __init__(self, n_terms: int = 4, max_operand: int = 12):
+        self.n_terms = n_terms
+        self.max_operand = max_operand
+
+    def sample_prompt(self, rng: random.Random) -> Tuple[List[int], str]:
+        terms = [rng.randint(1, self.max_operand) for _ in range(self.n_terms)]
+        ops = [rng.choice("+-") for _ in range(self.n_terms - 1)]
+        expr = str(terms[0])
+        val = terms[0]
+        for op, t in zip(ops, terms[1:]):
+            expr += op + str(t)
+            val = val + t if op == "+" else val - t
+        return [tok.BOS] + tok.encode(expr + "="), str(val)
+
+    def verify(self, truth: str, completion_ids: Sequence[int]) -> float:
+        return _answer_reward(truth, completion_ids)
+
+
+class SearchEnv(Env):
+    """Agentic lookup against a synthetic KB (HotpotQA/wiki-search analogue).
+
+    Prompt: "<entity>?" — the correct move is to emit <call> (the query is
+    implicit: the engine passes the prompt row to tool_call), receive the
+    force-fed "<resp>fact<endresp>" tokens, then answer with the fact.
+    Rewards: graded match on the final answer.
+    """
+    name = "search"
+    is_agentic = True
+    max_new_tokens = 24
+    env_latency_mean = 0.15      # external API latency (paper: wiki + judge)
+    env_latency_std = 0.05
+
+    def __init__(self, kb_size: int = 64, seed: int = 0):
+        rng = random.Random(seed)
+        entities = []
+        while len(entities) < kb_size:
+            e = "".join(rng.choice("abcdefghijklmnopqrstuvwxyz") for _ in range(3))
+            if e not in entities:
+                entities.append(e)
+        self.kb = {e: str(rng.randint(10, 99)) for e in entities}
+        self.entities = entities
+
+    def sample_prompt(self, rng: random.Random) -> Tuple[List[int], str]:
+        e = rng.choice(self.entities)
+        return [tok.BOS] + tok.encode(e + "?"), (e, self.kb[e])
+
+    def tool_call(self, query_ids: Sequence[int], truth=None) -> List[int]:
+        text = tok.decode(query_ids)
+        for e in self.entities:
+            if e in text:
+                return tok.encode(self.kb[e])
+        return tok.encode("00")
+
+    def verify(self, truth, completion_ids: Sequence[int]) -> float:
+        _, fact = truth
+        # strip the force-fed tool response; grade only post-ENDRESP answer
+        ids = list(int(i) for i in completion_ids)
+        if tok.ENDRESP in ids:
+            ids = ids[ids.index(tok.ENDRESP) + 1:]
+        return _answer_reward(fact, ids)
+
+
+class CopyEnv(Env):
+    """Echo task with dense per-char reward — the fastest-learning RLVR
+    sanity signal (used by the learning demo / Fig-1-shape test: reward must
+    visibly improve under GRPO within tens of versions at toy scale)."""
+    name = "copy"
+    is_agentic = False
+    max_new_tokens = 6
+
+    def __init__(self, length: int = 3, alphabet: str = "012"):
+        self.length = length
+        self.alphabet = alphabet
+
+    def sample_prompt(self, rng: random.Random):
+        s = "".join(rng.choice(self.alphabet) for _ in range(self.length))
+        return [tok.BOS] + tok.encode(s + "="), s
+
+    def verify(self, truth: str, completion_ids) -> float:
+        ids = []
+        for i in completion_ids:
+            if int(i) == tok.EOS:
+                break
+            ids.append(int(i))
+        got = tok.decode(ids)
+        hits = sum(1 for a, b in zip(got, truth) if a == b)
+        exact = 0.2 if got == truth else 0.0
+        return 0.8 * hits / len(truth) + exact
+
+
+REGISTRY = {
+    "gsm8k": ArithmeticEnv,
+    "amc12": LongMathEnv,
+    "search": SearchEnv,
+    "copy": CopyEnv,
+}
+
+
+def make_env(name: str, **kw) -> Env:
+    return REGISTRY[name](**kw)

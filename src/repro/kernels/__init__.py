@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md §3):
+#   sgmv          — multi-LoRA grouped matmul (rollout, paper §4.5)
+#   gqa_decode    — flash-decode attention over long KV caches (rollout)
+#   token_logprob — fused LSE+gather+entropy over big vocabs (GRPO training)
+# Each has ops.py wrappers and ref.py pure-jnp oracles; validated in
+# interpret mode on CPU, targeted at TPU v5e tile sizes.
+from . import ops, ref

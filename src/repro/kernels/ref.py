@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
+these across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgmv_ref(rows, a, b, ids):
+    """y[i] = rows[i] @ a[ids[i]] @ b[ids[i]]  (fp32)."""
+    T = a.shape[0]
+    xf = rows.astype(jnp.float32)
+    out = jnp.zeros((rows.shape[0], b.shape[2]), jnp.float32)
+    for t in range(T):
+        h = (xf @ a[t].astype(jnp.float32)) @ b[t].astype(jnp.float32)
+        out = out + h * (ids == t)[:, None]
+    return out
+
+
+def gqa_decode_ref(q, cache_k, cache_v, pos, *, softcap=0.0, window=0):
+    B, H, hd = q.shape
+    Smax, KVH = cache_k.shape[1], cache_k.shape[2]
+    rep = H // KVH
+    k = jnp.repeat(cache_k, rep, axis=2)
+    v = jnp.repeat(cache_v, rep, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    idx = jnp.arange(Smax)
+    valid = idx[None, :] < pos[:, None]
+    if window:
+        valid &= (pos[:, None] - 1 - idx[None, :]) < window
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def token_logprob_ref(hidden, vocab_w, targets, softcap: float = 0.0):
+    """hidden: [B, S, d] (or [R, d]); returns fp32 (logprob, entropy)."""
+    squeeze = hidden.ndim == 2
+    if squeeze:
+        hidden, targets = hidden[None], targets[None]
+    logits = (hidden.astype(jnp.float32) @ vocab_w.astype(jnp.float32))
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], -1)[..., 0]
+    p = jax.nn.softmax(logits, -1)
+    ent = lse - jnp.sum(p * logits, -1)
+    lp = tgt - lse
+    return (lp[0], ent[0]) if squeeze else (lp, ent)

@@ -1,0 +1,164 @@
+"""SGMV — sorted grouped multi-LoRA matmul, the rollout hot-spot of
+multi-tenant serving (paper §4.5; Punica's CUDA contribution, re-designed
+for TPU — DESIGN.md §3).
+
+TPU adaptation: CUDA SGMV gathers adapter weights per warp; TPU has no
+warp shuffles, so we *sort rows by task id and pad each task's rows to a
+block multiple* outside the kernel. Every (BM×*) tile then belongs to
+exactly one adapter, selected via a scalar-prefetched group id in the
+BlockSpec index_map — the MXU sees only dense, 128-aligned tiles.
+
+Two passes (Punica's shrink/expand split, which also minimizes VMEM):
+  pass A (shrink):  h[i]  = x[i] @ A[g(i)]        grid (row_blocks, K)
+  pass B (expand):  y[i]  = h[i] @ B[g(i)]        grid (row_blocks, N)
+h is [rows, r] (r ≤ 64) — negligible HBM traffic between passes.
+
+VMEM per step (pass A): bm·bk·4 + bk·r·4 + bm·r·4  ≈ 0.4 MB at
+(bm, bk, r) = (128, 512, 64); pass B: bm·r·4 + r·bn·4 + bm·bn·4 ≈ 0.4 MB at
+bn = 512 — comfortably within the ~16 MB v5e VMEM with double-buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 128
+DEFAULT_BK = 512
+DEFAULT_BN = 512
+
+
+def _shrink_kernel(group_of_block, x_ref, a_ref, h_ref, acc_ref, *, n_k):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # [BM, BK]
+    a = a_ref[0].astype(jnp.float32)              # [BK, r]
+    acc_ref[...] += jax.lax.dot_general(
+        x, a, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        h_ref[...] = acc_ref[...].astype(h_ref.dtype)
+
+
+def _expand_kernel(group_of_block, h_ref, b_ref, y_ref):
+    h = h_ref[...].astype(jnp.float32)            # [BM, r]
+    b = b_ref[0].astype(jnp.float32)              # [r, BN]
+    y_ref[...] = jax.lax.dot_general(
+        h, b, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+
+def _pad_to(x, m):
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def sgmv_sorted(x_sorted, a, b, group_of_block, *, bm=DEFAULT_BM,
+                bk=DEFAULT_BK, bn=DEFAULT_BN, interpret=None):
+    """Core kernel on pre-sorted, block-aligned rows.
+
+    x_sorted: [Rp, d] — rows grouped by task, each group padded to bm.
+    a: [T, d, r]; b: [T, r, dout]; group_of_block: [Rp//bm] int32.
+    Returns y: [Rp, dout] (float32).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    Rp, d = x_sorted.shape
+    T, _, r = a.shape
+    dout = b.shape[2]
+    bk = min(bk, d)
+    bn = min(bn, dout)
+    assert Rp % bm == 0 and d % bk == 0 and dout % bn == 0, (Rp, bm, d, bk, dout, bn)
+    n_rows = Rp // bm
+    n_k = d // bk
+    n_n = dout // bn
+
+    grid_a = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_rows, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k, g: (i, k)),
+            pl.BlockSpec((1, bk, r), lambda i, k, g: (g[i], k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, r), lambda i, k, g: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((bm, r), jnp.float32)],
+    )
+    h = pl.pallas_call(
+        functools.partial(_shrink_kernel, n_k=n_k),
+        grid_spec=grid_a,
+        out_shape=jax.ShapeDtypeStruct((Rp, r), jnp.float32),
+        interpret=interpret,
+    )(group_of_block, x_sorted, a)
+
+    grid_b = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_rows, n_n),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i, n, g: (i, 0)),
+            pl.BlockSpec((1, r, bn), lambda i, n, g: (g[i], 0, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, n, g: (i, n)),
+    )
+    y = pl.pallas_call(
+        _expand_kernel,
+        grid_spec=grid_b,
+        out_shape=jax.ShapeDtypeStruct((Rp, dout), jnp.float32),
+        interpret=interpret,
+    )(group_of_block, h, b)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def sgmv(rows, a, b, ids, *, bm=DEFAULT_BM, bk=DEFAULT_BK, bn=DEFAULT_BN,
+         interpret=None):
+    """Unsorted entry point: y[i] = rows[i] @ a[ids[i]] @ b[ids[i]].
+
+    Sorts rows by task, pads each task's span to a multiple of bm (so every
+    tile is single-adapter), runs the two-pass kernel, scatters back.
+    Padding waste is ≤ T·bm rows of compute; gather/scatter are memory ops.
+    """
+    R, d = rows.shape
+    T = a.shape[0]
+    dout = b.shape[2]
+    # pad contraction/output dims so the block shapes divide them exactly
+    d_pad = _pad_to(d, bk) if d > bk else _pad_to(d, 8)
+    n_pad = _pad_to(dout, bn) if dout > bn else _pad_to(dout, 8)
+    if d_pad != d:
+        rows = jnp.pad(rows, ((0, 0), (0, d_pad - d)))
+        a = jnp.pad(a, ((0, 0), (0, d_pad - d), (0, 0)))
+    if n_pad != dout:
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, n_pad - dout)))
+    bm_eff = min(bm, _pad_to(max(R // max(T, 1), 8), 8))
+    counts = jnp.bincount(ids, length=T)
+    padded = _pad_to_multiple(counts, bm_eff)                # [T]
+    bases = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                             jnp.cumsum(padded)[:-1].astype(jnp.int32)])
+    Rp = int(_pad_to(R, bm_eff) + T * bm_eff)                # static bound
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    rank = jnp.arange(R) - jnp.searchsorted(sorted_ids, sorted_ids, "left")
+    slots = bases[sorted_ids] + rank                          # [R] in [0, Rp)
+    x_sorted = jnp.zeros((Rp, d_pad), rows.dtype).at[slots].set(rows[order])
+    # group id per block: the task whose padded span covers the block start
+    block_start = jnp.arange(Rp // bm_eff) * bm_eff
+    ends = jnp.cumsum(padded)
+    gob = jnp.searchsorted(ends, block_start, side="right").astype(jnp.int32)
+    gob = jnp.minimum(gob, T - 1)
+    y_sorted = sgmv_sorted(x_sorted, a, b, gob, bm=bm_eff, bk=bk, bn=bn,
+                           interpret=interpret)
+    y = y_sorted[slots]                                       # back to sorted
+    inv = jnp.zeros((R,), jnp.int32).at[order].set(
+        jnp.arange(R, dtype=jnp.int32))
+    return y[inv][:, :dout]
+
+
+def _pad_to_multiple(counts, m):
+    return ((counts + m - 1) // m * m).astype(jnp.int32)

@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count at first init.
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input-shape × mesh) cell, prove the sharding config is
+coherent, and extract roofline terms (deliverable g).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+      --shape train_4k --mesh single            # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]  # sweep
+
+Results append to benchmarks/results/dryrun.jsonl (one JSON per cell);
+existing (arch, shape, mesh, tag) cells are skipped → resumable.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY, get_config, shapes_for
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (model_flops_for, parse_collectives,
+                                   roofline)
+from repro.launch import specs as sp
+from repro.train.sharding import mesh_context
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results", "dryrun.jsonl")
+
+
+def _done_cells(path: str):
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("ok"):
+                        done.add((r["arch"], r["shape"], r["mesh"],
+                                  r.get("tag", "base")))
+                except json.JSONDecodeError:
+                    pass
+    return done
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             tag: str = "base", extra_env: Optional[dict] = None) -> dict:
+    cfg = get_config(arch)
+    shape = {s.name: s for s in shapes_for(cfg)}[shape_name]
+    mesh_kind = "serve" if (tag and "servemesh" in tag) else "train"
+    mesh = make_production_mesh(multi_pod=multi_pod, kind=mesh_kind)
+    chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multipod" if multi_pod else "single", "chips": chips,
+           "tag": tag, "ok": False}
+    t0 = time.time()
+    with mesh_context(mesh):
+        shapes = sp.eval_shapes(cfg)
+        pspec = sh.param_specs(cfg, shapes["params"], mesh)
+        params_in = sh.with_shardings(shapes["params"], pspec, mesh)
+
+        if shape.kind == "train":
+            lspec = sh.lora_specs(cfg, shapes["lora"], mesh)
+            ospec = sh.opt_specs(lspec)
+            batch = sp.train_batch_specs(cfg, shape)
+            wide = cfg.family in ("ssm", "hybrid")   # tp-replicated weights
+            bspec = sh.batch_specs(batch, mesh, shape.global_batch, wide=wide)
+            fn = sp.build_train_step(cfg, shape)
+            args = (params_in,
+                    sh.with_shardings(shapes["lora"], lspec, mesh),
+                    sh.with_shardings(shapes["opt"], ospec, mesh),
+                    sh.with_shardings(batch, bspec, mesh))
+            lowered = jax.jit(fn, donate_argnums=(1, 2)).lower(*args)
+        else:
+            lsspec = sh.lora_specs(cfg, shapes["lora_stacked"], mesh,
+                                   batched=True)
+            serve = sp.serve_specs(cfg, shape)
+            cspec = sh.cache_specs(cfg, serve["cache"], mesh,
+                                   shape.global_batch)
+            bsp = sh.batch_specs(
+                {k: v for k, v in serve.items() if k != "cache"},
+                mesh, shape.global_batch)
+            adapters_in = sh.with_shardings(shapes["lora_stacked"], lsspec,
+                                            mesh)
+            cache_in = sh.with_shardings(serve["cache"], cspec, mesh)
+            rest = sh.with_shardings(
+                {k: v for k, v in serve.items() if k != "cache"}, bsp, mesh)
+            if shape.kind == "prefill":
+                fn = sp.build_prefill_step(cfg)
+                args = [params_in, adapters_in, rest["row_ids"],
+                        rest["tokens"], rest["prompt_lens"], cache_in]
+                if cfg.family == "encdec":
+                    args.append(rest["enc_embeds"])
+                lowered = jax.jit(fn, donate_argnums=(5,)).lower(*args)
+            else:
+                fn = sp.build_decode_step(cfg)
+                lowered = jax.jit(fn, donate_argnums=(4,)).lower(
+                    params_in, adapters_in, rest["row_ids"],
+                    rest["cur_tokens"], cache_in)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in ("generated_code_size_in_bytes",
+                      "argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+            args_b = rec.get("argument_size_in_bytes", 0)
+            temp_b = rec.get("temp_size_in_bytes", 0)
+            rec["bytes_per_device"] = args_b + temp_b
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo, default_group=chips)
+        rt = roofline(cost, coll, chips, model_flops_for(cfg, shape))
+        rec.update({f"hlo_{k}": v for k, v in rt.as_dict().items()})
+        rec["collectives"] = {k: [coll.count[k], round(v, 1)]
+                              for k, v in coll.per_op.items()}
+
+        # primary roofline: analytic terms (cost_analysis counts while
+        # bodies once — see launch/analytic.py; hlo_* kept as cross-check)
+        from repro.launch.analytic import analytic_terms
+        from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+        dp = chips // mesh.shape["model"]
+        tp = mesh.shape["model"]
+        at = analytic_terms(cfg, shape, chips, dp, tp,
+                            accum=(sp.accum_steps(cfg, shape)
+                                   if shape.kind == "train" else 1),
+                            vocab_parallel_loss=(tag.startswith("vp")))
+        rec.update(at.as_dict())
+        rec["compute_s"] = at.flops / (chips * PEAK_FLOPS)
+        rec["memory_s"] = at.hbm_bytes / (chips * HBM_BW)
+        rec["collective_s"] = at.collective_bytes / (chips * LINK_BW)
+        terms = {"compute": rec["compute_s"], "memory": rec["memory_s"],
+                 "collective": rec["collective_s"]}
+        rec["dominant"] = max(terms, key=terms.get)
+        rec["model_flops"] = model_flops_for(cfg, shape)
+        rec["useful_ratio"] = rec["model_flops"] / at.flops if at.flops else 0
+        rec["roofline_frac"] = (rec["compute_s"] /
+                                max(max(terms.values()), 1e-30))
+        rec["ok"] = True
+        rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="base")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--include-paper-models", action="store_true")
+    args = ap.parse_args()
+
+    out_path = args.out or os.path.normpath(RESULTS)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    done = _done_cells(out_path)
+
+    cells = []
+    meshes = (["single", "multipod"] if args.mesh == "both" else [args.mesh])
+    if args.all:
+        from repro.configs import ASSIGNED, PAPER_MODELS
+        pool = ASSIGNED + (PAPER_MODELS if args.include_paper_models else ())
+        for cfg in pool:
+            for s in shapes_for(cfg):
+                for m in meshes:
+                    cells.append((cfg.name, s.name, m))
+    else:
+        for m in meshes:
+            cells.append((args.arch, args.shape, m))
+
+    for arch, shape, m in cells:
+        key = (arch, shape, m, args.tag)
+        if key in done:
+            print(f"SKIP {key} (done)")
+            continue
+        print(f"RUN  {arch} × {shape} × {m} [{args.tag}] ...", flush=True)
+        try:
+            rec = run_cell(arch, shape, m == "multipod", tag=args.tag)
+            print(f"  ok: compile={rec['compile_s']}s "
+                  f"compute={rec['compute_s']:.3e}s mem={rec['memory_s']:.3e}s "
+                  f"coll={rec['collective_s']:.3e}s dom={rec['dominant']} "
+                  f"roofline_frac={rec['roofline_frac']:.2f} "
+                  f"bytes/dev={rec.get('bytes_per_device', 0)/1e9:.2f}GB",
+                  flush=True)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": m, "tag": args.tag,
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            print(f"  FAIL: {rec['error']}", flush=True)
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,242 @@
+"""Parameter/cache/batch PartitionSpecs for the production meshes.
+
+Rules (DESIGN.md §6), expressed over logical axes dp=('pod','data') and
+tp='model' via repro.train.sharding.resolve:
+
+  base weights   — FSDP over dp on the embed/input dim, TP over tp on the
+                   heads/ff/expert dim (MaxText-style 2D sharding);
+  MoE experts    — expert axis over tp (EP), d over dp;
+  Mamba blocks   — FSDP only (these archs are ≤1.2B; TP of the fused
+                   in_proj would split z/x/B/C/dt across shards for no win);
+  LoRA adapters  — A FSDP on d_in, B TP on d_out (matches the base matmul
+                   output sharding so the delta needs no extra resharding);
+  KV cache       — batch over dp; kv_heads over tp when divisible, else the
+                   *sequence* dim over tp (flash-decode style);
+  batch arrays   — leading (row) dim over dp unless batch==1 (long-decode).
+
+Specs are matched by tree path suffix; anything unmatched is replicated.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig
+from repro.train.sharding import resolve
+
+
+def _dp(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _divisible(n: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    axes = (axes,) if isinstance(axes, str) else axes
+    k = int(np.prod([mesh.shape[a] for a in axes]))
+    return n % k == 0
+
+
+def _maybe(mesh: Mesh, dim_size: int, axes):
+    """Use `axes` for this dim only if it divides evenly (GSPMD padding of
+    uneven shards wastes memory — avoid silently)."""
+    return axes if _divisible(dim_size, mesh, axes) else None
+
+
+def param_specs(cfg: ModelConfig, params_shapes, mesh: Mesh):
+    """PartitionSpec tree matching the params pytree (by path)."""
+    dp = _dp(mesh)
+    tp = "model"
+
+    def spec_for(path: str, shape) -> P:
+        nd = len(shape.shape)
+        dims = shape.shape
+
+        def mk(*axes):
+            axes = axes + (None,) * (nd - len(axes))
+            fixed = [_maybe(mesh, dims[i], a) for i, a in enumerate(axes)]
+            return P(*fixed)
+
+        def lead():
+            """Stacked per-layer weights carry a leading L axis (nd is one
+            higher); that axis is never sharded."""
+            return (None,) if nd in (3, 4) else ()
+
+        if path.endswith("embed"):
+            # d-sharded: the token lookup gathers over the unsharded vocab
+            # dim (GSPMD-trivial). The tied-loss contraction then all-reduces
+            # per vocab chunk — revisited in §Perf for the tied archs.
+            return mk(None, tp)
+        if path.endswith("lm_head"):
+            return mk(None, tp)
+        if ("attn/" in path) or ("xattn/" in path):
+            if path.endswith(("wq", "wk", "wv")):
+                return mk(*lead(), dp, tp)
+            if path.endswith("wo"):
+                return mk(*lead(), tp, dp)
+            if path.endswith(("bq", "bk", "bv")):
+                return mk(*(None,) * (nd - 1), tp)
+            return P()                                   # q/k norms
+        if "moe/" in path and "shared/" not in path:
+            if path.endswith("router"):
+                return mk(None, dp, None)
+            if path.endswith("w_in"):                    # [L, E, d, ff]
+                return mk(None, tp, dp, None)
+            if path.endswith("w_out"):                   # [L, E, ff, d]
+                return mk(None, tp, None, dp)
+        if path.endswith("w_in"):                        # dense/shared MLP
+            return mk(*lead(), dp, tp)
+        if path.endswith("w_out"):
+            return mk(*lead(), tp, dp)
+        if "mamba/" in path:
+            if path.endswith(("in_proj", "out_proj", "conv_w")):
+                return mk(*lead(), dp, None)
+            return P()                                    # small vectors
+        return P()                                        # norms etc.
+
+    flat = _flatten_with_paths(params_shapes)
+    spec_flat = {k: spec_for(k, v) for k, v in flat.items()}
+    return _unflatten_like(params_shapes, spec_flat)
+
+
+def lora_specs(cfg: ModelConfig, lora_shapes, mesh: Mesh, *,
+               batched: bool = False):
+    """A: FSDP on d_in; B: TP on d_out. Batched trees carry the task dim on
+    axis 1 (never sharded — adapters are tiny)."""
+    dp = _dp(mesh)
+    tp = "model"
+    off = 2 if batched else 1          # leading L (+T) axes unsharded
+
+    def spec_for(path: str, shape) -> P:
+        dims = shape.shape
+        lead = (None,) * off
+        if path.endswith("/a"):
+            ax = _maybe(mesh, dims[off], dp)
+            return P(*lead, ax, None)
+        if path.endswith("/b"):
+            ax = _maybe(mesh, dims[off + 1], tp)
+            # ssm_in/ssm_out outputs stay replicated (mamba is FSDP-only)
+            if "ssm" in path:
+                ax = None
+            return P(*lead, None, ax)
+        return P()
+
+    flat = _flatten_with_paths(lora_shapes)
+    return _unflatten_like(lora_shapes, {k: spec_for(k, v)
+                                         for k, v in flat.items()})
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes, mesh: Mesh, batch: int):
+    dp = _dp(mesh) if batch > 1 else None
+    tp = "model"
+
+    def spec_for(path: str, shape) -> P:
+        dims = shape.shape
+        base = path.rsplit("/", 1)[-1]
+        if base in ("k", "v", "xk", "xv"):
+            # [L, B, S, KVH, hd]
+            b_ax = _maybe(mesh, dims[1], dp) if dp else None
+            kv_ax = _maybe(mesh, dims[3], tp)
+            if kv_ax is not None:
+                return P(None, b_ax, None, kv_ax, None)
+            s_ax = _maybe(mesh, dims[2], tp)       # seq-sharded fallback
+            return P(None, b_ax, s_ax, None, None)
+        if base == "ssm":                           # [L, B, H, N, P]
+            b_ax = _maybe(mesh, dims[1], dp) if dp else None
+            h_ax = _maybe(mesh, dims[2], tp)
+            return P(None, b_ax, h_ax, None, None)
+        if base == "conv":                          # [L, B, conv_dim, W-1]
+            b_ax = _maybe(mesh, dims[1], dp) if dp else None
+            c_ax = _maybe(mesh, dims[2], tp)
+            return P(None, b_ax, c_ax, None)
+        if base == "pos":
+            b_ax = _maybe(mesh, dims[0], dp) if dp else None
+            return P(b_ax)
+        return P()
+
+    flat = _flatten_with_paths(cache_shapes)
+    return _unflatten_like(cache_shapes, {k: spec_for(k, v)
+                                          for k, v in flat.items()})
+
+
+def batch_specs(batch_shapes, mesh: Mesh, batch: int, *,
+                wide: bool = False):
+    """wide=True shards the row dim over ALL mesh axes — used by SSM/hybrid
+    archs whose block weights are FSDP-only (tp-replicated): without it,
+    every tp slice redundantly computes the same tokens (§Perf C2)."""
+    if wide:
+        dp = tuple(mesh.axis_names) if batch > 1 else None
+    else:
+        dp = _dp(mesh) if batch > 1 else None
+
+    def spec_for(path: str, shape) -> P:
+        dims = shape.shape
+        if not dims:
+            return P()
+        ax = _maybe(mesh, dims[0], dp) if dp else None
+        return P(ax, *([None] * (len(dims) - 1)))
+
+    flat = _flatten_with_paths(batch_shapes)
+    return _unflatten_like(batch_shapes, {k: spec_for(k, v)
+                                          for k, v in flat.items()})
+
+
+def opt_specs(param_spec_tree):
+    """Optimizer m/v mirror the param specs; step is replicated."""
+    return {"m": param_spec_tree, "v": param_spec_tree, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+
+def _flatten_with_paths(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_with_paths(v, f"{prefix}{k}/"))
+    elif hasattr(tree, "_fields"):                    # NamedTuple
+        for k in tree._fields:
+            v = getattr(tree, k)
+            if v is not None:
+                out.update(_flatten_with_paths(v, f"{prefix}{k}/"))
+    elif tree is None:
+        pass
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def _unflatten_like(tree, flat: Dict[str, Any], prefix=""):
+    if isinstance(tree, dict):
+        return {k: _unflatten_like(v, flat, f"{prefix}{k}/")
+                for k, v in tree.items()}
+    if hasattr(tree, "_fields"):
+        vals = {}
+        for k in tree._fields:
+            v = getattr(tree, k)
+            vals[k] = (None if v is None
+                       else _unflatten_like(v, flat, f"{prefix}{k}/"))
+        return type(tree)(**vals)
+    if tree is None:
+        return None
+    return flat[prefix.rstrip("/")]
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def with_shardings(shapes_tree, specs_tree, mesh: Mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (for .lower)."""
+    def attach(sds, spec):
+        if sds is None:
+            return None
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(attach, shapes_tree, specs_tree,
+                        is_leaf=lambda x: x is None or isinstance(
+                            x, jax.ShapeDtypeStruct))

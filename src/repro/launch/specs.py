@@ -1,0 +1,143 @@
+"""input_specs + step builders for every (arch × shape) dry-run cell.
+
+Everything here is ShapeDtypeStruct-only — no device allocation. Params,
+LoRA adapters, optimizer state and caches come from jax.eval_shape over the
+real init functions, so the dry-run lowers exactly the production code.
+
+Serving cells (prefill/decode) are multi-LoRA with NUM_TENANTS adapters and
+per-row task ids — the paper's §4.5 rollout configuration. The train cell is
+the paper-faithful LoRA GRPO PolicyUpdate (single task, frozen base).
+
+Modality frontends are stubs per the assignment: seamless (audio) cells take
+precomputed frame embeddings [B, S_enc, d]; chameleon (vlm) consumes VQ
+image tokens as ordinary ids.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.lora.adapters import batched_ctx, init_lora, single_ctx
+from repro.models import decode_step, forward_seq, init_cache, init_params, lm_logits
+from repro.models.common import dtype_of
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import TrainConfig, make_train_step
+
+NUM_TENANTS = 8          # multi-LoRA tenants in serving cells
+GROUP_SIZE = 8           # GRPO group size in the train cell
+
+# per-arch gradient-accumulation (microbatch) so remat-stored layer inputs
+# fit HBM at train_4k; key: rows per microbatch. Values < 32 under-fill the
+# multipod dp=32 axis (padded) — recorded in EXPERIMENTS.md §Dry-run.
+MICRO_ROWS = {
+    "nemotron-4-340b": 8, "qwen1.5-110b": 16, "dbrx-132b": 16,
+    "chameleon-34b": 16, "gemma2-27b": 16, "qwen3-32b": 16, "qwen3-14b": 32,
+    "deepseek-moe-16b": 32,
+}
+DEFAULT_MICRO_ROWS = 32
+
+
+def _key_spec():
+    return jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def eval_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Shape trees for params / single-task LoRA / stacked multi-LoRA / opt."""
+    params = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                            _key_spec())
+    lora = jax.eval_shape(functools.partial(init_lora, cfg=cfg), _key_spec())
+
+    def stacked_init(k):
+        trees = [init_lora(k, cfg) for _ in range(NUM_TENANTS)]
+        from repro.lora.adapters import stack_adapters
+        return stack_adapters(trees)
+
+    lora_stacked = jax.eval_shape(stacked_init, _key_spec())
+    opt = jax.eval_shape(adamw_init, lora)
+    return {"params": params, "lora": lora, "lora_stacked": lora_stacked,
+            "opt": opt}
+
+
+def accum_steps(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    import os
+    rows = int(os.environ.get("REPRO_MICRO_ROWS", 0)) or \
+        MICRO_ROWS.get(cfg.name, DEFAULT_MICRO_ROWS)
+    return max(1, shape.global_batch // rows)
+
+
+def maybe_remat_block(cfg: ModelConfig) -> ModelConfig:
+    """Apply the REPRO_REMAT_BLOCK experiment knob (§Perf B2)."""
+    import dataclasses, os
+    blk = int(os.environ.get("REPRO_REMAT_BLOCK", 0))
+    return dataclasses.replace(cfg, remat_block=blk) if blk else cfg
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    R, S = shape.global_batch, shape.seq_len
+    b = {
+        "tokens": jax.ShapeDtypeStruct((R, S), jnp.int32),
+        "prompt_lens": jax.ShapeDtypeStruct((R,), jnp.int32),
+        "total_lens": jax.ShapeDtypeStruct((R,), jnp.int32),
+        "rewards": jax.ShapeDtypeStruct((R,), jnp.float32),
+    }
+    if cfg.family == "encdec":
+        b["enc_embeds"] = jax.ShapeDtypeStruct((R, S // 4, cfg.d_model),
+                                               dtype_of(cfg.dtype))
+    return b
+
+
+def serve_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = S // 4 if cfg.family == "encdec" else 0
+    cache = jax.eval_shape(functools.partial(
+        init_cache, cfg, B, S, enc_len=enc_len))
+    out = {
+        "cache": cache,
+        "row_ids": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+    if shape.kind == "prefill":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        out["prompt_lens"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        if cfg.family == "encdec":
+            out["enc_embeds"] = jax.ShapeDtypeStruct((B, enc_len, cfg.d_model),
+                                                     dtype_of(cfg.dtype))
+    else:
+        out["cur_tokens"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step functions (lowered by the dry-run; same code the runtime jits)
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig):
+    cfg = maybe_remat_block(cfg)
+    tc = TrainConfig(group_size=GROUP_SIZE,
+                     accum_steps=accum_steps(cfg, shape),
+                     adamw=AdamWConfig())
+    return make_train_step(cfg, tc)
+
+
+def build_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, adapters, row_ids, tokens, prompt_lens, cache,
+                     enc_embeds=None):
+        lora = batched_ctx(adapters, row_ids, cfg)
+        h, cache, _ = forward_seq(params, tokens, cfg, lora, cache,
+                                  enc_embeds=enc_embeds)
+        cache = dict(cache, pos=prompt_lens)
+        last = jnp.take_along_axis(
+            h, (prompt_lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        return lm_logits(last, params, cfg), cache
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig):
+    def serve_step(params, adapters, row_ids, cur_tokens, cache):
+        lora = batched_ctx(adapters, row_ids, cfg)
+        logits, cache = decode_step(params, cur_tokens, cache, cfg, lora)
+        return logits, cache
+    return serve_step

@@ -1,0 +1,78 @@
+"""Multi-tenant training service CLI.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch granite-3-2b --reduced --tasks 4 --steps 5 \
+        --policy marlaas [--checkpoint-dir /tmp/ck] [--resume]
+
+--reduced runs the arch's family-faithful tiny config on this host; the
+full config is the production target (dry-run proven via launch.dryrun).
+"""
+import argparse
+import dataclasses
+import random
+
+import jax
+
+from repro.checkpoint.store import latest_checkpoint, load_checkpoint
+from repro.configs import get_config, reduced
+from repro.core.manager import TaskSpec
+from repro.core.metrics import summarize
+from repro.core.runtime import MARLaaSRuntime, RuntimeConfig
+from repro.data import tokenizer as tok
+from repro.envs.tasks import make_env
+from repro.models import init_params
+
+ENVS = ["gsm8k", "amc12", "search"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--tasks", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--policy", default="marlaas")
+    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=5)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--timeout", type=float, default=1800.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(reduced(cfg, dtype="float32"),
+                                  vocab_size=tok.VOCAB_SIZE)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    rt = MARLaaSRuntime(cfg, params, RuntimeConfig(
+        policy=args.policy, max_len=64, seed=args.seed,
+        use_kernel=args.use_kernel, checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=(args.checkpoint_every
+                          if args.checkpoint_dir else 0)))
+
+    if args.resume and args.checkpoint_dir:
+        snap = latest_checkpoint(args.checkpoint_dir)
+        if snap:
+            print(f"resuming from {snap}")
+            load_checkpoint(snap, rt.mgr)
+            for tid, st in rt.mgr.tasks.items():
+                rt.envs[tid] = make_env(st.spec.env_name)
+                rt.datagens[tid] = random.Random(args.seed + hash(tid) % 97)
+    if not rt.mgr.tasks:
+        for i in range(args.tasks):
+            env = ENVS[i % len(ENVS)]
+            rt.submit_task(TaskSpec(
+                f"{env}-{i}", env, group_size=4, num_groups=1,
+                max_new_tokens=6 if env != "search" else 12,
+                target_steps=args.steps))
+
+    rt.run(timeout_s=args.timeout)
+    print("tasks:", {t: f"v{s.version} r={s.reward_history[-1:]}"
+                     for t, s in rt.mgr.tasks.items()})
+    print("metrics:", {k: round(v, 3)
+                       for k, v in summarize(rt.mgr, rt.rec).items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Per-task LoRA adapters (paper §4.2: θ_t^(v)).
+
+Tree layout (uniform across families):
+  {"layers": {target: {"a": [L, d_in, r], "b": [L, r, d_out]}},
+   "shared": {target: {"a": [n_inv, d_in, r], ...}}}   # hybrid only
+
+`a` is gaussian-initialized, `b` zero-initialized → adapters start as the
+identity (policy v0 == base model), which is what makes the base model the
+natural KL reference policy for GRPO.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import LoRAConfig, ModelConfig
+from repro.models.common import LoraCtx, dtype_of
+
+# projection in/out dims per target name
+def target_dims(cfg: ModelConfig, target: str) -> Tuple[int, int]:
+    d = cfg.d_model
+    if target == "attn_q":
+        return d, cfg.q_dim
+    if target == "attn_k" or target == "attn_v":
+        return d, cfg.kv_dim
+    if target == "attn_o":
+        return cfg.q_dim, d
+    if target == "mlp_in":
+        ff = cfg.d_ff
+        if cfg.moe is not None and cfg.moe.num_shared:
+            ff = cfg.moe.num_shared * cfg.moe.expert_d_ff
+        cols = 2 * ff if cfg.mlp_act == "swiglu" else ff
+        return d, cols
+    if target == "mlp_out":
+        ff = cfg.d_ff
+        if cfg.moe is not None and cfg.moe.num_shared:
+            ff = cfg.moe.num_shared * cfg.moe.expert_d_ff
+        return ff, d
+    if target == "ssm_in":
+        s = cfg.ssm
+        d_in = s.d_inner(d)
+        return d, 2 * d_in + 2 * s.n_groups * s.state_dim + s.num_heads(d)
+    if target == "ssm_out":
+        return cfg.ssm.d_inner(d), d
+    raise ValueError(target)
+
+
+def applicable_targets(cfg: ModelConfig) -> Dict[str, Tuple[str, ...]]:
+    """Which configured targets apply, split by layers/shared subtree."""
+    t = cfg.lora.targets
+    if cfg.family == "ssm":
+        layers = tuple(x for x in t if x.startswith("ssm"))
+        return {"layers": layers or ("ssm_in", "ssm_out"), "shared": ()}
+    if cfg.family == "hybrid":
+        layers = tuple(x for x in t if x.startswith("ssm")) or ("ssm_in", "ssm_out")
+        shared = tuple(x for x in t if x.startswith(("attn", "mlp")))
+        return {"layers": layers, "shared": shared}
+    if cfg.moe is not None:
+        # adapters on attention (+ shared-expert MLP if present)
+        layers = tuple(x for x in t if x.startswith("attn")
+                       or (x.startswith("mlp") and cfg.moe.num_shared))
+        return {"layers": layers, "shared": ()}
+    layers = tuple(x for x in t if x.startswith(("attn", "mlp")))
+    return {"layers": layers, "shared": ()}
+
+
+def init_lora(key, cfg: ModelConfig) -> Dict[str, Any]:
+    lc = cfg.lora
+    dt = dtype_of(lc.dtype)
+    tmap = applicable_targets(cfg)
+    tree: Dict[str, Any] = {}
+
+    def make(key, n_stack: int, target: str):
+        d_in, d_out = target_dims(cfg, target)
+        a = (jax.random.normal(key, (n_stack, d_in, lc.rank), jnp.float32)
+             * (1.0 / np.sqrt(d_in))).astype(dt)
+        b = jnp.zeros((n_stack, lc.rank, d_out), dt)
+        return {"a": a, "b": b}
+
+    if tmap["layers"]:
+        tree["layers"] = {}
+        for i, tgt in enumerate(tmap["layers"]):
+            tree["layers"][tgt] = make(jax.random.fold_in(key, i),
+                                       cfg.num_layers, tgt)
+    if tmap["shared"]:
+        n_inv = cfg.num_layers // cfg.hybrid_attn_every
+        tree["shared"] = {}
+        for i, tgt in enumerate(tmap["shared"]):
+            tree["shared"][tgt] = make(jax.random.fold_in(key, 100 + i),
+                                       n_inv, tgt)
+    return tree
+
+
+def lora_param_count(cfg: ModelConfig) -> int:
+    tree = jax.eval_shape(lambda k: init_lora(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def single_ctx(tree, cfg: ModelConfig) -> LoraCtx:
+    return LoraCtx("single", tree, scaling=cfg.lora.scaling)
+
+
+def batched_ctx(stacked_tree, row_task_ids, cfg: ModelConfig,
+                use_kernel: bool = False) -> LoraCtx:
+    """stacked_tree: task-stacked adapters [T, L, ...] (jnp.stack of trees)."""
+    return LoraCtx("batched", stacked_tree, row_task_ids,
+                   scaling=cfg.lora.scaling, use_kernel=use_kernel)
+
+
+def stack_adapters(trees):
+    """[{...}, {...}] -> one tree with the task dim on axis 1: leaves become
+    [L, T, d, r] so per-layer slicing `leaf[i]` works identically for
+    single-task ([L, d, r] -> [d, r]) and batched ([L, T, d, r] -> [T, d, r])
+    modes (the model's scan body never needs to know)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *trees)

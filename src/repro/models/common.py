@@ -1,0 +1,133 @@
+"""Shared building blocks: init helpers, RMSNorm, RoPE, projections.
+
+Everything is functional: params are pytrees of jnp arrays; per-layer weights
+are stacked on a leading layer axis (lax.scan-ready).
+
+LoRA hook: every linear projection funnels through :func:`proj`, which takes
+an optional ``LoraCtx``. That one seam gives us (a) single-task adapter
+injection for training and (b) batched multi-LoRA application for cross-task
+rollout (paper §4.5) — see ``repro.lora``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+    # (1 + w): gemma-style zero-centered scale; init weight to 0.
+
+
+def rmsnorm_init(d: int, dtype):
+    return jnp.zeros((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))               # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    sin = jnp.sin(angles)[..., None, :]                      # [..., S, 1, hd/2]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the LoRA-aware projection seam
+# ---------------------------------------------------------------------------
+
+class LoraCtx:
+    """Carries adapter state through a forward pass.
+
+    mode = "off"     — no adapters (base model / reference policy)
+    mode = "single"  — one task's adapters (training, single-task rollout)
+    mode = "batched" — stacked [T, ...] adapters + per-row task ids
+                       (multi-LoRA cross-task rollout, paper §4.5)
+    """
+
+    def __init__(self, mode: str, tree=None, row_task_ids=None,
+                 scaling: float = 1.0, use_kernel: bool = False):
+        self.mode = mode
+        self.tree = tree            # {target: {"a": ..., "b": ...}} (stacked L)
+        self.row_task_ids = row_task_ids
+        self.scaling = scaling
+        self.use_kernel = use_kernel
+        self._layer = None          # set inside the layer loop/scan
+
+    def at_layer(self, layer_tree):
+        """Return a shallow ctx bound to one layer's adapter slices."""
+        c = LoraCtx(self.mode, layer_tree, self.row_task_ids, self.scaling,
+                    self.use_kernel)
+        return c
+
+    def delta(self, x, name: str):
+        """LoRA contribution for projection `name`, or None."""
+        if self.mode == "off" or self.tree is None or name not in self.tree:
+            return None
+        a = self.tree[name]["a"]
+        b = self.tree[name]["b"]
+        if self.mode == "single":
+            h = x.astype(a.dtype) @ a            # [..., r]
+            return (self.scaling * (h @ b)).astype(x.dtype)
+        # batched multi-LoRA: a [T, d, r], b [T, r, dout]; rows carry task ids
+        from repro.lora.multilora import multi_lora_delta
+        return multi_lora_delta(x, a, b, self.row_task_ids, self.scaling,
+                                use_kernel=self.use_kernel)
+
+
+OFF = LoraCtx("off")
+
+
+def proj(x, w, b=None, *, lora: Optional[LoraCtx] = None, name: str = ""):
+    """y = x @ w (+ b) (+ lora delta). x: [..., d_in], w: [d_in, d_out]."""
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    if lora is not None:
+        d = lora.delta(x, name)
+        if d is not None:
+            y = y + d.astype(y.dtype)
+    return y
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x

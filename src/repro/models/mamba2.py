@@ -1,0 +1,228 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train/prefill scan +
+O(1) single-token decode. arXiv:2405.21060.
+
+Layout: x/dt/B/C are produced by one fused in_proj; a depthwise causal conv
+runs over (x, B, C) channels; the SSD core mixes intra-chunk (quadratic,
+attention-like) and inter-chunk (recurrent) terms; output is gated-RMSNormed
+and projected back.
+
+State carried between calls (decode / chunk boundaries):
+  ssm_state  [B, H, N, P]   (per-head state × headdim)
+  conv_state [B, conv_dim, W-1]
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, SSMConfig
+from .common import LoraCtx, dense_init, proj, rmsnorm
+
+
+class MambaParams(NamedTuple):
+    in_proj: jax.Array      # [d, 2*d_in + 2*G*N + H]
+    conv_w: jax.Array       # [conv_dim, W] depthwise
+    conv_b: jax.Array       # [conv_dim]
+    dt_bias: jax.Array      # [H]
+    a_log: jax.Array        # [H]
+    d_skip: jax.Array       # [H]
+    norm_w: jax.Array       # [d_in] gated RMSNorm
+    out_proj: jax.Array     # [d_in, d]
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    H = s.num_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.n_groups * s.state_dim
+    return d_in, H, s.state_dim, s.n_groups, conv_dim
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> MambaParams:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, N, G, conv_dim = dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_cols = 2 * d_in + 2 * G * N + H
+    # dt bias st. softplus(bias) spans [dt_min, dt_max]
+    u = jax.random.uniform(k3, (H,), jnp.float32)
+    dt = jnp.exp(u * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))                  # inv softplus
+    return MambaParams(
+        in_proj=dense_init(k1, d, proj_cols, dtype),
+        conv_w=(jax.random.normal(k2, (conv_dim, s.conv_width), jnp.float32)
+                * (1.0 / jnp.sqrt(s.conv_width))).astype(dtype),
+        conv_b=jnp.zeros((conv_dim,), dtype),
+        dt_bias=dt_bias.astype(jnp.float32),
+        a_log=jnp.log(jax.random.uniform(k4, (H,), jnp.float32, 1.0, 16.0)),
+        d_skip=jnp.ones((H,), jnp.float32),
+        norm_w=jnp.zeros((d_in,), dtype),
+        out_proj=dense_init(jax.random.fold_in(k1, 7), d_in, d, dtype),
+    )
+
+
+def _ssd_bf16() -> bool:
+    import os
+    return os.environ.get("REPRO_SSD_BF16", "0") == "1"
+
+
+def _segsum(dA):
+    """log-decay matrix: out[..., i, j] = sum_{j<k<=i} dA[..., k], -inf for j>i.
+    dA: [..., Q] -> [..., Q, Q]."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]               # i,j -> cs_i - cs_j
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _causal_conv_train(xbc, w, b, W: int, conv_state=None):
+    """Depthwise causal conv. xbc: [B, S, ch]; w: [ch, W].
+    conv_state: [B, ch, W-1] history (prefill continuation) or None."""
+    B, S, ch = xbc.shape
+    x = xbc.transpose(0, 2, 1)                               # [B, ch, S]
+    if conv_state is None:
+        pad = jnp.zeros((B, ch, W - 1), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=-1)                  # [B, ch, S+W-1]
+    # sliding window dot with depthwise filter
+    out = jnp.zeros((B, ch, S), jnp.float32)
+    for i in range(W):                                       # W is 4: unroll
+        out = out + xp[:, :, i:i + S].astype(jnp.float32) * w[:, i][None, :, None].astype(jnp.float32)
+    out = out + b[None, :, None].astype(jnp.float32)
+    new_state = xp[:, :, S:][..., -(W - 1):] if S >= 1 else pad
+    new_state = xp[:, :, -(W - 1):]
+    return jax.nn.silu(out).astype(xbc.dtype).transpose(0, 2, 1), new_state
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int, init_state=None):
+    """SSD core. x: [B,S,H,P]; dt: [B,S,H] (post-softplus); A: [H] (negative);
+    B_/C_: [B,S,G,N]. Returns (y [B,S,H,P], final_state [B,H,N,P])."""
+    Bsz, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    def tohead(t):  # [B,S,G,N] -> [B,nc,Q,H,N]
+        t = jnp.repeat(t, rep, axis=2)
+        return t.reshape(Bsz, nc, chunk, H, N)
+
+    # the intra-chunk [Q,Q] temporaries dominate SSD training memory; bf16
+    # operands with fp32 accumulation halve them (§Perf C4) — decay/state
+    # math stays fp32 (it exponentiates)
+    cdt = jnp.bfloat16 if _ssd_bf16() else jnp.float32
+    xc = x.reshape(Bsz, nc, chunk, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bh, Ch = tohead(B_).astype(jnp.float32), tohead(C_).astype(jnp.float32)
+
+    dA = dtc * A[None, None, None, :]                        # [B,nc,Q,H]
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (diagonal) term
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))           # [B,nc,H,Q,Q]
+    att = jnp.einsum("bnqhN,bnkhN->bnhqk", Ch.astype(cdt), Bh.astype(cdt),
+                     preferred_element_type=jnp.float32) * L
+    xdt = xc * dtc[..., None]
+    y_diag = jnp.einsum("bnhqk,bnkhp->bnqhp", att.astype(cdt),
+                        xdt.astype(cdt),
+                        preferred_element_type=jnp.float32)
+
+    # chunk boundary states
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)      # [B,nc,Q,H]
+    states = jnp.einsum("bnkhN,bnkh,bnkhp->bnhNp", Bh, dtc * decay_to_end, xc)
+
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                # [B,nc,H]
+    s0 = (jnp.zeros((Bsz, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp                                        # [B,H,N,P], [B,H]
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev                                 # emit *entering* state
+
+    states_t = states.transpose(1, 0, 2, 3, 4)               # [nc,B,H,N,P]
+    decay_t = chunk_decay.transpose(1, 0, 2)                 # [nc,B,H]
+    final, prev_states = jax.lax.scan(scan_fn, s0, (states_t, decay_t))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # [B,nc,H,N,P]
+
+    # inter-chunk (off-diagonal) term
+    y_off = jnp.einsum("bnqhN,bnhNp,bnqh->bnqhp", Ch, prev_states,
+                       jnp.exp(dA_cs))
+    y = (y_diag + y_off).reshape(Bsz, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), final
+
+
+def mamba_block(x, p: MambaParams, cfg: ModelConfig,
+                lora: Optional[LoraCtx] = None,
+                ssm_state=None, conv_state=None, return_state: bool = False):
+    """Full Mamba2 block over a sequence. x: [B, S, d]."""
+    s = cfg.ssm
+    d_in, H, N, G, conv_dim = dims(cfg)
+    B, S, _ = x.shape
+    zxbcdt = proj(x, p.in_proj, lora=lora, name="ssm_in")
+    z, xr, Bc, Cc, dt_raw = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N], axis=-1)
+    xbc = jnp.concatenate([xr, Bc, Cc], axis=-1)             # [B,S,conv_dim]
+    xbc, new_conv = _causal_conv_train(xbc, p.conv_w, p.conv_b, s.conv_width,
+                                       conv_state)
+    xr, Bc, Cc = jnp.split(xbc, [d_in, d_in + G * N], axis=-1)
+    xh = xr.reshape(B, S, H, s.head_dim)
+    Bh = Bc.reshape(B, S, G, N)
+    Ch = Cc.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)
+    A = -jnp.exp(p.a_log)
+    y, final_state = ssd_chunked(xh, dt, A, Bh, Ch, s.chunk_size, ssm_state)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * p.d_skip[None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_in)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p.norm_w, cfg.norm_eps)
+    out = proj(y, p.out_proj, lora=lora, name="ssm_out")
+    if return_state:
+        return out, (final_state, new_conv)
+    return out
+
+
+def mamba_decode_step(x, p: MambaParams, cfg: ModelConfig,
+                      ssm_state, conv_state, lora: Optional[LoraCtx] = None):
+    """One-token step. x: [B, d]; ssm_state: [B,H,N,P];
+    conv_state: [B, conv_dim, W-1]. Returns (y [B,d], new states)."""
+    s = cfg.ssm
+    d_in, H, N, G, conv_dim = dims(cfg)
+    B = x.shape[0]
+    zxbcdt = proj(x, p.in_proj, lora=lora, name="ssm_in")
+    z, xr, Bc, Cc, dt_raw = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N], axis=-1)
+    xbc = jnp.concatenate([xr, Bc, Cc], axis=-1)             # [B, conv_dim]
+    # conv: history is conv_state [B, conv_dim, W-1]
+    full = jnp.concatenate([conv_state.astype(xbc.dtype), xbc[:, :, None]], axis=-1)
+    conv_out = jnp.einsum("bcw,cw->bc", full.astype(jnp.float32),
+                          p.conv_w.astype(jnp.float32)) + p.conv_b.astype(jnp.float32)
+    xbc_o = jax.nn.silu(conv_out).astype(xbc.dtype)
+    new_conv = full[:, :, 1:]
+    xr, Bc, Cc = jnp.split(xbc_o, [d_in, d_in + G * N], axis=-1)
+    xh = xr.reshape(B, H, s.head_dim).astype(jnp.float32)
+    Bh = jnp.repeat(Bc.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cc.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)   # [B,H]
+    A = -jnp.exp(p.a_log)
+    dA = jnp.exp(dt * A[None, :])                            # [B,H]
+    st = ssm_state.astype(jnp.float32)
+    st = st * dA[:, :, None, None] + jnp.einsum(
+        "bhN,bh,bhp->bhNp", Bh, dt, xh)
+    y = jnp.einsum("bhN,bhNp->bhp", Ch, st)
+    y = y + xh * p.d_skip[None, :, None]
+    y = y.reshape(B, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p.norm_w, cfg.norm_eps)
+    out = proj(y, p.out_proj, lora=lora, name="ssm_out")
+    return out, (st, new_conv)

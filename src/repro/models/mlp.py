@@ -1,0 +1,38 @@
+"""Dense MLP variants: swiglu (most archs), squared-ReLU (nemotron-4),
+gelu (seamless)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from .common import LoraCtx, dense_init, proj
+
+
+class MLPParams(NamedTuple):
+    w_in: jax.Array                  # [d, ff] (up; or gate+up fused for swiglu)
+    w_out: jax.Array                 # [ff, d]
+
+
+def mlp_init(key, d: int, ff: int, act: str, dtype) -> MLPParams:
+    k1, k2 = jax.random.split(key)
+    in_cols = 2 * ff if act == "swiglu" else ff
+    return MLPParams(w_in=dense_init(k1, d, in_cols, dtype),
+                     w_out=dense_init(k2, ff, d, dtype))
+
+
+def mlp_apply(x, p: MLPParams, act: str, lora: Optional[LoraCtx] = None,
+              prefix: str = "mlp"):
+    h = proj(x, p.w_in, lora=lora, name=f"{prefix}_in")
+    if act == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+    elif act == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    return proj(h, p.w_out, lora=lora, name=f"{prefix}_out")

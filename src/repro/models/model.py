@@ -1,0 +1,632 @@
+"""Model assembly: init / train-forward / prefill / decode for all families.
+
+Families (configs.base): dense, moe, ssm (mamba2), hybrid (zamba2),
+encdec (seamless backbone), vlm (chameleon — tokens only, early fusion).
+
+Uniform stacks (dense/moe/ssm/vlm) lax.scan over a stacked layer axis so
+compile time is O(1) in depth; heterogeneous stacks (hybrid, encdec cross)
+use indexed python loops over stacked params.
+
+The KV cache is a plain dict pytree (donate-able):
+  k, v        [L_attn, B, Smax, KVH, hd]
+  pos         [B] int32 — valid entries per row
+  ssm, conv   [L_ssm, B, H, N, P], [L_ssm, B, conv_dim, W-1]
+  xk, xv      [L, B, S_enc, KVH, hd]  (encdec cross-attention memory)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.train.sharding import constrain
+from .attention import (AttnParams, attention_chunked, attention_decode,
+                        attn_init, qkv)
+from .common import (LoraCtx, dense_init, dtype_of, embed_init, proj, rmsnorm,
+                     rmsnorm_init, softcap)
+from .mamba2 import MambaParams, dims as ssm_dims, mamba_block, mamba_decode_step, mamba_init
+from .mlp import MLPParams, mlp_apply, mlp_init
+from .moe import MoEParams, moe_apply, moe_init
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = dtype_of(cfg.dtype)
+    keys = jax.random.split(key, cfg.num_layers + 8)
+    p: Params = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+                 "final_norm": rmsnorm_init(cfg.d_model, dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size, dt)
+
+    def dense_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": rmsnorm_init(cfg.d_model, dt),
+                "attn": attn_init(k1, cfg, dt),
+                "ln2": rmsnorm_init(cfg.d_model, dt),
+                "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act, dt)}
+
+    def moe_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": rmsnorm_init(cfg.d_model, dt),
+                "attn": attn_init(k1, cfg, dt),
+                "ln2": rmsnorm_init(cfg.d_model, dt),
+                "moe": moe_init(k2, cfg, dt)}
+
+    def mamba_layer(k):
+        return {"ln1": rmsnorm_init(cfg.d_model, dt),
+                "mamba": mamba_init(k, cfg, dt)}
+
+    if cfg.family in ("dense", "vlm"):
+        p["layers"] = _stack([dense_layer(keys[2 + i]) for i in range(cfg.num_layers)])
+    elif cfg.family == "moe":
+        p["layers"] = _stack([moe_layer(keys[2 + i]) for i in range(cfg.num_layers)])
+    elif cfg.family == "ssm":
+        p["layers"] = _stack([mamba_layer(keys[2 + i]) for i in range(cfg.num_layers)])
+    elif cfg.family == "hybrid":
+        p["layers"] = _stack([mamba_layer(keys[2 + i]) for i in range(cfg.num_layers)])
+        ks = jax.random.split(keys[2 + cfg.num_layers], 2)
+        p["shared"] = {"ln1": rmsnorm_init(cfg.d_model, dt),
+                       "attn": attn_init(ks[0], cfg, dt),
+                       "ln2": rmsnorm_init(cfg.d_model, dt),
+                       "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act, dt)}
+    elif cfg.family == "encdec":
+        enc = [dense_layer(jax.random.fold_in(keys[2], i)) for i in range(cfg.encoder_layers)]
+        p["encoder"] = _stack(enc)
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"ln1": rmsnorm_init(cfg.d_model, dt),
+                    "attn": attn_init(k1, cfg, dt),
+                    "lnx": rmsnorm_init(cfg.d_model, dt),
+                    "xattn": attn_init(k2, cfg, dt),
+                    "ln2": rmsnorm_init(cfg.d_model, dt),
+                    "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.mlp_act, dt)}
+        p["layers"] = _stack([dec_layer(keys[3 + i]) for i in range(cfg.num_layers)])
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ===========================================================================
+# cache
+# ===========================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               enc_len: int = 0, dtype=None) -> Params:
+    dt = dtype or dtype_of(cfg.dtype)
+    c: Params = {"pos": jnp.zeros((batch,), jnp.int32)}
+    n_attn = 0
+    if cfg.family in ("dense", "moe", "vlm"):
+        n_attn = cfg.num_layers
+    elif cfg.family == "hybrid":
+        n_attn = cfg.num_layers // cfg.hybrid_attn_every
+    elif cfg.family == "encdec":
+        n_attn = cfg.num_layers
+        c["xk"] = jnp.zeros((cfg.num_layers, batch, enc_len, cfg.num_kv_heads,
+                             cfg.head_dim), dt)
+        c["xv"] = jnp.zeros_like(c["xk"])
+    if n_attn:
+        c["k"] = jnp.zeros((n_attn, batch, max_len, cfg.num_kv_heads,
+                            cfg.head_dim), dt)
+        c["v"] = jnp.zeros_like(c["k"])
+    if cfg.ssm is not None:
+        d_in, H, N, G, conv_dim = ssm_dims(cfg)
+        c["ssm"] = jnp.zeros((cfg.num_layers, batch, H, N, cfg.ssm.head_dim),
+                             jnp.float32)
+        c["conv"] = jnp.zeros((cfg.num_layers, batch, conv_dim,
+                               cfg.ssm.conv_width - 1), dt)
+    return c
+
+
+def _decode_write_mode() -> str:
+    """"where" (mesh-agnostic merge) or "scatter" (in-place; requires the
+    cache S dim unsharded — the serve mesh guarantees it)."""
+    import os
+    return os.environ.get("REPRO_DECODE_WRITE", "where")
+
+
+def _write_kv(ck, cv, k_new, v_new, pos):
+    """Write [B, S, KVH, hd] (or S=1) at per-row offsets `pos` ([B]).
+
+    Decode path uses an elementwise masked merge instead of a per-row
+    scatter: a scatter at data-dependent rows forces GSPMD to fully
+    rematerialize (replicate) the sequence-sharded cache every layer
+    (≈11× HBM overshoot measured — EXPERIMENTS.md §Perf iter A1), while the
+    where-merge partitions exactly along the existing cache sharding."""
+    B, S = k_new.shape[0], k_new.shape[1]
+    if S == 1:
+        if _decode_write_mode() == "scatter":
+            # shard-aligned in-place write: correct choice when the cache's
+            # S dim is UNSHARDED (serve mesh, tp | kv_heads) — touches only
+            # [B, 1, KVH, hd] instead of rewriting the cache (§Perf A4)
+            b_idx = jnp.arange(B)
+            ck = ck.at[b_idx, pos].set(k_new[:, 0].astype(ck.dtype))
+            cv = cv.at[b_idx, pos].set(v_new[:, 0].astype(cv.dtype))
+            return ck, cv
+        Smax = ck.shape[1]
+        hit = (jnp.arange(Smax)[None, :] == pos[:, None])[:, :, None, None]
+        ck = jnp.where(hit, k_new.astype(ck.dtype), ck)
+        cv = jnp.where(hit, v_new.astype(cv.dtype), cv)
+    else:  # prefill from 0 (right-padded prompts)
+        ck = jax.lax.dynamic_update_slice(ck, k_new.astype(ck.dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v_new.astype(cv.dtype), (0, 0, 0, 0))
+    return ck, cv
+
+
+# ===========================================================================
+# layer bodies
+# ===========================================================================
+
+def _window_for(cfg: ModelConfig, layer_idx):
+    """Static per-layer sliding windows as an array (scan-friendly);
+    0 = global."""
+    if not cfg.local_global_period or not cfg.sliding_window:
+        return None
+    import numpy as np
+    w = np.array([0 if cfg.is_global_attn_layer(i) else cfg.sliding_window
+                  for i in range(cfg.num_layers)], np.int32)
+    return jnp.asarray(w)
+
+
+def _dense_block_seq(x, lp, cfg, lora, window, positions, q_chunk, causal=True):
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = qkv(h, lp["attn"], cfg, positions, lora)
+    o = attention_chunked(q, k, v, cfg, causal=causal,
+                          window=window, q_chunk=q_chunk)
+    o = o.reshape(x.shape[0], x.shape[1], cfg.q_dim)
+    x = x + proj(o, lp["attn"].wo, lora=lora, name="attn_o")
+    h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        y, aux = moe_apply(h, lp["moe"], cfg, lora)
+    else:
+        y, aux = mlp_apply(h, lp["mlp"], cfg.mlp_act, lora), 0.0
+    return x + y, (k, v), aux
+
+
+def _dense_block_decode(x, lp, cfg, lora, window, ck, cv, pos):
+    """x: [B, d] one token; ck/cv: [B, Smax, KVH, hd]."""
+    B = x.shape[0]
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)[:, None, :]      # [B,1,d]
+    q, k, v = qkv(h, lp["attn"], cfg, pos[:, None], lora)
+    ck, cv = _write_kv(ck, cv, k, v, pos)
+    o = attention_decode(q[:, 0], ck, cv, pos + 1, cfg, window=window)
+    o = o.reshape(B, cfg.q_dim)
+    x = x + proj(o, lp["attn"].wo, lora=lora, name="attn_o")
+    h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        y, _ = moe_apply(h[:, None, :], lp["moe"], cfg, lora)
+        y = y[:, 0]
+    else:
+        y = mlp_apply(h, lp["mlp"], cfg.mlp_act, lora)
+    return x + y, ck, cv
+
+
+# ===========================================================================
+# sequence forward (train / prefill) — returns hidden states (+ cache)
+# ===========================================================================
+
+def _lora_layer_slice(lora: Optional[LoraCtx], i=None, sub="layers"):
+    """Adapter slices for the per-layer subtree ("layers") or the hybrid
+    shared block ("shared"). `i=None` keeps the stacked tree (scan xs).
+    Leaves are [L, (T,) d, r]; `leaf[i]` works for both single and batched
+    modes because the task dim sits on axis 1 (see lora.adapters)."""
+    if lora is None or lora.mode == "off" or not lora.tree:
+        return None
+    tree = lora.tree.get(sub)
+    if not tree:
+        return None
+    if i is not None:
+        tree = jax.tree.map(lambda t: t[i], tree)
+    return tree
+
+
+def forward_seq(params: Params, tokens, cfg: ModelConfig,
+                lora: Optional[LoraCtx] = None, cache: Optional[Params] = None,
+                *, enc_embeds=None, q_chunk: int = 512,
+                inputs_embeds=None) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Full-sequence forward. Returns (hidden [B,S,d], cache', aux_loss).
+
+    - train: cache=None
+    - prefill: cache provided; K/V written; cache["pos"] must be set by caller
+      afterwards (per-row prompt lengths).
+    """
+    B, S = tokens.shape[:2] if tokens is not None else inputs_embeds.shape[:2]
+    if inputs_embeds is None:
+        x = params["embed"][tokens]                          # [B,S,d]
+        if cfg.family == "encdec":
+            pass
+    else:
+        x = inputs_embeds
+    # NOTE: no activation constraint here — batch sharding propagates from
+    # the dp-sharded token array, and a with_sharding_constraint inside the
+    # (remat'd, microbatch-scanned) region trips a GSPMD dynamic-slice bug
+    # (see EXPERIMENTS.md §Dry-run).
+    positions = jnp.arange(S)[None, :]
+    windows = _window_for(cfg, None)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    want_cache = cache is not None
+
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        enc_memory = None
+        if cfg.family == "encdec":
+            enc_memory = _encode(params, enc_embeds, cfg, q_chunk)
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, lora_i, win = xs["lp"], xs.get("lora"), xs.get("win")
+            lctx = lora.at_layer(lora_i) if (lora is not None and lora_i is not None) else None
+            w = win if win is not None else 0
+            xo, (k, v), a = _dense_block_seq(x, lp, cfg, lctx, w, positions,
+                                             q_chunk)
+            if cfg.family == "encdec":
+                xo = _cross_attn_seq(xo, lp, cfg, enc_memory, q_chunk)
+            ys = (k, v) if want_cache else None
+            return (xo, aux + a), ys
+
+        xs = {"lp": params["layers"]}
+        lt = _lora_layer_slice(lora)
+        if lt is not None:
+            xs["lora"] = lt
+        if windows is not None:
+            xs["win"] = windows
+        scan_body = body
+        if cfg.remat:
+            scan_body = jax.checkpoint(body)
+        blk = cfg.remat_block
+        if (cfg.scan_layers and blk and not want_cache
+                and cfg.num_layers % blk == 0):
+            # two-level remat (§Perf B2): outer scan over L/blk blocks with
+            # block-level checkpoint stores only L/blk layer inputs instead
+            # of L; the block backward recomputes its inner scan (which
+            # re-remats per layer) — memory ÷blk for one extra forward.
+            xs_blocked = jax.tree.map(
+                lambda t: t.reshape((cfg.num_layers // blk, blk)
+                                    + t.shape[1:]), xs)
+
+            @jax.checkpoint
+            def block_body(carry, xs_b):
+                return jax.lax.scan(scan_body, carry, xs_b)
+
+            (x, aux_total), _ = jax.lax.scan(block_body, (x, aux_total),
+                                             xs_blocked)
+        elif cfg.scan_layers:
+            (x, aux_total), ys = jax.lax.scan(scan_body, (x, aux_total), xs)
+            if want_cache:
+                ks, vs = ys
+        else:
+            ks_l, vs_l = [], []
+            for i in range(cfg.num_layers):
+                xi = jax.tree.map(lambda t: t[i], xs)
+                (x, aux_total), ys = scan_body((x, aux_total), xi)
+                if want_cache:
+                    ks_l.append(ys[0])
+                    vs_l.append(ys[1])
+            if want_cache:
+                ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+        if want_cache:
+            Smax = cache["k"].shape[2]
+            ck, cv = cache["k"], cache["v"]
+            ck = jax.lax.dynamic_update_slice(ck, ks.astype(ck.dtype), (0, 0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, vs.astype(cv.dtype), (0, 0, 0, 0, 0))
+            cache = dict(cache, k=ck, v=cv)
+            if cfg.family == "encdec":
+                cache = _encdec_fill_cross_cache(params, cache, enc_memory, cfg)
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            x = carry
+            lp, lora_i = xs["lp"], xs.get("lora")
+            lctx = lora.at_layer(lora_i) if (lora is not None and lora_i is not None) else None
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            y, (st, cs) = mamba_block(h, lp["mamba"], cfg, lctx,
+                                      return_state=True)
+            ys = (st, cs) if want_cache else None
+            return x + y, ys
+
+        xs = {"lp": params["layers"]}
+        lt = _lora_layer_slice(lora)
+        if lt is not None:
+            xs["lora"] = lt
+        scan_body = jax.checkpoint(body) if cfg.remat else body
+        if cfg.scan_layers:
+            x, ys = jax.lax.scan(scan_body, x, xs)
+            if want_cache:
+                sts, css = ys
+        else:
+            sts_l, css_l = [], []
+            for i in range(cfg.num_layers):
+                xi = jax.tree.map(lambda t: t[i], xs)
+                x, ys = scan_body(x, xi)
+                if want_cache:
+                    sts_l.append(ys[0]); css_l.append(ys[1])
+            if want_cache:
+                sts, css = jnp.stack(sts_l), jnp.stack(css_l)
+        if want_cache:
+            cache = dict(cache, ssm=sts.astype(cache["ssm"].dtype),
+                         conv=css.astype(cache["conv"].dtype))
+
+    elif cfg.family == "hybrid" and cfg.scan_layers and not want_cache:
+        # grouped scan (§Perf C1): layers [G·k + tail] scan over G groups of
+        # (k mamba blocks + the shared attention block). Compile-time O(1)
+        # in depth (vs 17-min unrolled compiles) and the group-level remat
+        # collapses the unrolled loop's concurrently-live SSD temporaries.
+        k_every = cfg.hybrid_attn_every
+        G = cfg.num_layers // k_every
+        tail = cfg.num_layers - G * k_every
+        lt_all = _lora_layer_slice(lora)          # [L, ...] stacked or None
+        slt_all = _lora_layer_slice(lora, sub="shared")
+
+        def take(tree, lo, hi):
+            return jax.tree.map(lambda t: t[lo:hi], tree) \
+                if tree is not None else None
+
+        def reshape_groups(tree, n, k):
+            return jax.tree.map(
+                lambda t: t[: n * k].reshape((n, k) + t.shape[1:]), tree) \
+                if tree is not None else None
+
+        def mamba_one(x, lp, lt):
+            lctx = lora.at_layer(lt) if lt is not None else None
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            y, _ = mamba_block(h, lp["mamba"], cfg, lctx, return_state=True)
+            return x + y, None
+
+        def group_body(x, xs_g):
+            x, _ = jax.lax.scan(
+                lambda c, xg: mamba_one(c, xg["lp"], xg.get("lora")),
+                x, xs_g["inner"])
+            slctx = (lora.at_layer(xs_g["slora"])
+                     if xs_g.get("slora") is not None else None)
+            x, _, _ = _dense_block_seq(x, params["shared"], cfg, slctx, 0,
+                                       positions, q_chunk)
+            return x, None
+
+        if cfg.remat:
+            group_body = jax.checkpoint(group_body)
+        xs_g = {"inner": {"lp": reshape_groups(params["layers"], G, k_every)}}
+        if lt_all is not None:
+            xs_g["inner"]["lora"] = reshape_groups(lt_all, G, k_every)
+        if slt_all is not None:
+            xs_g["slora"] = jax.tree.map(lambda t: t[:G], slt_all)
+        x, _ = jax.lax.scan(group_body, x, xs_g)
+        if tail:
+            def tail_body(c, xg):
+                return mamba_one(c, xg["lp"], xg.get("lora"))
+            tail_xs = {"lp": take(params["layers"], G * k_every,
+                                  cfg.num_layers)}
+            if lt_all is not None:
+                tail_xs["lora"] = take(lt_all, G * k_every, cfg.num_layers)
+            tb = jax.checkpoint(tail_body) if cfg.remat else tail_body
+            x, _ = jax.lax.scan(tb, x, tail_xs)
+
+    elif cfg.family == "hybrid":
+        k_every = cfg.hybrid_attn_every
+        ks_l, vs_l, sts_l, css_l = [], [], [], []
+        inv = 0
+
+        def run_mamba(h, mp, lt_tree):
+            lctx = lora.at_layer(lt_tree) if lt_tree is not None else None
+            y, (st, cs) = mamba_block(h, mp, cfg, lctx, return_state=True)
+            return y, st, cs
+        if cfg.remat:
+            run_mamba = jax.checkpoint(run_mamba)
+
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            lt = _lora_layer_slice(lora, i)
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            y, st, cs = run_mamba(h, lp["mamba"], lt)
+            x = x + y
+            sts_l.append(st); css_l.append(cs)
+            if k_every and (i + 1) % k_every == 0:
+                sp = params["shared"]
+                slt = _lora_layer_slice(lora, inv, sub="shared")
+                slctx = lora.at_layer(slt) if slt is not None else None
+                x, (k, v), _ = _dense_block_seq(x, sp, cfg, slctx, 0,
+                                                positions, q_chunk)
+                ks_l.append(k); vs_l.append(v)
+                inv += 1
+        if want_cache:
+            cache = dict(cache)
+            if ks_l:
+                ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+                ck = jax.lax.dynamic_update_slice(cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+                cache["k"], cache["v"] = ck, cv
+            cache["ssm"] = jnp.stack(sts_l).astype(cache["ssm"].dtype)
+            cache["conv"] = jnp.stack(css_l).astype(cache["conv"].dtype)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, cache, aux_total
+
+
+def _encode(params, enc_embeds, cfg, q_chunk):
+    """Seamless encoder: bidirectional transformer over stub frontend
+    embeddings [B, S_enc, d]."""
+    x = enc_embeds
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        xo, _, _ = _dense_block_seq(x, lp, cfg, None, 0, positions, q_chunk,
+                                    causal=False)
+        return xo, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"])
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def _cross_attn_seq(x, lp, cfg, enc_memory, q_chunk):
+    """Decoder cross-attention to encoder memory (no mask, no rope)."""
+    h = rmsnorm(x, lp["lnx"], cfg.norm_eps)
+    B, S, _ = h.shape
+    p = lp["xattn"]
+    q = proj(h, p.wq).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = proj(enc_memory, p.wk).reshape(B, -1, cfg.num_kv_heads, cfg.head_dim)
+    v = proj(enc_memory, p.wv).reshape(B, -1, cfg.num_kv_heads, cfg.head_dim)
+    o = attention_chunked(q, k, v, cfg, causal=False, window=0, q_chunk=q_chunk)
+    return x + proj(o.reshape(B, S, cfg.q_dim), p.wo)
+
+
+def _encdec_fill_cross_cache(params, cache, enc_memory, cfg):
+    """Precompute per-layer cross-attn K/V from encoder memory."""
+    def one(lp):
+        p = lp["xattn"]
+        B, Se, _ = enc_memory.shape
+        k = proj(enc_memory, p.wk).reshape(B, Se, cfg.num_kv_heads, cfg.head_dim)
+        v = proj(enc_memory, p.wv).reshape(B, Se, cfg.num_kv_heads, cfg.head_dim)
+        return k, v
+
+    ks, vs = jax.lax.map(one, params["layers"])
+    return dict(cache, xk=ks.astype(cache["xk"].dtype),
+                xv=vs.astype(cache["xv"].dtype))
+
+
+# ===========================================================================
+# decode step
+# ===========================================================================
+
+def decode_step(params: Params, new_tokens, cache: Params, cfg: ModelConfig,
+                lora: Optional[LoraCtx] = None,
+                advance=None) -> Tuple[jax.Array, Params]:
+    """One token for every row. new_tokens: [B] int32.
+
+    `advance` ([B] int32 0/1, default all-ones) freezes rows awaiting
+    external tool responses: a frozen row's K/V slot is written (and
+    overwritten on resume) but its `pos` does not move, so its cache never
+    accumulates garbage. Returns (logits [B, V], cache')."""
+    B = new_tokens.shape[0]
+    pos = cache["pos"]
+    if advance is None:
+        advance = jnp.ones((B,), jnp.int32)
+    x = params["embed"][new_tokens]                          # [B, d]
+    windows = _window_for(cfg, None)
+
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        def body(x, xs):
+            lp, ck, cv, lora_i, win = (xs["lp"], xs["ck"], xs["cv"],
+                                       xs.get("lora"), xs.get("win"))
+            lctx = lora.at_layer(lora_i) if (lora is not None and lora_i is not None) else None
+            w = win if win is not None else 0
+            x, ck, cv = _dense_block_decode(x, lp, cfg, lctx, w, ck, cv, pos)
+            if cfg.family == "encdec":
+                x = _cross_attn_decode(x, lp, cfg, xs["xk"], xs["xv"])
+            return x, (ck, cv)
+
+        xs = {"lp": params["layers"], "ck": cache["k"], "cv": cache["v"]}
+        if cfg.family == "encdec":
+            xs["xk"], xs["xv"] = cache["xk"], cache["xv"]
+        lt = _lora_layer_slice(lora)
+        if lt is not None:
+            xs["lora"] = lt
+        if windows is not None:
+            xs["win"] = windows
+        if cfg.scan_layers:
+            x, (cks, cvs) = jax.lax.scan(body, x, xs)
+        else:
+            cks_l, cvs_l = [], []
+            for i in range(cfg.num_layers):
+                xi = jax.tree.map(lambda t: t[i], xs)
+                x, (ck, cv) = body(x, xi)
+                cks_l.append(ck); cvs_l.append(cv)
+            cks, cvs = jnp.stack(cks_l), jnp.stack(cvs_l)
+        cache = dict(cache, k=cks, v=cvs, pos=pos + advance)
+
+    elif cfg.family == "ssm":
+        adv_f = advance.astype(jnp.float32)[:, None, None, None]
+
+        def body(x, xs):
+            lp, st0, cs0, lora_i = xs["lp"], xs["st"], xs["cs"], xs.get("lora")
+            lctx = lora.at_layer(lora_i) if (lora is not None and lora_i is not None) else None
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            y, (st, cs) = mamba_decode_step(h, lp["mamba"], cfg, st0, cs0, lctx)
+            st = st * adv_f + st0 * (1.0 - adv_f)
+            cs = jnp.where(advance[:, None, None] > 0, cs, cs0)
+            return x + y, (st, cs.astype(xs["cs"].dtype))
+
+        xs = {"lp": params["layers"], "st": cache["ssm"], "cs": cache["conv"]}
+        lt = _lora_layer_slice(lora)
+        if lt is not None:
+            xs["lora"] = lt
+        x, (sts, css) = jax.lax.scan(body, x, xs)
+        cache = dict(cache, ssm=sts, conv=css, pos=pos + advance)
+
+    elif cfg.family == "hybrid":
+        k_every = cfg.hybrid_attn_every
+        sts_l, css_l = [], []
+        cks, cvs = cache.get("k"), cache.get("v")
+        inv = 0
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            lt = _lora_layer_slice(lora, i)
+            lctx = lora.at_layer(lt) if lt is not None else None
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            y, (st, cs) = mamba_decode_step(h, lp["mamba"], cfg,
+                                            cache["ssm"][i], cache["conv"][i],
+                                            lctx)
+            x = x + y
+            sts_l.append(st); css_l.append(cs.astype(cache["conv"].dtype))
+            if k_every and (i + 1) % k_every == 0:
+                sp = params["shared"]
+                slt = _lora_layer_slice(lora, inv, sub="shared")
+                slctx = lora.at_layer(slt) if slt is not None else None
+                x, ck, cv = _dense_block_decode(x, sp, cfg, slctx, 0,
+                                                cks[inv], cvs[inv], pos)
+                cks = cks.at[inv].set(ck)
+                cvs = cvs.at[inv].set(cv)
+                inv += 1
+        cache = dict(cache, ssm=jnp.stack(sts_l), conv=jnp.stack(css_l),
+                     pos=pos + advance)
+        if cks is not None:
+            cache["k"], cache["v"] = cks, cvs
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(x, params, cfg)
+    return logits, cache
+
+
+def _cross_attn_decode(x, lp, cfg, xk, xv):
+    """x: [B, d]; xk/xv: [B, S_enc, KVH, hd] (full memory, no mask)."""
+    h = rmsnorm(x, lp["lnx"], cfg.norm_eps)
+    p = lp["xattn"]
+    B = x.shape[0]
+    q = proj(h, p.wq).reshape(B, cfg.num_heads, cfg.head_dim)
+    Se = xk.shape[1]
+    o = attention_decode(q, xk, xv, jnp.full((B,), Se, jnp.int32), cfg)
+    return x + proj(o.reshape(B, cfg.q_dim), p.wo)
+
+
+# ===========================================================================
+# logits
+# ===========================================================================
+
+def lm_logits(h, params: Params, cfg: ModelConfig):
+    w = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+    logits = (h @ w.astype(h.dtype)).astype(jnp.float32)
+    return softcap(logits, cfg.logit_softcap)
+
+
+def forward_train(params: Params, tokens, cfg: ModelConfig,
+                  lora: Optional[LoraCtx] = None, *, enc_embeds=None,
+                  q_chunk: int = 512):
+    """Teacher-forced full-sequence logits [B, S, V] (+ aux loss)."""
+    h, _, aux = forward_seq(params, tokens, cfg, lora, None,
+                            enc_embeds=enc_embeds, q_chunk=q_chunk)
+    return lm_logits(h, params, cfg), aux

@@ -1,0 +1,103 @@
+"""GRPO (group-relative policy optimization) — the paper's training
+algorithm (§5 "Training Algorithm"): critic-free PPO-clip with advantages
+normalized within each G-sample group of the same prompt.
+
+The loss operates on token logprobs produced by the model's training
+forward; logits→logprob extraction is vocab-chunked (and has a fused Pallas
+kernel, kernels/token_logprob) so the [B, S, V] softmax is never
+materialized in fp32 at large vocab.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def group_advantages(rewards, group_size: int, eps: float = 1e-4):
+    """rewards: [R] with contiguous groups of `group_size`.
+    A_i = (r_i - mean_group) / (std_group + eps)."""
+    R = rewards.shape[0]
+    g = rewards.reshape(R // group_size, group_size)
+    mean = jnp.mean(g, axis=1, keepdims=True)
+    std = jnp.std(g, axis=1, keepdims=True)
+    return ((g - mean) / (std + eps)).reshape(R)
+
+
+def token_logprobs_chunked(hidden, vocab_w, targets, logit_softcap: float = 0.0,
+                           chunk: int = 1024, use_kernel: bool = False):
+    """log p(targets | hidden) without materializing [B, S, V] in fp32.
+
+    hidden: [B, S, d]; vocab_w: [d, V]; targets: [B, S] (next-token ids,
+    i.e. tokens shifted left). Returns [B, S] float32 logprobs + entropy.
+    """
+    if use_kernel:
+        from repro.kernels.ops import token_logprob
+        return token_logprob(hidden, vocab_w, targets, logit_softcap)
+    B, S, d = hidden.shape
+    nchunks = max(1, S // chunk)
+    assert S % nchunks == 0
+    hs = hidden.reshape(B, nchunks, S // nchunks, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, nchunks, S // nchunks).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(_, inp):
+        # remat: without this the scan saves every [B, chunk, V] fp32 logits
+        # tile for the backward pass (tens of GB/device at 150k+ vocabs);
+        # recomputing the tile is one extra [chunk,d]×[d,V] matmul.
+        h, t = inp
+        logits = (h @ vocab_w.astype(h.dtype)).astype(jnp.float32)
+        if logit_softcap:
+            logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        p = jax.nn.softmax(logits, axis=-1)
+        ent = lse - jnp.sum(p * logits, axis=-1)
+        return None, (tgt - lse, ent)
+
+    _, (lp, ent) = jax.lax.scan(body, None, (hs, ts))
+    return (lp.transpose(1, 0, 2).reshape(B, S),
+            ent.transpose(1, 0, 2).reshape(B, S))
+
+
+class GRPOOut(NamedTuple):
+    loss: jax.Array
+    pg_loss: jax.Array
+    kl: jax.Array
+    entropy: jax.Array
+    ratio_mean: jax.Array
+    clip_frac: jax.Array
+
+
+def grpo_loss(new_logprobs, old_logprobs, advantages, mask,
+              ref_logprobs=None, *, clip_eps: float = 0.2,
+              kl_coef: float = 0.0, entropy: Optional[jax.Array] = None,
+              ent_coef: float = 0.0) -> GRPOOut:
+    """PPO-clip objective with per-group advantages.
+
+    new/old_logprobs: [R, S] token logprobs; advantages: [R] (broadcast over
+    tokens, GRPO-style); mask: [R, S] completion mask. ref_logprobs enables
+    the k3 KL penalty to the base policy (= adapter-off forward).
+    """
+    adv = advantages[:, None]
+    log_ratio = new_logprobs - old_logprobs
+    ratio = jnp.exp(log_ratio)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    obj = jnp.minimum(unclipped, clipped)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    pg = -jnp.sum(obj * mask) / denom
+
+    kl = jnp.zeros((), jnp.float32)
+    if ref_logprobs is not None and kl_coef:
+        # k3 estimator: exp(ref-new) - (ref-new) - 1  (nonnegative, unbiased)
+        d = ref_logprobs - new_logprobs
+        kl = jnp.sum((jnp.exp(d) - d - 1.0) * mask) / denom
+    ent = (jnp.sum(entropy * mask) / denom if entropy is not None
+           else jnp.zeros((), jnp.float32))
+    loss = pg + kl_coef * kl - ent_coef * ent
+    clip_frac = jnp.sum((jnp.abs(ratio - 1.0) > clip_eps) * mask) / denom
+    return GRPOOut(loss=loss, pg_loss=pg, kl=kl, entropy=ent,
+                   ratio_mean=jnp.sum(ratio * mask) / denom,
+                   clip_frac=clip_frac)

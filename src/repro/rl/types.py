@@ -1,0 +1,47 @@
+"""Trajectory containers flowing through Q_buffer (paper §4.2/§4.4).
+
+A ``TrajectoryBatch`` is one task's rollout batch: prompts + generated
+completions, per-token logprobs sampled under policy version ``version``,
+and verifiable rewards from the environment. GRPO groups are contiguous:
+rows [g*G, (g+1)*G) share a prompt.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+@dataclass
+class TrajectoryBatch:
+    task_id: str
+    version: int                 # policy version v that generated these rows
+    tokens: np.ndarray           # [R, S] int32 — prompt + completion, padded
+    prompt_lens: np.ndarray      # [R] int32
+    total_lens: np.ndarray       # [R] int32 (prompt + completion)
+    rewards: np.ndarray          # [R] float32 (verifier output)
+    group_size: int              # G — rows per GRPO group
+    behavior_logprobs: Optional[np.ndarray] = None  # [R, S] under π_v
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def num_groups(self) -> int:
+        return self.num_rows // self.group_size
+
+    def completion_mask(self) -> np.ndarray:
+        """[R, S] 1.0 where position is a *generated* token (loss positions).
+
+        Loss sits on positions predicting tokens [prompt_len, total_len):
+        position j predicts token j+1, so mask[j] = prompt_len-1 <= j < total-1.
+        """
+        R, S = self.tokens.shape
+        idx = np.arange(S)[None, :]
+        lo = (self.prompt_lens - 1)[:, None]
+        hi = (self.total_lens - 1)[:, None]
+        return ((idx >= lo) & (idx < hi)).astype(np.float32)

@@ -1,0 +1,298 @@
+"""Rollout engine (paper §4.1/§4.4/§4.5): cross-task multi-LoRA batched
+generation with agentic tool-call force-feeding.
+
+vLLM's role in the paper, adapted to XLA's static shapes (DESIGN.md §3):
+rows from *different tenants* are batched into fixed-width slots with a
+per-row adapter id; decode is one jitted step; rows awaiting an external
+tool response are frozen (advance=0) while the rest of the batch keeps
+decoding — the intra-batch form of the paper's rollout/environment overlap.
+
+The engine is synchronous at its API (`generate(requests)`); asynchrony
+across tasks is the scheduler's job (repro.core). Tool calls are executed
+through a caller-provided executor so the real runtime can run them on a
+thread pool while decode proceeds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.data import tokenizer as tok
+from repro.envs.base import Env
+from repro.lora.adapters import batched_ctx, stack_adapters
+from repro.models import decode_step, forward_seq, init_cache, lm_logits
+from repro.rl.types import TrajectoryBatch
+
+
+@dataclass
+class RolloutRequest:
+    task_id: str
+    adapter_index: int            # row id into the stacked adapter tree
+    prompt: List[int]
+    truth: object
+    env: Env
+    max_new_tokens: int
+    temperature: float = 1.0
+
+
+@dataclass
+class RolloutStats:
+    decode_steps: int = 0
+    prefill_tokens: int = 0
+    decode_seconds: float = 0.0
+    env_wait_seconds: float = 0.0
+    wall_seconds: float = 0.0
+
+
+class RolloutEngine:
+    def __init__(self, cfg: ModelConfig, base_params, *, max_len: int = 128,
+                 use_kernel: bool = False, seed: int = 0):
+        self.cfg = cfg
+        self.base_params = base_params
+        self.max_len = max_len
+        self.use_kernel = use_kernel
+        self._key = jax.random.PRNGKey(seed)
+        self._step_fn = None
+        self._prefill_fn = None
+
+    # -- jitted kernels --------------------------------------------------
+    def _build(self, num_adapters: int):
+        cfg = self.cfg
+
+        def prefill(params, adapters, row_ids, tokens, prompt_lens, cache):
+            lora = batched_ctx(adapters, row_ids, cfg, self.use_kernel)
+            h, cache, _ = forward_seq(params, tokens, cfg, lora, cache)
+            cache = dict(cache, pos=prompt_lens)
+            last = jnp.take_along_axis(
+                h, (prompt_lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+            logits = lm_logits(last, params, cfg)
+            return logits, cache
+
+        def step(params, adapters, row_ids, cur_tokens, cache, key, temps,
+                 forced, forced_mask, advance):
+            lora = batched_ctx(adapters, row_ids, cfg, self.use_kernel)
+            logits, cache = decode_step(params, cur_tokens, cache, cfg, lora,
+                                        advance=advance)
+            logp_all = jax.nn.log_softmax(logits, axis=-1)
+            scaled = logits / jnp.maximum(temps[:, None], 1e-4)
+            sampled = jax.random.categorical(key, scaled, axis=-1)
+            nxt = jnp.where(forced_mask > 0, forced, sampled).astype(jnp.int32)
+            lp = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
+            return nxt, lp, cache
+
+        self._prefill_fn = jax.jit(prefill, donate_argnums=(5,))
+        self._step_fn = jax.jit(step, donate_argnums=(4,))
+
+    # -- main API ---------------------------------------------------------
+    def generate(self, requests: Sequence[RolloutRequest], adapter_trees,
+                 *, tool_executor: Optional[ThreadPoolExecutor] = None,
+                 sim_latency: bool = False) -> (List[Dict], RolloutStats):
+        """Run a batch of cross-task requests to completion.
+
+        adapter_trees: list of per-task adapter trees; request.adapter_index
+        selects. Returns per-request dicts (tokens/logprobs/loss_mask/...)
+        and engine stats.
+        """
+        t_start = time.monotonic()
+        cfg = self.cfg
+        B = len(requests)
+        if self._step_fn is None:
+            self._build(len(adapter_trees))
+        stacked = stack_adapters(adapter_trees)
+        row_ids = jnp.asarray([r.adapter_index for r in requests], jnp.int32)
+        temps = jnp.asarray([r.temperature for r in requests], jnp.float32)
+
+        prompt_lens = np.array([len(r.prompt) for r in requests], np.int32)
+        S_p = int(max(8, -(-int(prompt_lens.max()) // 8) * 8))
+        tokens = np.zeros((B, S_p), np.int32)
+        for i, r in enumerate(requests):
+            tokens[i, :len(r.prompt)] = r.prompt
+
+        cache = init_cache(cfg, B, self.max_len,
+                           enc_len=8 if cfg.family == "encdec" else 0)
+        stats = RolloutStats(prefill_tokens=int(prompt_lens.sum()))
+        t0 = time.monotonic()
+        logits, cache = self._prefill_fn(self.base_params, stacked, row_ids,
+                                         jnp.asarray(tokens),
+                                         jnp.asarray(prompt_lens), cache)
+        jax.block_until_ready(logits)
+        stats.decode_seconds += time.monotonic() - t0
+
+        # host-side per-row state
+        gen: List[List[int]] = [[] for _ in range(B)]
+        lps: List[List[float]] = [[] for _ in range(B)]
+        lmask: List[List[float]] = [[] for _ in range(B)]
+        status = ["active"] * B                       # active|calling|done
+        forced_q: List[List[int]] = [[] for _ in range(B)]
+        pending: Dict[int, Future] = {}
+        pending_t0: Dict[int, float] = {}
+        own_pool = tool_executor is None
+        pool = tool_executor or ThreadPoolExecutor(max_workers=4)
+        rng = np.random.RandomState(int(self._key[1]) % (2**31))
+
+        # sample the first token from prefill logits
+        self._key, sk = jax.random.split(self._key)
+        first = jax.random.categorical(
+            sk, logits / jnp.maximum(temps[:, None], 1e-4), axis=-1)
+        first_lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                       first[:, None], axis=-1)[:, 0]
+        first = np.asarray(first)
+        first_lp = np.asarray(first_lp)
+        cur = np.zeros((B,), np.int32)
+        for i, r in enumerate(requests):
+            self._accept_token(i, int(first[i]), float(first_lp[i]), 1.0,
+                               requests, gen, lps, lmask, status, forced_q,
+                               pending, pending_t0, pool, tokens, rng,
+                               sim_latency, stats)
+            cur[i] = int(first[i])
+
+        max_steps = max(r.max_new_tokens for r in requests) + 48
+        steps_done = 0
+        wall_deadline = time.monotonic() + 120.0
+        while steps_done < max_steps and time.monotonic() < wall_deadline:
+            if all(s == "done" for s in status):
+                break
+            # resolve finished tool calls
+            for i in list(pending):
+                if pending[i].done():
+                    resp = pending[i].result()
+                    stats.env_wait_seconds += time.monotonic() - pending_t0[i]
+                    forced_q[i] = [tok.RESP] + list(resp) + [tok.ENDRESP]
+                    status[i] = "active"
+                    del pending[i], pending_t0[i]
+            advance = np.array([1 if status[i] in ("active",) else 0
+                                for i in range(B)], np.int32)
+            if advance.sum() == 0:
+                # waiting only on external tools — does not consume the
+                # decode-step budget (straggler guard is the wall deadline)
+                time.sleep(0.001)
+                continue
+            steps_done += 1
+            forced = np.zeros((B,), np.int32)
+            fmask = np.zeros((B,), np.int32)
+            for i in range(B):
+                if status[i] == "active" and forced_q[i]:
+                    forced[i] = forced_q[i][0]
+                    fmask[i] = 1
+            self._key, sk = jax.random.split(self._key)
+            t0 = time.monotonic()
+            nxt, lp, cache = self._step_fn(
+                self.base_params, stacked, row_ids, jnp.asarray(cur), cache,
+                sk, temps, jnp.asarray(forced), jnp.asarray(fmask),
+                jnp.asarray(advance))
+            nxt = np.asarray(nxt)
+            lp = np.asarray(lp)
+            stats.decode_seconds += time.monotonic() - t0
+            stats.decode_steps += 1
+            for i in range(B):
+                if status[i] != "active" or advance[i] == 0:
+                    continue
+                was_forced = fmask[i] == 1
+                if was_forced:
+                    forced_q[i].pop(0)
+                self._accept_token(i, int(nxt[i]), float(lp[i]),
+                                   0.0 if was_forced else 1.0,
+                                   requests, gen, lps, lmask, status,
+                                   forced_q, pending, pending_t0, pool,
+                                   tokens, rng, sim_latency, stats)
+                cur[i] = int(nxt[i])
+
+        # timed-out tool calls: cancel
+        for i in pending:
+            status[i] = "done"
+        if own_pool:
+            pool.shutdown(wait=False)
+
+        results = []
+        for i, r in enumerate(requests):
+            results.append({
+                "task_id": r.task_id,
+                "prompt_len": int(prompt_lens[i]),
+                "tokens": list(tokens[i, :prompt_lens[i]]) + gen[i],
+                "gen_logprobs": lps[i],
+                "gen_loss_mask": lmask[i],
+                "truth": r.truth,
+                "env": r.env,
+            })
+        stats.wall_seconds = time.monotonic() - t_start
+        return results, stats
+
+    # ------------------------------------------------------------------
+    def _accept_token(self, i, token, lp, mask, requests, gen, lps, lmask,
+                      status, forced_q, pending, pending_t0, pool, tokens,
+                      rng, sim_latency, stats):
+        r = requests[i]
+        gen[i].append(token)
+        lps[i].append(lp)
+        lmask[i].append(mask)
+        if token == tok.EOS or len(gen[i]) >= r.max_new_tokens + 32:
+            status[i] = "done"
+            return
+        if token == tok.CALL and r.env.is_agentic and mask == 1.0:
+            status[i] = "calling"
+            query = list(tokens[i, :len(r.prompt)]) + gen[i]
+            latency = r.env.sample_env_latency(
+                _RandomShim(rng)) if not sim_latency else 0.0
+
+            def run_tool(q=query, env=r.env, lat=latency, truth=r.truth):
+                if lat > 0:
+                    time.sleep(lat)
+                return env.tool_call(q, truth)
+
+            pending[i] = pool.submit(run_tool)
+            pending_t0[i] = time.monotonic()
+        elif len(gen[i]) >= r.max_new_tokens and not forced_q[i]:
+            status[i] = "done"
+
+
+class _RandomShim:
+    """random.Random-compatible gauss() over a numpy RandomState."""
+    def __init__(self, rs):
+        self.rs = rs
+
+    def gauss(self, mu, sigma):
+        return float(self.rs.normal(mu, sigma))
+
+
+def to_trajectory_batch(results: List[Dict], task_id: str, version: int,
+                        group_size: int, pad_to: int = None) -> TrajectoryBatch:
+    """Pack engine results for ONE task into a padded TrajectoryBatch and
+    verify rewards."""
+    rows = [r for r in results if r["task_id"] == task_id]
+    S = max(len(r["tokens"]) for r in rows)
+    if pad_to:
+        S = max(S, pad_to)
+    S = -(-S // 8) * 8
+    R = len(rows)
+    tokens = np.zeros((R, S), np.int32)
+    loss_mask = np.ones((R, S), np.float32)
+    behavior = np.zeros((R, S), np.float32)
+    p_lens = np.zeros((R,), np.int32)
+    t_lens = np.zeros((R,), np.int32)
+    rewards = np.zeros((R,), np.float32)
+    for j, r in enumerate(rows):
+        n = len(r["tokens"])
+        tokens[j, :n] = r["tokens"]
+        p_lens[j] = r["prompt_len"]
+        t_lens[j] = n
+        gen_len = n - r["prompt_len"]
+        # behavior logprobs/losses sit at positions predicting each gen token
+        for k in range(gen_len):
+            pos = r["prompt_len"] - 1 + k
+            behavior[j, pos] = r["gen_logprobs"][k]
+            loss_mask[j, pos] = r["gen_loss_mask"][k]
+        comp = r["tokens"][r["prompt_len"]:]
+        rewards[j] = r["env"].verify(r["truth"], comp)
+    return TrajectoryBatch(task_id=task_id, version=version, tokens=tokens,
+                           prompt_lens=p_lens, total_lens=t_lens,
+                           rewards=rewards, group_size=group_size,
+                           behavior_logprobs=behavior[:, :S - 1],
+                           meta={"loss_mask": loss_mask})

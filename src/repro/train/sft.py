@@ -1,0 +1,49 @@
+"""Supervised warmup (SFT) — teacher-forced cross-entropy on verified
+answers. RLVR assumes a pretrained base policy (the paper fine-tunes Qwen3);
+on this box base models are random-init, so examples/tests warm the base up
+on the task format first, then GRPO lifts the verifiable reward — the same
+two-stage shape as the paper's pipeline."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models import forward_seq
+from repro.rl.grpo import token_logprobs_chunked
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def make_sft_step(cfg: ModelConfig, adamw: AdamWConfig,
+                  trainable: str = "full"):
+    """SFT on (tokens, loss positions). trainable: full | lora."""
+
+    def loss_fn(tree, base_params, batch):
+        if trainable == "lora":
+            from repro.lora.adapters import single_ctx
+            params, lora = base_params, single_ctx(tree, cfg)
+        else:
+            params, lora = tree, None
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        h, _, _ = forward_seq(params, tokens, cfg, lora, None)
+        w = params["lm_head"] if not cfg.tie_embeddings else params["embed"].T
+        lp, _ = token_logprobs_chunked(h[:, :-1], w, tokens[:, 1:],
+                                       cfg.logit_softcap)
+        idx = jnp.arange(S - 1)[None, :]
+        mask = ((idx >= (batch["prompt_lens"] - 1)[:, None])
+                & (idx < (batch["total_lens"] - 1)[:, None])).astype(jnp.float32)
+        return -jnp.sum(lp * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def sft_step(base_params, tree, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(tree, base_params, batch)
+        tree, opt_state, gnorm = adamw_update(tree, grads, opt_state, adamw)
+        return tree, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return sft_step
+
+
+def sft_init(params_or_lora):
+    return adamw_init(params_or_lora)

@@ -1,0 +1,151 @@
+"""PolicyUpdate (paper Algorithm 1, line 14): one GRPO update for one task.
+
+``make_train_step`` builds the jitted update used by the training engine.
+The paper-faithful mode differentiates ONLY the task's LoRA adapters
+(θ_t^(v) → θ_t^(v+1)) against the frozen shared base model; optimizer state
+is the task's φ_t^(v). ``trainable="full"`` exists as a baseline.
+
+Gradient accumulation scans over microbatches (accum_steps) — at production
+scale this is what lets per-microbatch reduce-scatters overlap the backward
+of the next microbatch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.lora.adapters import single_ctx
+from repro.models import forward_seq
+from repro.models.common import LoraCtx
+from repro.rl.grpo import (GRPOOut, group_advantages, grpo_loss,
+                           token_logprobs_chunked)
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+from .sharding import constrain
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    group_size: int = 8
+    clip_eps: float = 0.2
+    kl_coef: float = 0.0
+    ent_coef: float = 0.0
+    accum_steps: int = 1
+    recompute_old: bool = True       # recompute behavior logprobs under the
+                                     # training forward (MoE-drop safe)
+    trainable: str = "lora"          # lora | full
+    use_logprob_kernel: bool = False
+    adamw: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+def _completion_mask(prompt_lens, total_lens, S):
+    idx = jnp.arange(S)[None, :]
+    lo = (prompt_lens - 1)[:, None]
+    hi = (total_lens - 1)[:, None]
+    return ((idx >= lo) & (idx < hi)).astype(jnp.float32)
+
+
+def _policy_logprobs(params, tokens, cfg: ModelConfig, lora: Optional[LoraCtx],
+                     tc: TrainConfig, enc_embeds=None):
+    """Token logprobs [R, S-1] for predicting tokens[:, 1:]."""
+    h, _, aux = forward_seq(params, tokens, cfg, lora, None,
+                            enc_embeds=enc_embeds)
+    if not cfg.tie_embeddings:
+        vocab_w = params["lm_head"]      # V-sharded → vocab-parallel loss
+    else:
+        # tied: embed.T is d-sharded; reshard to V-sharded ONCE per
+        # microbatch (one all-to-all of the table) so the LSE/gather run
+        # vocab-parallel instead of all-gathering the matrix per chunk
+        # (§Perf B1 — tied archs only)
+        vocab_w = constrain(params["embed"].T, None, "tp")
+    lp, ent = token_logprobs_chunked(h[:, :-1], vocab_w, tokens[:, 1:],
+                                     cfg.logit_softcap,
+                                     use_kernel=tc.use_logprob_kernel)
+    return lp, ent, aux
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Returns train_step(base_params, lora, opt_state, batch) ->
+    (new_lora, new_opt_state, metrics). batch keys:
+      tokens [R, S] int32, prompt_lens [R], total_lens [R], rewards [R],
+      behavior_logprobs [R, S-1] (optional), enc_embeds (encdec only).
+    R = num_groups * tc.group_size; groups contiguous.
+    """
+
+    def loss_fn(trainable_tree, base_params, batch):
+        if tc.trainable == "lora":
+            params = base_params
+            lora = single_ctx(trainable_tree, cfg)
+        else:
+            params = trainable_tree
+            lora = None
+        tokens = batch["tokens"]
+        R, S = tokens.shape
+        assert R % tc.group_size == 0, (R, tc.group_size)
+        mask = _completion_mask(batch["prompt_lens"], batch["total_lens"], S)[:, :S - 1]
+        if "loss_mask" in batch:  # env/tool-provided tokens carry no loss
+            mask = mask * batch["loss_mask"][:, :S - 1]
+        adv = group_advantages(batch["rewards"], tc.group_size)
+
+        new_lp, ent, aux = _policy_logprobs(params, tokens, cfg, lora, tc,
+                                            batch.get("enc_embeds"))
+        if tc.recompute_old or "behavior_logprobs" not in batch:
+            old_lp = jax.lax.stop_gradient(new_lp)
+        else:
+            old_lp = batch["behavior_logprobs"]
+        ref_lp = None
+        if tc.kl_coef:
+            ref_lp, _, _ = _policy_logprobs(params, tokens, cfg, None, tc,
+                                            batch.get("enc_embeds"))
+            ref_lp = jax.lax.stop_gradient(ref_lp)
+        out = grpo_loss(new_lp, old_lp, adv, mask, ref_lp,
+                        clip_eps=tc.clip_eps, kl_coef=tc.kl_coef,
+                        entropy=ent, ent_coef=tc.ent_coef)
+        loss = out.loss + 0.01 * aux          # MoE load-balance aux
+        metrics = {"loss": out.loss, "pg_loss": out.pg_loss, "kl": out.kl,
+                   "entropy": out.entropy, "ratio_mean": out.ratio_mean,
+                   "clip_frac": out.clip_frac, "aux": aux}
+        return loss, metrics
+
+    def train_step(base_params, lora_tree, opt_state, batch):
+        trainable = lora_tree if tc.trainable == "lora" else base_params
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if tc.accum_steps == 1:
+            (loss, metrics), grads = grad_fn(trainable, base_params, batch)
+        else:
+            A = tc.accum_steps
+
+            def micro(carry, mb):
+                g_acc, m_acc = carry
+                (_, m), g = grad_fn(trainable, base_params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                     g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+                return (g_acc, m_acc), None
+
+            zeros_g = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32),
+                                   trainable)
+            zeros_m = {k: jnp.zeros((), jnp.float32) for k in
+                       ["loss", "pg_loss", "kl", "entropy", "ratio_mean",
+                        "clip_frac", "aux"]}
+            mbs = jax.tree.map(
+                lambda t: t.reshape((A, t.shape[0] // A) + t.shape[1:]), batch)
+            (grads, msum), _ = jax.lax.scan(micro, (zeros_g, zeros_m), mbs)
+            grads = jax.tree.map(lambda g: g / A, grads)
+            metrics = jax.tree.map(lambda m: m / A, msum)
+
+        new_trainable, new_opt, gnorm = adamw_update(trainable, grads,
+                                                     opt_state, tc.adamw)
+        metrics["grad_norm"] = gnorm
+        metrics["reward_mean"] = jnp.mean(batch["rewards"])
+        return new_trainable, new_opt, metrics
+
+    return train_step
+
+
+def init_opt_state(cfg: ModelConfig, tc: TrainConfig, base_params, lora_tree):
+    return adamw_init(lora_tree if tc.trainable == "lora" else base_params)

@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the host's
+real single device (the 512-device override belongs to dryrun.py ONLY)."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import REGISTRY, reduced
+from repro.data import tokenizer as tok
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny(name: str, **over):
+    """Reduced fp32 config of an assigned arch (dropless MoE for exactness)."""
+    cfg = reduced(REGISTRY[name], dtype="float32", **over)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+def tiny_lm(name="granite-3-2b", **over):
+    """Tiny config with the rollout tokenizer vocab (for engine tests)."""
+    return dataclasses.replace(tiny(name, **over), vocab_size=tok.VOCAB_SIZE)

@@ -1,0 +1,147 @@
+"""End-to-end system behaviour: the real threaded runtime (actual JAX
+rollout + GRPO), fault injection + restart, and the agentic tool path."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_lm
+from repro.checkpoint.store import (latest_checkpoint, load_checkpoint,
+                                    save_checkpoint)
+from repro.core.manager import MultiTaskManager, TaskSpec
+from repro.core.metrics import summarize
+from repro.core.runtime import FailureInjector, MARLaaSRuntime, RuntimeConfig
+from repro.models import init_params
+
+pytestmark = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def base():
+    cfg = tiny_lm("granite-3-2b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _specs(n_steps=2):
+    return [
+        TaskSpec("gsm-0", "gsm8k", group_size=2, num_groups=1,
+                 max_new_tokens=5, target_steps=n_steps),
+        TaskSpec("amc-0", "amc12", group_size=2, num_groups=1,
+                 max_new_tokens=6, target_steps=n_steps),
+    ]
+
+
+def test_async_runtime_completes_and_is_on_policy(base):
+    cfg, params = base
+    rt = MARLaaSRuntime(cfg, params, RuntimeConfig(policy="marlaas",
+                                                   max_len=48, seed=0))
+    for s in _specs():
+        rt.submit_task(s)
+    rt.run(timeout_s=300)
+    assert rt.mgr.all_done()
+    for st in rt.mgr.tasks.values():
+        assert st.version == st.steps_done == st.spec.target_steps
+    s = summarize(rt.mgr, rt.rec)
+    assert s["total_steps"] == 4 and s["ttfs_mean_s"] > 0
+
+
+def test_sync_and_sequential_policies_complete(base):
+    cfg, params = base
+    for pol in ("multilora_sync", "single_disagg"):
+        rt = MARLaaSRuntime(cfg, params, RuntimeConfig(policy=pol,
+                                                       max_len=48, seed=1))
+        for s in _specs(1):
+            rt.submit_task(s)
+        rt.run(timeout_s=300)
+        assert rt.mgr.all_done(), pol
+
+
+def test_failure_restart_resumes_exactly(base, tmp_path):
+    """Crash mid-run, restore from the atomic snapshot, finish: versions and
+    adapter state must continue from the last committed step."""
+    cfg, params = base
+    ckpt = str(tmp_path / "ckpt")
+    rt = MARLaaSRuntime(cfg, params,
+                        RuntimeConfig(policy="marlaas", max_len=48, seed=2,
+                                      checkpoint_dir=ckpt, checkpoint_every=1),
+                        failure=FailureInjector(fail_after_commits=2))
+    for s in _specs(3):
+        rt.submit_task(s)
+    with pytest.raises(RuntimeError, match="injected node failure"):
+        rt.run(timeout_s=300)
+    assert latest_checkpoint(ckpt) is not None
+
+    rt2 = MARLaaSRuntime(cfg, params, RuntimeConfig(policy="marlaas",
+                                                    max_len=48, seed=3))
+    load_checkpoint(latest_checkpoint(ckpt), rt2.mgr)
+    pre_steps = sum(st.steps_done for st in rt2.mgr.tasks.values())
+    assert pre_steps >= 1
+    for tid, st in rt2.mgr.tasks.items():     # envs/datagens for loaded tasks
+        from repro.envs.tasks import make_env
+        import random
+        rt2.envs[tid] = make_env(st.spec.env_name)
+        rt2.datagens[tid] = random.Random(7)
+    rt2.run(timeout_s=300)
+    assert rt2.mgr.all_done()
+    for st in rt2.mgr.tasks.values():
+        assert st.steps_done == st.spec.target_steps
+
+
+def test_agentic_tool_call_freezes_and_resumes(base):
+    """Force a CALL token mid-generation; the engine must dispatch the tool,
+    freeze the row, force-feed the response with loss_mask=0, and resume."""
+    import random
+    from repro.data import tokenizer as tok
+    from repro.envs.tasks import make_env
+    from repro.rollout.engine import (RolloutEngine, RolloutRequest,
+                                      to_trajectory_batch)
+    cfg, params = base
+    env = make_env("search", kb_size=8)
+    env.env_latency_mean = 0.05
+    rng = random.Random(0)
+    prompt, truth = env.sample_prompt(rng)
+    eng = RolloutEngine(cfg, params, max_len=64, seed=0)
+    eng._build(1)
+    orig_step = eng._step_fn
+    count = {"n": 0}
+
+    def forced_call_step(*args):
+        nxt, lp, cache = orig_step(*args)
+        count["n"] += 1
+        if count["n"] == 2:                   # second decode step emits CALL
+            nxt = jnp.full_like(nxt, tok.CALL)
+        return nxt, lp, cache
+
+    eng._step_fn = forced_call_step
+    reqs = [RolloutRequest("s", 0, prompt, truth, env, max_new_tokens=12)]
+    from repro.lora.adapters import init_lora
+    res, stats = eng.generate(reqs, [init_lora(jax.random.PRNGKey(1), cfg)])
+    assert stats.env_wait_seconds > 0, "tool call never dispatched"
+    toks = res[0]["tokens"]
+    assert tok.CALL in toks and tok.RESP in toks and tok.ENDRESP in toks
+    tb = to_trajectory_batch(res, "s", 0, 1)
+    lm = tb.meta["loss_mask"]
+    # force-fed RESP tokens carry zero loss
+    resp_positions = [i for i, t in enumerate(toks) if t in
+                      (tok.RESP, tok.ENDRESP)]
+    assert all(lm[0, p - 1] == 0.0 for p in resp_positions)
+
+
+def test_straggler_budget_returns_partial_rows(base):
+    """Rows that never emit EOS finish at the token budget (no stall)."""
+    cfg, params = base
+    from repro.envs.tasks import make_env
+    from repro.rollout.engine import RolloutEngine, RolloutRequest
+    from repro.lora.adapters import init_lora
+    import random
+    env = make_env("gsm8k")
+    rng = random.Random(1)
+    prompt, truth = env.sample_prompt(rng)
+    eng = RolloutEngine(cfg, params, max_len=64, seed=5)
+    reqs = [RolloutRequest("g", 0, prompt, truth, env, max_new_tokens=4)]
+    res, stats = eng.generate(reqs, [init_lora(jax.random.PRNGKey(2), cfg)])
+    assert len(res[0]["tokens"]) <= len(prompt) + 4 + 33

@@ -1,0 +1,103 @@
+"""Pallas kernels vs pure-jnp oracles (ref.py) across shape/dtype sweeps
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.sgmv import sgmv
+from repro.kernels.gqa_decode import gqa_decode
+from repro.kernels.token_logprob import token_logprob_flat
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("R,d,r,dout,T", [
+    (32, 64, 8, 48, 3), (100, 256, 16, 512, 5), (17, 48, 4, 40, 2),
+    (64, 128, 32, 256, 8), (8, 72, 8, 72, 1), (256, 64, 8, 64, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sgmv_sweep(R, d, r, dout, T, dtype):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (R, d), dtype)
+    a = (jax.random.normal(ks[1], (T, d, r), jnp.float32) * 0.1).astype(dtype)
+    b = (jax.random.normal(ks[2], (T, r, dout), jnp.float32) * 0.1).astype(dtype)
+    ids = jax.random.randint(ks[3], (R,), 0, T)
+    y = sgmv(x, a, b, ids)
+    want = ref.sgmv_ref(x, a, b, ids)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_sgmv_empty_group():
+    """Tasks with zero rows must not corrupt neighbours."""
+    x = jax.random.normal(KEY, (24, 32), jnp.float32)
+    a = jax.random.normal(KEY, (4, 32, 4), jnp.float32) * 0.1
+    b = jax.random.normal(KEY, (4, 4, 16), jnp.float32) * 0.1
+    ids = jnp.array([0] * 12 + [3] * 12)          # groups 1, 2 empty
+    np.testing.assert_allclose(np.asarray(sgmv(x, a, b, ids)),
+                               np.asarray(ref.sgmv_ref(x, a, b, ids)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,H,KVH,hd,S", [
+    (2, 4, 2, 16, 64), (3, 8, 2, 32, 128), (2, 4, 4, 16, 64),
+    (1, 12, 2, 16, 96), (2, 16, 8, 64, 256),
+])
+@pytest.mark.parametrize("softcap,window", [(0.0, 0), (50.0, 0), (0.0, 24)])
+def test_gqa_decode_sweep(B, H, KVH, hd, S, softcap, window):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    ck = jax.random.normal(ks[1], (B, S, KVH, hd), jnp.float32)
+    cv = jax.random.normal(ks[2], (B, S, KVH, hd), jnp.float32)
+    pos = jax.random.randint(ks[3], (B,), 1, S)
+    out = gqa_decode(q, ck, cv, pos, bs=32, softcap=softcap, window=window)
+    want = ref.gqa_decode_ref(q, ck, cv, pos, softcap=softcap, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_decode_bf16_cache():
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (2, 4, 16), jnp.bfloat16)
+    ck = jax.random.normal(ks[1], (2, 64, 2, 16), jnp.bfloat16)
+    cv = jax.random.normal(ks[2], (2, 64, 2, 16), jnp.bfloat16)
+    pos = jnp.array([13, 64])
+    out = gqa_decode(q, ck, cv, pos, bs=32)
+    want = ref.gqa_decode_ref(q, ck, cv, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("R,d,V", [(16, 32, 64), (50, 48, 100), (8, 24, 52),
+                                   (128, 64, 512)])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_token_logprob_sweep(R, d, V, softcap):
+    ks = jax.random.split(KEY, 3)
+    h = jax.random.normal(ks[0], (R, d), jnp.float32)
+    w = jax.random.normal(ks[1], (d, V), jnp.float32) * 0.3
+    t = jax.random.randint(ks[2], (R,), 0, V)
+    lp, ent = token_logprob_flat(h, w, t, bm=8, bv=32, bk=16, softcap=softcap)
+    want_lp, want_ent = ref.token_logprob_ref(h, w, t, softcap)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(want_lp),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ent), np.asarray(want_ent),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ops_wrappers_shapes():
+    """ops.py public API: [B, S, ...] wrappers."""
+    B, S, d, V = 2, 8, 16, 40
+    ks = jax.random.split(KEY, 3)
+    h = jax.random.normal(ks[0], (B, S, d), jnp.float32)
+    w = jax.random.normal(ks[1], (d, V), jnp.float32)
+    t = jax.random.randint(ks[2], (B, S), 0, V)
+    lp, ent = ops.token_logprob(h, w, t)
+    assert lp.shape == (B, S) and ent.shape == (B, S)
+    want_lp, _ = ref.token_logprob_ref(h, w, t)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(want_lp),
+                               rtol=1e-4, atol=1e-4)

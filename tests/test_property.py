@@ -1,0 +1,141 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.store import flat_to_tree, tree_to_flat
+from repro.core.admission import AdmissionConfig, AdmissionController
+from repro.core.manager import MultiTaskManager, TaskSpec
+from repro.configs import get_config
+from repro.data import tokenizer as tok
+from repro.kernels import ref
+from repro.kernels.sgmv import sgmv
+from repro.rl.grpo import group_advantages
+from repro.rl.types import TrajectoryBatch
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(groups=st.integers(1, 6), g=st.integers(2, 8),
+       scale=st.floats(0.1, 100.0),
+       seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_advantages_scale_invariant_and_centered(groups, g, scale, seed):
+    """Group advantages: per-group mean 0; invariant to affine reward scaling."""
+    r = np.random.RandomState(seed).uniform(0, 1, groups * g).astype(np.float32)
+    a1 = np.asarray(group_advantages(jnp.asarray(r), g))
+    a2 = np.asarray(group_advantages(jnp.asarray(r * scale + 3.0), g))
+    np.testing.assert_allclose(a1.reshape(groups, g).mean(1), 0, atol=1e-4)
+    if r.reshape(groups, g).std(1).min() > 1e-3:
+        np.testing.assert_allclose(a1, a2, rtol=0.2, atol=0.05)
+
+
+@given(ops=st.lists(st.sampled_from(["push_a", "push_b", "pop"]),
+                    min_size=1, max_size=40))
+@settings(**SETTINGS)
+def test_buffer_fifo_property(ops):
+    """Q_buffer pops in exact global FIFO order, whatever the interleave."""
+    m = MultiTaskManager()
+    vers = {"a": 0, "b": 0}
+    for tid in vers:
+        m.submit(TaskSpec(tid, "gsm8k", target_steps=10 ** 6))
+        m.admit(tid)
+    pushed, popped = [], []
+    for op in ops:
+        if op == "pop":
+            b = m.pop_batch()
+            if b is not None:
+                popped.append((b.task_id, b.version))
+                m.commit(b.task_id, None, None, b.version)
+        else:
+            tid = op[-1]
+            if m.next_policy(tid) is None:
+                continue
+            v = vers[tid]
+            z = np.zeros((1, 2), np.float32)
+            m.enqueue(TrajectoryBatch(tid, v, z.astype(np.int32),
+                                      np.ones(1, np.int32),
+                                      np.full(1, 2, np.int32),
+                                      np.zeros(1, np.float32), 1))
+            pushed.append((tid, v))
+            vers[tid] += 1
+    assert popped == pushed[:len(popped)]
+
+
+@given(budget_units=st.integers(1, 10),
+       sizes=st.lists(st.integers(1, 4), min_size=1, max_size=12))
+@settings(**SETTINGS)
+def test_admission_never_exceeds_budget(budget_units, sizes):
+    cfg = get_config("granite-3-2b")
+    unit = 10 ** 6
+    ac = AdmissionController(cfg, AdmissionConfig(
+        memory_budget_bytes=budget_units * unit, strict=True))
+    # monkeypatch the estimator to controlled sizes
+    import repro.core.admission as adm
+    orig = adm.task_state_bytes
+    try:
+        it = iter(sizes)
+        sizes_map = {}
+
+        def fake(cfg_, spec, prompt_len=64, dtype_bytes=2):
+            return sizes_map[spec.task_id]
+
+        adm.task_state_bytes = fake
+        for i, s in enumerate(sizes):
+            sizes_map[f"t{i}"] = s * unit
+            ac.try_admit(TaskSpec(f"t{i}", "gsm8k"))
+            assert ac.used_bytes <= budget_units * unit or len(ac.admitted()) == 1
+    finally:
+        adm.task_state_bytes = orig
+
+
+@given(text=st.text(alphabet=sorted(tok.CHAR_TO_ID), max_size=50))
+@settings(**SETTINGS)
+def test_tokenizer_roundtrip(text):
+    assert tok.decode(tok.encode(text)) == text
+
+
+@given(seed=st.integers(0, 2 ** 16), R=st.integers(1, 40),
+       T=st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_sgmv_random_shapes(seed, R, T):
+    rs = np.random.RandomState(seed)
+    d = int(rs.choice([16, 40, 64]))
+    r = int(rs.choice([4, 8]))
+    dout = int(rs.choice([24, 32, 80]))
+    x = jnp.asarray(rs.randn(R, d).astype(np.float32))
+    a = jnp.asarray(0.1 * rs.randn(T, d, r).astype(np.float32))
+    b = jnp.asarray(0.1 * rs.randn(T, r, dout).astype(np.float32))
+    ids = jnp.asarray(rs.randint(0, T, R).astype(np.int32))
+    np.testing.assert_allclose(np.asarray(sgmv(x, a, b, ids)),
+                               np.asarray(ref.sgmv_ref(x, a, b, ids)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_checkpoint_tree_roundtrip(seed):
+    rs = np.random.RandomState(seed)
+    tree = {"layers": {"attn_q": {"a": rs.randn(2, 3), "b": rs.randn(3)}},
+            "step": np.int32(7)}
+    back = flat_to_tree(tree_to_flat(tree))
+    assert back["layers"]["attn_q"]["a"].shape == (2, 3)
+    np.testing.assert_allclose(back["layers"]["attn_q"]["a"],
+                               tree["layers"]["attn_q"]["a"])
+    assert int(back["step"]) == 7
+
+
+@given(p_len=st.integers(1, 6), gen=st.integers(1, 6))
+@settings(**SETTINGS)
+def test_completion_mask_counts_generated(p_len, gen):
+    S = p_len + gen + 2
+    tb = TrajectoryBatch(
+        task_id="t", version=0,
+        tokens=np.zeros((1, S), np.int32),
+        prompt_lens=np.array([p_len], np.int32),
+        total_lens=np.array([p_len + gen], np.int32),
+        rewards=np.zeros(1, np.float32), group_size=1)
+    m = tb.completion_mask()
+    assert m.sum() == gen            # exactly one loss slot per generated tok
+    assert m[0, p_len - 1] == 1.0 and m[0, p_len + gen - 1] == 0.0

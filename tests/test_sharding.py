@@ -1,0 +1,101 @@
+"""Sharding-spec construction + a full lower/compile of the production step
+functions on a degenerate (1,1) host mesh (the 512-way meshes are exercised
+by launch/dryrun.py, which owns the device-count override)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import REGISTRY, get_config, shapes_for, ShapeConfig
+from repro.launch import shardings as sh, specs as sp
+from repro.launch.mesh import make_host_mesh
+from repro.launch.roofline import parse_collectives
+from repro.train.sharding import mesh_context
+
+
+def _fake_mesh_16x16():
+    """AbstractMesh stands in for the 256-chip mesh (no devices needed)."""
+    return jax.sharding.AbstractMesh(
+        (16, 16), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.mark.parametrize("name", list(REGISTRY))
+def test_param_specs_cover_every_leaf(name):
+    cfg = get_config(name)
+    mesh = _fake_mesh_16x16()
+    shapes = sp.eval_shapes(cfg)
+    spec = sh.param_specs(cfg, shapes["params"], mesh)
+    flat_shapes = sh._flatten_with_paths(shapes["params"])
+    flat_specs = sh._flatten_with_paths(spec)
+    assert set(flat_shapes) == set(flat_specs)
+    for path, sds in flat_shapes.items():
+        ps = flat_specs[path]
+        assert isinstance(ps, P)
+        assert len(ps) <= len(sds.shape), path
+        # divisibility: every sharded dim divides evenly
+        for i, ax in enumerate(ps):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            k = int(np.prod([mesh.shape[a] for a in axes]))
+            assert sds.shape[i] % k == 0, (path, sds.shape, ps)
+
+
+@pytest.mark.parametrize("name", ["granite-3-2b", "deepseek-moe-16b",
+                                  "mamba2-780m", "zamba2-1.2b"])
+def test_cache_and_lora_specs_ranks(name):
+    cfg = get_config(name)
+    mesh = _fake_mesh_16x16()
+    shapes = sp.eval_shapes(cfg)
+    lspec = sh.lora_specs(cfg, shapes["lora"], mesh)
+    for path, ps in sh._flatten_with_paths(lspec).items():
+        sds = sh._flatten_with_paths(shapes["lora"])[path]
+        assert len(ps) <= len(sds.shape), path
+    serve = sp.serve_specs(cfg, [s for s in shapes_for(cfg)
+                                 if s.kind == "decode"][0])
+    cspec = sh.cache_specs(cfg, serve["cache"], mesh, 128)
+    for path, ps in sh._flatten_with_paths(cspec).items():
+        sds = sh._flatten_with_paths(serve["cache"])[path]
+        assert len(ps) <= len(sds.shape), (path, ps, sds.shape)
+
+
+def test_full_step_lowering_on_host_mesh(rng_key):
+    """The exact dry-run path (shardings attached, jit, lower, compile) on
+    the degenerate host mesh with a reduced config."""
+    from conftest import tiny
+    cfg = tiny("granite-3-2b")
+    mesh = make_host_mesh()
+    shape = ShapeConfig("t", 64, 8, "train")
+    with mesh_context(mesh):
+        shapes = sp.eval_shapes(cfg)
+        pspec = sh.param_specs(cfg, shapes["params"], mesh)
+        lspec = sh.lora_specs(cfg, shapes["lora"], mesh)
+        ospec = sh.opt_specs(lspec)
+        batch = sp.train_batch_specs(cfg, shape)
+        bspec = sh.batch_specs(batch, mesh, shape.global_batch)
+        from repro.train.train_step import TrainConfig, make_train_step
+        fn = make_train_step(cfg, TrainConfig(group_size=2, accum_steps=2))
+        compiled = jax.jit(fn, donate_argnums=(1, 2)).lower(
+            sh.with_shardings(shapes["params"], pspec, mesh),
+            sh.with_shardings(shapes["lora"], lspec, mesh),
+            sh.with_shardings(shapes["opt"], ospec, mesh),
+            sh.with_shardings(batch, bspec, mesh)).compile()
+        assert compiled.cost_analysis() is not None
+
+
+def test_collective_parser():
+    hlo = """
+  %ag = bf16[16,512]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[128]{0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %cp = bf16[64]{0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    st = parse_collectives(hlo, default_group=256)
+    assert st.count == {"all-gather": 1, "all-reduce": 1,
+                        "collective-permute": 1}
+    ag = 16 * 512 * 2 * 15 / 16
+    ar = 2 * 128 * 4 * 3 / 4
+    assert abs(st.per_op["all-gather"] - ag) < 1
+    assert abs(st.per_op["all-reduce"] - ar) < 1
+    assert st.per_op["collective-permute"] == 64 * 2
