@@ -49,6 +49,9 @@ class TaskState:
     steps_done: int = 0
     status: str = "pending"         # pending|admitted|finished
     rollout_issued_version: int = -1   # highest v handed to the rollout engine
+    rollout_inflight_rows: int = 0     # rows currently resident/queued in the
+                                       # continuous engine for this task
+    rollout_rows_total: int = 0        # lifetime rows streamed through slots
     submitted_at: float = 0.0
     admitted_at: float = 0.0
     first_step_at: Optional[float] = None
@@ -105,6 +108,26 @@ class MultiTaskManager:
             return [tid for tid, st in self.tasks.items()
                     if st.status == "admitted" and not st.done
                     and st.rollout_issued_version < st.version]
+
+    # -- continuous-rollout occupancy (slot engine) -----------------------
+    def rollout_started(self, task_id: str, rows: int):
+        """The streaming worker handed `rows` requests for this task to the
+        slot engine (they are queued or resident until completion)."""
+        with self._lock:
+            st = self.tasks[task_id]
+            st.rollout_inflight_rows += rows
+            st.rollout_rows_total += rows
+
+    def rollout_row_done(self, task_id: str):
+        with self._lock:
+            st = self.tasks[task_id]
+            st.rollout_inflight_rows = max(0, st.rollout_inflight_rows - 1)
+
+    def inflight_rows(self) -> Dict[str, int]:
+        with self._lock:
+            return {tid: st.rollout_inflight_rows
+                    for tid, st in self.tasks.items()
+                    if st.rollout_inflight_rows > 0}
 
     # -- Algorithm 1, line 8: enqueue -------------------------------------
     def enqueue(self, batch: TrajectoryBatch):

@@ -9,6 +9,10 @@
   steps/hr       — committed train steps per wall-clock hour.
   TTFS           — time-to-first-step per task (submission → first commit).
   TPTS           — time-per-train-step once underway.
+  slot util %    — continuous-batching decode-slot occupancy: time-weighted
+                   fraction of the engine's decode slots holding a live row
+                   (the §4.1 quantity round-fused scheduling wastes at the
+                   end-of-round barrier).
 
 Both runtimes (real threads and virtual-time simulator) record through this
 same recorder, so benchmark tables are produced by one code path.
@@ -48,6 +52,7 @@ class MetricsRecorder:
     def __init__(self, pools: Dict[str, int]):
         self.pools = dict(pools)
         self.intervals: List[Interval] = []
+        self.slot_samples: List[Tuple[float, int, int]] = []  # (t, occ, cap)
         self.t0: Optional[float] = None
         self.t1: Optional[float] = None
 
@@ -59,6 +64,25 @@ class MetricsRecorder:
         self.intervals.append(Interval(pool, phase, task_id, start, end, devices))
         self.t0 = start if self.t0 is None else min(self.t0, start)
         self.t1 = end if self.t1 is None else max(self.t1, end)
+
+    def record_slot_sample(self, t: float, occupied: int, capacity: int):
+        """Point sample of continuous-engine slot occupancy (step-function
+        timeline: the value holds until the next sample)."""
+        if capacity <= 0:
+            return
+        self.slot_samples.append((t, occupied, capacity))
+
+    def slot_utilization_pct(self) -> float:
+        """Time-weighted mean of occupied/capacity over the sampled span."""
+        ss = self.slot_samples
+        if len(ss) < 2:
+            return 0.0
+        weighted = total = 0.0
+        for (t0, occ, cap), (t1, _, _) in zip(ss, ss[1:]):
+            dt = max(0.0, t1 - t0)
+            weighted += dt * occ / cap
+            total += dt
+        return 100.0 * weighted / total if total > 0 else 0.0
 
     # ------------------------------------------------------------------
     def span(self) -> float:
@@ -127,5 +151,6 @@ def summarize(manager, rec: MetricsRecorder) -> Dict[str, float]:
         "ttfs_max_s": max(ttfs) if ttfs else 0.0,
         "tpts_mean_s": sum(tpts) / len(tpts) if tpts else 0.0,
         "time_hrs": span / 3600.0,
+        "slot_util_pct": rec.slot_utilization_pct(),
     }
     return out

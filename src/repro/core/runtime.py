@@ -1,9 +1,14 @@
 """Real (threaded) MARLaaS runtime: the disaggregated engines of Fig 5
 executing actual JAX rollout + GRPO training on this host.
 
-  RolloutWorker thread — gathers every task with an unconsumed policy
-    version, fuses their requests into ONE multi-LoRA batched generate()
-    (paper §4.5), verifies rewards, enqueues (t, τ, v) into Q_buffer.
+  RolloutWorker thread — streaming (default, `rollout_mode="continuous"`):
+    feeds per-task requests into the persistent slot engine's cross-task
+    queue the moment each task's `next_policy` version becomes consumable,
+    pumps the engine (refill freed slots, one decode step), and assembles
+    completed trajectories from the engine's completion stream — so decode
+    never drains between tenant groups (paper §4.1/§4.5). The legacy
+    `rollout_mode="round"` fuses one multi-LoRA generate() per round and
+    blocks on its slowest row.
   Trainer thread — pops FIFO, runs the task's PolicyUpdate, commits v+1.
   Environment interactions run on the engine's tool thread-pool and overlap
   decode of the other rows (paper's rollout/env overlap).
@@ -33,8 +38,8 @@ import numpy as np
 from repro.configs import ModelConfig
 from repro.envs.tasks import make_env
 from repro.lora.adapters import init_lora
-from repro.rollout.engine import (RolloutEngine, RolloutRequest,
-                                  to_trajectory_batch)
+from repro.rollout.engine import (ContinuousRolloutEngine, RolloutEngine,
+                                  RolloutRequest, to_trajectory_batch)
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_step import TrainConfig, init_opt_state, make_train_step
 from .admission import AdmissionConfig, AdmissionController
@@ -45,6 +50,9 @@ from .metrics import MetricsRecorder
 @dataclass
 class RuntimeConfig:
     policy: str = "marlaas"           # marlaas | multilora_sync | single_disagg
+    rollout_mode: str = "continuous"  # continuous (slot engine) | round (fused)
+    max_slots: int = 8                # decode slots in the continuous engine
+    max_adapter_slots: int = 8        # stacked-LoRA capacity (tenants resident)
     max_len: int = 96
     use_kernel: bool = False
     seed: int = 0
@@ -89,6 +97,13 @@ class MARLaaSRuntime:
         self._train_cfg_base = train_cfg or TrainConfig()
         self._train_steps: Dict[int, object] = {}   # group_size -> jitted fn
         self._tool_pool = ThreadPoolExecutor(max_workers=rcfg.env_threads)
+        self.cengine = ContinuousRolloutEngine(
+            cfg, base_params, max_slots=rcfg.max_slots,
+            max_adapters=rcfg.max_adapter_slots, max_len=rcfg.max_len,
+            use_kernel=rcfg.use_kernel, seed=rcfg.seed,
+            tool_executor=self._tool_pool)
+        self._adapter_slot: Dict[str, int] = {}    # task -> stacked-LoRA slot
+        self._free_adapter_slots = list(range(rcfg.max_adapter_slots))
         self._stop = threading.Event()
         self.failure = failure
         self.error: Optional[BaseException] = None
@@ -169,6 +184,9 @@ class MARLaaSRuntime:
 
     def _rollout_loop(self):
         try:
+            if self.rcfg.rollout_mode == "continuous":
+                self._rollout_loop_continuous()
+                return
             while not self._stop.is_set():
                 did = self._rollout_round()
                 if not did:
@@ -178,6 +196,103 @@ class MARLaaSRuntime:
         except BaseException as e:       # surface to the driver
             self.error = e
             self._stop.set()
+
+    # -- streaming rollout worker (continuous slot engine) -----------------
+    def _acquire_adapter_slot(self, tid: str) -> Optional[int]:
+        """Stable stacked-LoRA slot per task; reclaims slots of finished
+        tasks with nothing resident in the engine."""
+        if tid in self._adapter_slot:
+            return self._adapter_slot[tid]
+        if not self._free_adapter_slots:
+            for t2 in list(self._adapter_slot):
+                st2 = self.mgr.tasks[t2]
+                if st2.done and st2.rollout_inflight_rows == 0:
+                    self._free_adapter_slots.append(
+                        self._adapter_slot.pop(t2))
+        if not self._free_adapter_slots:
+            return None
+        slot = self._free_adapter_slots.pop()
+        self._adapter_slot[tid] = slot
+        return slot
+
+    def _feed_continuous(self) -> bool:
+        """Submit every consumable (task, version) round into the engine
+        queue. Called from the rollout thread only."""
+        fed = False
+        for tid in self.mgr.rollout_ready_tasks():
+            slot = self._acquire_adapter_slot(tid)
+            if slot is None:
+                continue          # all adapter slots busy; task stays ready
+            np_ = self.mgr.next_policy(tid)
+            if np_ is None:
+                continue
+            version, adapters = np_
+            self.cengine.set_adapters(slot, adapters)
+            reqs = self._build_requests([tid], {tid: slot})
+            self.mgr.rollout_started(tid, len(reqs))
+            for r in reqs:
+                self.cengine.submit(r, meta={"task_id": tid,
+                                             "version": version})
+            fed = True
+        return fed
+
+    def _flush_decode_segment(self, now: float):
+        if self._seg_tasks and self._seg_t0 is not None and now > self._seg_t0:
+            self.rec.record("rollout", "decode",
+                            "+".join(sorted(self._seg_tasks)),
+                            self._seg_t0, now,
+                            self.rcfg.rollout_pool_devices)
+        self._seg_t0 = now
+        self._seg_tasks = frozenset()
+
+    def _rollout_loop_continuous(self):
+        eng = self.cengine
+        rounds: Dict[tuple, list] = {}      # (tid, v) -> completions so far
+        self._seg_tasks: frozenset = frozenset()
+        self._seg_t0: Optional[float] = None
+        last_slot_sample = None
+        while not self._stop.is_set():
+            fed = self._feed_continuous()
+            progressed = eng.step()
+            now = time.monotonic()
+            occ, cap = eng.occupancy()
+            # step-function timeline: sample only on occupancy change (idle
+            # spins would otherwise append hundreds of samples per second)
+            if (occ, cap) != last_slot_sample:
+                self.rec.record_slot_sample(now, occ, cap)
+                last_slot_sample = (occ, cap)
+            # decode timeline: one interval per contiguous occupant-set run,
+            # task_id joined with "+" (fused multi-tenant decode)
+            tasks_now = eng.occupant_tasks()
+            if tasks_now != self._seg_tasks:
+                self._flush_decode_segment(now)
+                self._seg_tasks = tasks_now
+            for comp in eng.drain_completions():
+                tid = comp.meta["task_id"]
+                version = comp.meta["version"]
+                self.mgr.rollout_row_done(tid)
+                batch = rounds.setdefault((tid, version), [])
+                batch.append(comp)
+                spec = self.mgr.tasks[tid].spec
+                if len(batch) == spec.rows_per_batch:
+                    del rounds[(tid, version)]
+                    # completions arrive in eviction order; GRPO groups are
+                    # contiguous rows sharing a prompt, so restore
+                    # submission order before packing
+                    batch.sort(key=lambda c: c.submit_index)
+                    tb = to_trajectory_batch(batch, tid, version,
+                                             spec.group_size,
+                                             pad_to=self.rcfg.max_len)
+                    self.mgr.enqueue(tb)
+                    progressed = True
+            if not progressed and not fed:
+                if self.mgr.all_done() and eng.idle():
+                    break
+                time.sleep(0.002)
+        now = time.monotonic()
+        occ, cap = eng.occupancy()
+        self.rec.record_slot_sample(now, occ, cap)   # close the timeline
+        self._flush_decode_segment(now)
 
     # -- trainer ---------------------------------------------------------------
     def _train_one(self, tb) -> None:

@@ -5,10 +5,42 @@ all-reduce on scattered shards; DCN-friendly).
 
 Defined as functions, never module-level constants: importing this module
 must not touch jax device state (the dry-run pins a 512-device host platform
-before any jax import)."""
+before any jax import).
+
+Version compat: `jax.sharding.AxisType` (and the `axis_types=` kwarg on
+`jax.make_mesh`/`AbstractMesh`) only exists in newer JAX; on the pinned
+0.4.37 every axis is implicitly Auto. `make_mesh`/`make_abstract_mesh`
+feature-detect and fall back, so callers never touch `AxisType` directly."""
 from __future__ import annotations
 
 import jax
+
+
+def _auto_axis_types(n: int):
+    """(AxisType.Auto,) * n on JAX >= 0.5, else None (0.4.x is always Auto)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * n
+
+
+def make_mesh(shape, axes):
+    """`jax.make_mesh` with explicit Auto axis_types where supported."""
+    auto = _auto_axis_types(len(axes))
+    if auto is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=auto)
+
+
+def make_abstract_mesh(shape, axes):
+    """Device-less AbstractMesh across the 0.4.x / 0.5.x signature change:
+    new JAX takes (axis_sizes, axis_names, axis_types=...), 0.4.37 takes a
+    ((name, size), ...) shape tuple."""
+    auto = _auto_axis_types(len(axes))
+    if auto is None:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+    return jax.sharding.AbstractMesh(tuple(shape), tuple(axes),
+                                     axis_types=auto)
 
 
 def make_production_mesh(*, multi_pod: bool = False, kind: str = "train"):
@@ -21,12 +53,10 @@ def make_production_mesh(*, multi_pod: bool = False, kind: str = "train"):
     else:
         shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever this host actually has — used by tests/examples (1 device)."""
     n = len(jax.devices())
-    auto = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=auto)
+    return make_mesh((n, 1), ("data", "model"))

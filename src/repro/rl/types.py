@@ -4,14 +4,54 @@ A ``TrajectoryBatch`` is one task's rollout batch: prompts + generated
 completions, per-token logprobs sampled under policy version ``version``,
 and verifiable rewards from the environment. GRPO groups are contiguous:
 rows [g*G, (g+1)*G) share a prompt.
+
+``RolloutCompletion`` is the unit the continuous-batching engine emits:
+one finished request with its slot/timing metadata, streamed back to the
+scheduler as soon as the row evicts (no round barrier). A task's round of
+completions is packed into a ``TrajectoryBatch`` once all its rows arrive.
 """
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
 
 import numpy as np
+
+
+@dataclass
+class RolloutCompletion:
+    """One finished rollout request, as evicted from a decode slot."""
+    task_id: str
+    prompt_len: int
+    tokens: List[int]                 # prompt + completion
+    gen_logprobs: List[float]         # per generated token, under π_v
+    gen_loss_mask: List[float]        # 0.0 on force-fed (tool-response) tokens
+    truth: Any
+    env: Any
+    finish_reason: str = ""           # eos|budget|capacity|tool_timeout|aborted
+    slot: int = -1                    # decode slot the row occupied
+    sampled_tokens: int = 0           # tokens charged to max_new_tokens
+    forced_tokens: int = 0            # force-fed tokens (budget-exempt)
+    submit_index: int = -1            # engine-global submission order
+    submitted_at: float = 0.0
+    started_at: float = 0.0           # prefill/splice time (slot acquired)
+    finished_at: float = 0.0          # eviction time
+    finished_step: int = 0            # engine decode-step counter at eviction
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def to_result(self) -> Dict[str, Any]:
+        """The legacy per-request result dict `generate()` returns."""
+        return {
+            "task_id": self.task_id,
+            "prompt_len": self.prompt_len,
+            "tokens": list(self.tokens),
+            "gen_logprobs": list(self.gen_logprobs),
+            "gen_loss_mask": list(self.gen_loss_mask),
+            "truth": self.truth,
+            "env": self.env,
+            "finish_reason": self.finish_reason,
+        }
 
 
 @dataclass

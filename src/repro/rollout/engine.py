@@ -1,24 +1,42 @@
-"""Rollout engine (paper §4.1/§4.4/§4.5): cross-task multi-LoRA batched
+"""Rollout engines (paper §4.1/§4.4/§4.5): cross-task multi-LoRA batched
 generation with agentic tool-call force-feeding.
 
-vLLM's role in the paper, adapted to XLA's static shapes (DESIGN.md §3):
-rows from *different tenants* are batched into fixed-width slots with a
-per-row adapter id; decode is one jitted step; rows awaiting an external
-tool response are frozen (advance=0) while the rest of the batch keeps
-decoding — the intra-batch form of the paper's rollout/environment overlap.
+Two engines share one set of jitted kernels and one per-row sampling rule:
 
-The engine is synchronous at its API (`generate(requests)`); asynchrony
-across tasks is the scheduler's job (repro.core). Tool calls are executed
-through a caller-provided executor so the real runtime can run them on a
-thread pool while decode proceeds.
+``RolloutEngine.generate()`` — the round-fused baseline. One fixed batch
+runs to completion; every row waits for the slowest before the next round
+can start. This is the barrier MARLaaS measures against (§4.1).
+
+``ContinuousRolloutEngine`` — the slot model. A persistent pool of
+``max_slots`` decode slots holds rows from *any* tenant, each tagged with a
+per-slot adapter id into a fixed-capacity stacked-LoRA buffer. Decode is
+one jitted step over the pool and never drains: the moment a row finishes
+(EOS / sampled budget / cache capacity) it is evicted, its
+``RolloutCompletion`` streams back to the scheduler, and freed slots are
+refilled from a cross-task request queue — prefill of the incoming rows
+runs as its own jitted call (batched over every slot freed that step)
+whose KV/SSM state and sampled first tokens are spliced into the running
+pool at the freed slots. Rows awaiting an external tool response freeze
+(advance=0) while the rest of the pool keeps decoding.
+
+Determinism: sampling is per-row — each request carries a base PRNG key
+(``fold_in(master, request.seed or submit-index)``) folded with the row's
+own generated-token count. A row's tokens therefore depend only on its own
+(key, prefix), never on batch layout, so continuous-mode output matches
+one-shot ``generate()`` token-for-token for families without cross-row
+coupling (dense/hybrid; dropping-MoE capacity is batch-global).
+
+Budget: only *sampled* tokens (loss_mask == 1) count against
+``max_new_tokens``; force-fed tool-response tokens are budget-exempt, so a
+long tool response cannot terminate a row before it samples its answer.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
+from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +47,7 @@ from repro.data import tokenizer as tok
 from repro.envs.base import Env
 from repro.lora.adapters import batched_ctx, stack_adapters
 from repro.models import decode_step, forward_seq, init_cache, lm_logits
-from repro.rl.types import TrajectoryBatch
+from repro.rl.types import RolloutCompletion, TrajectoryBatch
 
 
 @dataclass
@@ -41,6 +59,8 @@ class RolloutRequest:
     env: Env
     max_new_tokens: int
     temperature: float = 1.0
+    seed: Optional[int] = None    # per-row key = fold_in(master, seed)
+                                  # (defaults to batch/submission index)
 
 
 @dataclass
@@ -50,52 +70,267 @@ class RolloutStats:
     decode_seconds: float = 0.0
     env_wait_seconds: float = 0.0
     wall_seconds: float = 0.0
+    # continuous-engine extras (zero for round-fused generate())
+    prefills: int = 0
+    refills: int = 0
+    completions: int = 0
+    tokens_generated: int = 0
+    sampled_tokens: int = 0
+    occupied_row_steps: int = 0    # Σ over decode steps of advanced rows
+    capacity_row_steps: int = 0    # decode_steps × max_slots
+
+    def slot_utilization(self) -> float:
+        if self.capacity_row_steps <= 0:
+            return 0.0
+        return self.occupied_row_steps / self.capacity_row_steps
+
+
+def _bucket_len(n: int) -> int:
+    return int(max(8, -(-int(n) // 8) * 8))
+
+
+def _sample_rows(logits, keys, counters, temps):
+    """Per-row categorical: row i uses fold_in(keys[i], counters[i]).
+
+    The sample depends only on the row's own (key, count, logits) — not on
+    batch width or slot position — which is what makes continuous batching
+    bit-reproduce one-shot generation.
+    """
+    scaled = logits / jnp.maximum(temps[:, None], 1e-4)
+
+    def one(k, c, row):
+        return jax.random.categorical(jax.random.fold_in(k, c), row)
+
+    return jax.vmap(one)(keys, counters, scaled)
+
+
+def _decode_sample_core(cfg, use_kernel, params, adapters, row_ids,
+                        cur_tokens, cache, keys, counters, temps, forced,
+                        forced_mask, advance):
+    """The one decode-step body BOTH engines jit — identical math is what
+    keeps continuous output token-for-token equal to one-shot output."""
+    lora = batched_ctx(adapters, row_ids, cfg, use_kernel)
+    logits, cache = decode_step(params, cur_tokens, cache, cfg, lora,
+                                advance=advance)
+    logp_all = jax.nn.log_softmax(logits, axis=-1)
+    sampled = _sample_rows(logits, keys, counters, temps)
+    nxt = jnp.where(forced_mask > 0, forced, sampled).astype(jnp.int32)
+    lp = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
+    return nxt, lp, cache
+
+
+def _build_fns(cfg: ModelConfig, use_kernel: bool):
+    """The three jitted kernels of the round-fused engine."""
+
+    def prefill(params, adapters, row_ids, tokens, prompt_lens, cache):
+        lora = batched_ctx(adapters, row_ids, cfg, use_kernel)
+        h, cache, _ = forward_seq(params, tokens, cfg, lora, cache)
+        cache = dict(cache, pos=prompt_lens)
+        last = jnp.take_along_axis(
+            h, (prompt_lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        logits = lm_logits(last, params, cfg)
+        return logits, cache
+
+    def first(logits, keys, counters, temps):
+        sampled = _sample_rows(logits, keys, counters, temps)
+        lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                 sampled[:, None], axis=-1)[:, 0]
+        return sampled.astype(jnp.int32), lp
+
+    def step(params, adapters, row_ids, cur_tokens, cache, keys, counters,
+             temps, forced, forced_mask, advance):
+        return _decode_sample_core(cfg, use_kernel, params, adapters,
+                                   row_ids, cur_tokens, cache, keys,
+                                   counters, temps, forced, forced_mask,
+                                   advance)
+
+    return (jax.jit(prefill, donate_argnums=(5,)), jax.jit(first),
+            jax.jit(step, donate_argnums=(4,)))
+
+
+def _build_cont_step_fn(cfg: ModelConfig, use_kernel: bool):
+    """Continuous-engine decode step with device-resident row state: cur
+    tokens and per-row counters are carried through the call (frozen/empty
+    lanes keep their previous token), so the host uploads nothing per step
+    beyond the occasionally-changing advance/forced masks."""
+
+    def step(params, adapters, row_ids, cur_tokens, cache, keys, counters,
+             temps, forced, forced_mask, advance):
+        nxt, lp, cache = _decode_sample_core(cfg, use_kernel, params,
+                                             adapters, row_ids, cur_tokens,
+                                             cache, keys, counters, temps,
+                                             forced, forced_mask, advance)
+        nxt = jnp.where(advance > 0, nxt, cur_tokens)
+        return nxt, lp, cache, counters + advance
+
+    return jax.jit(step, donate_argnums=(3, 4, 6))
+
+
+def _build_refill_fn(cfg: ModelConfig, use_kernel: bool, max_len: int):
+    """ONE jitted call that prefills a batch of incoming rows on a fresh
+    width-k cache, samples their first tokens (counter 0), and splices every
+    row's KV/SSM state into the persistent pool at its target slot.
+
+    Ghost rows (queue shorter than the padded width) carry slot index ==
+    pool size: their scatters are out of bounds and XLA drops them, so the
+    call has a single static shape per (width, prompt-bucket) and the refill
+    path costs one dispatch regardless of how many slots freed this step.
+    The pool's device-resident row state (cur/counters/keys/temps/row_ids)
+    is updated in the same call."""
+
+    def refill(params, adapters, tokens, prompt_lens, slots, new_row_ids,
+               new_keys, new_temps, cache, cur, counters, keys, temps,
+               row_ids):
+        k = tokens.shape[0]
+        pcache = init_cache(cfg, k, max_len,
+                            enc_len=8 if cfg.family == "encdec" else 0)
+        lora = batched_ctx(adapters, new_row_ids, cfg, use_kernel)
+        h, pcache, _ = forward_seq(params, tokens, cfg, lora, pcache)
+        pcache = dict(pcache, pos=prompt_lens)
+        last = jnp.take_along_axis(
+            h, (prompt_lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        logits = lm_logits(last, params, cfg)
+        first = _sample_rows(logits, new_keys, jnp.zeros((k,), jnp.int32),
+                             new_temps)
+        first = first.astype(jnp.int32)
+        lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                 first[:, None], axis=-1)[:, 0]
+        out = {}
+        for name in cache:
+            if cache[name].ndim == 1:              # "pos": [B]
+                out[name] = cache[name].at[slots].set(pcache[name])
+            else:                                   # [L, B, ...]
+                out[name] = cache[name].at[:, slots].set(pcache[name])
+        state = (cur.at[slots].set(first),
+                 counters.at[slots].set(1),
+                 keys.at[slots].set(new_keys),
+                 temps.at[slots].set(new_temps),
+                 row_ids.at[slots].set(new_row_ids))
+        return first, lp, out, state
+
+    return jax.jit(refill, donate_argnums=(8, 9, 10, 11, 12, 13))
+
+
+class _Row:
+    """Host-side per-row decode state (one slot / one batch lane)."""
+    __slots__ = ("req", "prompt_len", "gen", "lps", "lmask", "sampled",
+                 "forced", "status", "forced_q", "finish_reason", "key",
+                 "submit_index", "meta", "submitted_at", "started_at")
+
+    def __init__(self, req: RolloutRequest, key, submit_index: int,
+                 meta=None, submitted_at: float = 0.0):
+        self.req = req
+        self.prompt_len = len(req.prompt)
+        self.gen: List[int] = []
+        self.lps: List[float] = []
+        self.lmask: List[float] = []
+        self.sampled = 0
+        self.forced = 0
+        self.status = "active"            # active|calling|done
+        self.forced_q: List[int] = []
+        self.finish_reason = ""
+        self.key = key                    # [2] uint32 base key
+        self.submit_index = submit_index
+        self.meta = meta or {}
+        self.submitted_at = submitted_at
+        self.started_at = 0.0
+
+    def accept(self, token: int, lp: float, mask: float, max_total: int) -> str:
+        """Record one token; returns "continue" | "done" | "call".
+
+        Only sampled tokens (mask==1) are charged to max_new_tokens; the
+        length cap is the KV-cache capacity, not the sampling budget.
+        """
+        self.gen.append(token)
+        self.lps.append(lp)
+        self.lmask.append(mask)
+        if mask == 1.0:
+            self.sampled += 1
+        else:
+            self.forced += 1
+        if token == tok.EOS:
+            self.status, self.finish_reason = "done", "eos"
+            return "done"
+        if self.prompt_len + len(self.gen) >= max_total:
+            self.status, self.finish_reason = "done", "capacity"
+            return "done"
+        if token == tok.CALL and self.req.env.is_agentic and mask == 1.0:
+            self.status = "calling"
+            return "call"
+        if self.sampled >= self.req.max_new_tokens and not self.forced_q:
+            self.status, self.finish_reason = "done", "budget"
+            return "done"
+        return "continue"
+
+    def result(self, prompt_tokens) -> Dict:
+        return {
+            "task_id": self.req.task_id,
+            "prompt_len": self.prompt_len,
+            "tokens": list(prompt_tokens) + self.gen,
+            "gen_logprobs": self.lps,
+            "gen_loss_mask": self.lmask,
+            "truth": self.req.truth,
+            "env": self.req.env,
+            "finish_reason": self.finish_reason,
+        }
+
+
+def _submit_tool_call(row: "_Row", prompt_tokens, pool, rng,
+                      sim_latency: bool) -> Future:
+    """Dispatch a row's agentic tool call (shared by both engines): sample
+    the env-interaction latency, then run env.tool_call on the pool while
+    the rest of the batch keeps decoding."""
+    req = row.req
+    query = list(prompt_tokens) + row.gen
+    latency = req.env.sample_env_latency(
+        _RandomShim(rng)) if not sim_latency else 0.0
+
+    def run_tool(q=query, env=req.env, lat=latency, truth=req.truth):
+        if lat > 0:
+            time.sleep(lat)
+        return env.tool_call(q, truth)
+
+    return pool.submit(run_tool)
 
 
 class RolloutEngine:
+    """Round-fused baseline: one fixed batch, barrier until the last row."""
+
     def __init__(self, cfg: ModelConfig, base_params, *, max_len: int = 128,
                  use_kernel: bool = False, seed: int = 0):
         self.cfg = cfg
         self.base_params = base_params
         self.max_len = max_len
         self.use_kernel = use_kernel
-        self._key = jax.random.PRNGKey(seed)
+        self._master = jax.random.PRNGKey(seed)
+        self._n_issued = 0        # cumulative rows served (key freshness
+                                  # across rounds; mirrors the continuous
+                                  # engine's submission counter)
         self._step_fn = None
+        self._first_fn = None
         self._prefill_fn = None
 
     # -- jitted kernels --------------------------------------------------
     def _build(self, num_adapters: int):
-        cfg = self.cfg
+        self._prefill_fn, self._first_fn, self._step_fn = _build_fns(
+            self.cfg, self.use_kernel)
 
-        def prefill(params, adapters, row_ids, tokens, prompt_lens, cache):
-            lora = batched_ctx(adapters, row_ids, cfg, self.use_kernel)
-            h, cache, _ = forward_seq(params, tokens, cfg, lora, cache)
-            cache = dict(cache, pos=prompt_lens)
-            last = jnp.take_along_axis(
-                h, (prompt_lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
-            logits = lm_logits(last, params, cfg)
-            return logits, cache
-
-        def step(params, adapters, row_ids, cur_tokens, cache, key, temps,
-                 forced, forced_mask, advance):
-            lora = batched_ctx(adapters, row_ids, cfg, self.use_kernel)
-            logits, cache = decode_step(params, cur_tokens, cache, cfg, lora,
-                                        advance=advance)
-            logp_all = jax.nn.log_softmax(logits, axis=-1)
-            scaled = logits / jnp.maximum(temps[:, None], 1e-4)
-            sampled = jax.random.categorical(key, scaled, axis=-1)
-            nxt = jnp.where(forced_mask > 0, forced, sampled).astype(jnp.int32)
-            lp = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
-            return nxt, lp, cache
-
-        self._prefill_fn = jax.jit(prefill, donate_argnums=(5,))
-        self._step_fn = jax.jit(step, donate_argnums=(4,))
+    def _row_keys(self, requests: Sequence[RolloutRequest]) -> np.ndarray:
+        """Per-row base keys: explicit request.seed, else the engine-global
+        issue counter — consecutive generate() rounds get fresh keys (and
+        match a continuous engine fed the same requests in the same order)."""
+        keys = [jax.random.fold_in(
+                    self._master,
+                    r.seed if r.seed is not None else self._n_issued + i)
+                for i, r in enumerate(requests)]
+        self._n_issued += len(requests)
+        return np.stack([np.asarray(k, np.uint32) for k in keys])
 
     # -- main API ---------------------------------------------------------
     def generate(self, requests: Sequence[RolloutRequest], adapter_trees,
                  *, tool_executor: Optional[ThreadPoolExecutor] = None,
-                 sim_latency: bool = False) -> (List[Dict], RolloutStats):
-        """Run a batch of cross-task requests to completion.
+                 sim_latency: bool = False) -> Tuple[List[Dict], RolloutStats]:
+        """Run a batch of cross-task requests to completion (one round).
 
         adapter_trees: list of per-task adapter trees; request.adapter_index
         selects. Returns per-request dicts (tokens/logprobs/loss_mask/...)
@@ -109,16 +344,18 @@ class RolloutEngine:
         stacked = stack_adapters(adapter_trees)
         row_ids = jnp.asarray([r.adapter_index for r in requests], jnp.int32)
         temps = jnp.asarray([r.temperature for r in requests], jnp.float32)
+        keys = jnp.asarray(self._row_keys(requests))
 
         prompt_lens = np.array([len(r.prompt) for r in requests], np.int32)
-        S_p = int(max(8, -(-int(prompt_lens.max()) // 8) * 8))
+        S_p = _bucket_len(prompt_lens.max())
         tokens = np.zeros((B, S_p), np.int32)
         for i, r in enumerate(requests):
             tokens[i, :len(r.prompt)] = r.prompt
 
         cache = init_cache(cfg, B, self.max_len,
                            enc_len=8 if cfg.family == "encdec" else 0)
-        stats = RolloutStats(prefill_tokens=int(prompt_lens.sum()))
+        stats = RolloutStats(prefill_tokens=int(prompt_lens.sum()),
+                             prefills=B)
         t0 = time.monotonic()
         logits, cache = self._prefill_fn(self.base_params, stacked, row_ids,
                                          jnp.asarray(tokens),
@@ -126,49 +363,49 @@ class RolloutEngine:
         jax.block_until_ready(logits)
         stats.decode_seconds += time.monotonic() - t0
 
-        # host-side per-row state
-        gen: List[List[int]] = [[] for _ in range(B)]
-        lps: List[List[float]] = [[] for _ in range(B)]
-        lmask: List[List[float]] = [[] for _ in range(B)]
-        status = ["active"] * B                       # active|calling|done
-        forced_q: List[List[int]] = [[] for _ in range(B)]
+        rows = [_Row(r, keys[i], i) for i, r in enumerate(requests)]
         pending: Dict[int, Future] = {}
         pending_t0: Dict[int, float] = {}
         own_pool = tool_executor is None
         pool = tool_executor or ThreadPoolExecutor(max_workers=4)
-        rng = np.random.RandomState(int(self._key[1]) % (2**31))
+        rng = np.random.RandomState(
+            (int(np.asarray(self._master)[1]) + self._n_issued) % (2**31))
 
-        # sample the first token from prefill logits
-        self._key, sk = jax.random.split(self._key)
-        first = jax.random.categorical(
-            sk, logits / jnp.maximum(temps[:, None], 1e-4), axis=-1)
-        first_lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
-                                       first[:, None], axis=-1)[:, 0]
+        # sample the first token from prefill logits (counter = 0 per row)
+        counters = np.zeros((B,), np.int32)
+        first, first_lp = self._first_fn(logits, keys, jnp.asarray(counters),
+                                         temps)
         first = np.asarray(first)
         first_lp = np.asarray(first_lp)
         cur = np.zeros((B,), np.int32)
-        for i, r in enumerate(requests):
-            self._accept_token(i, int(first[i]), float(first_lp[i]), 1.0,
-                               requests, gen, lps, lmask, status, forced_q,
-                               pending, pending_t0, pool, tokens, rng,
-                               sim_latency, stats)
+        for i in range(B):
+            action = rows[i].accept(int(first[i]), float(first_lp[i]), 1.0,
+                                    self.max_len)
+            stats.tokens_generated += 1
+            stats.sampled_tokens += 1
+            if action == "call":
+                self._dispatch_tool(i, rows[i], tokens[i], pending,
+                                    pending_t0, pool, rng, sim_latency)
             cur[i] = int(first[i])
 
-        max_steps = max(r.max_new_tokens for r in requests) + 48
+        # forced feeds are budget-exempt, so the step bound must cover
+        # budget + worst-case tool-response lengths; the wall deadline is
+        # the actual straggler guard.
+        max_steps = max(r.max_new_tokens for r in requests) + 96
         steps_done = 0
         wall_deadline = time.monotonic() + 120.0
         while steps_done < max_steps and time.monotonic() < wall_deadline:
-            if all(s == "done" for s in status):
+            if all(r.status == "done" for r in rows):
                 break
             # resolve finished tool calls
             for i in list(pending):
                 if pending[i].done():
                     resp = pending[i].result()
                     stats.env_wait_seconds += time.monotonic() - pending_t0[i]
-                    forced_q[i] = [tok.RESP] + list(resp) + [tok.ENDRESP]
-                    status[i] = "active"
+                    rows[i].forced_q = [tok.RESP] + list(resp) + [tok.ENDRESP]
+                    rows[i].status = "active"
                     del pending[i], pending_t0[i]
-            advance = np.array([1 if status[i] in ("active",) else 0
+            advance = np.array([1 if rows[i].status == "active" else 0
                                 for i in range(B)], np.int32)
             if advance.sum() == 0:
                 # waiting only on external tools — does not consume the
@@ -179,78 +416,403 @@ class RolloutEngine:
             forced = np.zeros((B,), np.int32)
             fmask = np.zeros((B,), np.int32)
             for i in range(B):
-                if status[i] == "active" and forced_q[i]:
-                    forced[i] = forced_q[i][0]
+                if rows[i].status == "active" and rows[i].forced_q:
+                    forced[i] = rows[i].forced_q[0]
                     fmask[i] = 1
-            self._key, sk = jax.random.split(self._key)
+                counters[i] = len(rows[i].gen)
             t0 = time.monotonic()
             nxt, lp, cache = self._step_fn(
                 self.base_params, stacked, row_ids, jnp.asarray(cur), cache,
-                sk, temps, jnp.asarray(forced), jnp.asarray(fmask),
-                jnp.asarray(advance))
+                keys, jnp.asarray(counters), temps, jnp.asarray(forced),
+                jnp.asarray(fmask), jnp.asarray(advance))
             nxt = np.asarray(nxt)
             lp = np.asarray(lp)
             stats.decode_seconds += time.monotonic() - t0
             stats.decode_steps += 1
             for i in range(B):
-                if status[i] != "active" or advance[i] == 0:
+                if rows[i].status != "active" or advance[i] == 0:
                     continue
                 was_forced = fmask[i] == 1
                 if was_forced:
-                    forced_q[i].pop(0)
-                self._accept_token(i, int(nxt[i]), float(lp[i]),
-                                   0.0 if was_forced else 1.0,
-                                   requests, gen, lps, lmask, status,
-                                   forced_q, pending, pending_t0, pool,
-                                   tokens, rng, sim_latency, stats)
+                    rows[i].forced_q.pop(0)
+                action = rows[i].accept(int(nxt[i]), float(lp[i]),
+                                        0.0 if was_forced else 1.0,
+                                        self.max_len)
+                if action == "call":
+                    self._dispatch_tool(i, rows[i], tokens[i], pending,
+                                        pending_t0, pool, rng, sim_latency)
                 cur[i] = int(nxt[i])
+                stats.tokens_generated += 1
+                if not was_forced:
+                    stats.sampled_tokens += 1
 
         # timed-out tool calls: cancel
         for i in pending:
-            status[i] = "done"
+            rows[i].status = "done"
+            rows[i].finish_reason = rows[i].finish_reason or "tool_timeout"
         if own_pool:
             pool.shutdown(wait=False)
 
-        results = []
-        for i, r in enumerate(requests):
-            results.append({
-                "task_id": r.task_id,
-                "prompt_len": int(prompt_lens[i]),
-                "tokens": list(tokens[i, :prompt_lens[i]]) + gen[i],
-                "gen_logprobs": lps[i],
-                "gen_loss_mask": lmask[i],
-                "truth": r.truth,
-                "env": r.env,
-            })
+        results = [rows[i].result(tokens[i, :prompt_lens[i]])
+                   for i in range(B)]
         stats.wall_seconds = time.monotonic() - t_start
         return results, stats
 
     # ------------------------------------------------------------------
-    def _accept_token(self, i, token, lp, mask, requests, gen, lps, lmask,
-                      status, forced_q, pending, pending_t0, pool, tokens,
-                      rng, sim_latency, stats):
-        r = requests[i]
-        gen[i].append(token)
-        lps[i].append(lp)
-        lmask[i].append(mask)
-        if token == tok.EOS or len(gen[i]) >= r.max_new_tokens + 32:
-            status[i] = "done"
-            return
-        if token == tok.CALL and r.env.is_agentic and mask == 1.0:
-            status[i] = "calling"
-            query = list(tokens[i, :len(r.prompt)]) + gen[i]
-            latency = r.env.sample_env_latency(
-                _RandomShim(rng)) if not sim_latency else 0.0
+    def _dispatch_tool(self, i, row: _Row, token_row, pending, pending_t0,
+                       pool, rng, sim_latency):
+        pending[i] = _submit_tool_call(row, token_row[:row.prompt_len],
+                                       pool, rng, sim_latency)
+        pending_t0[i] = time.monotonic()
 
-            def run_tool(q=query, env=r.env, lat=latency, truth=r.truth):
-                if lat > 0:
-                    time.sleep(lat)
-                return env.tool_call(q, truth)
 
-            pending[i] = pool.submit(run_tool)
-            pending_t0[i] = time.monotonic()
-        elif len(gen[i]) >= r.max_new_tokens and not forced_q[i]:
-            status[i] = "done"
+class ContinuousRolloutEngine:
+    """Persistent slot-pool engine: decode never drains between tenants.
+
+    Usage: ``set_adapters(slot, tree)`` to (re)install a tenant's LoRA in
+    the fixed-capacity stacked buffer, ``submit(request)`` any number of
+    requests (request.adapter_index names the adapter slot), then call
+    ``step()`` from the scheduler loop — or ``drain()`` to run to empty.
+    Finished rows stream out of ``drain_completions()`` the moment they
+    evict.
+    """
+
+    def __init__(self, cfg: ModelConfig, base_params, *, max_slots: int = 8,
+                 max_adapters: int = 8, max_len: int = 128,
+                 use_kernel: bool = False, seed: int = 0,
+                 tool_executor: Optional[ThreadPoolExecutor] = None,
+                 sim_latency: bool = False, tool_timeout_s: float = 60.0):
+        self.cfg = cfg
+        self.base_params = base_params
+        self.max_slots = max_slots
+        self.max_adapters = max_adapters
+        self.max_len = max_len
+        self.use_kernel = use_kernel
+        self.tool_timeout_s = tool_timeout_s
+        self.sim_latency = sim_latency
+        self._master = jax.random.PRNGKey(seed)
+        self._rng = np.random.RandomState(seed + 7919)
+        self._own_pool = tool_executor is None
+        self._pool = tool_executor or ThreadPoolExecutor(max_workers=4)
+
+        self._step_fn = None
+        self._refill_fn = None
+        self._write_adapter_fn = None
+        self._stacked = None                     # [L, T, ...] LoRA buffer
+        self._cache = None                       # batch = max_slots
+
+        N = max_slots
+        self._rows: List[Optional[_Row]] = [None] * N
+        self._prompts: List[Optional[List[int]]] = [None] * N
+        # device-resident row state (updated inside the jitted calls; the
+        # host only uploads the advance/forced masks, and only when they
+        # change — see _masks())
+        self._d_cur = None          # [N] int32   current token per lane
+        self._d_counters = None     # [N] int32   == len(gen) per lane
+        self._d_keys = None         # [N,2] uint32 per-row base PRNG keys
+        self._d_temps = None        # [N] float32
+        self._d_row_ids = None      # [N] int32   adapter slot per lane
+        self._mask_sig = None       # last uploaded (advance,forced,fmask)
+        self._d_masks = None
+        self._pending: Dict[int, Future] = {}
+        self._pending_t0: Dict[int, float] = {}
+        self._queue: Deque[_Row] = deque()
+        self._completed: Deque[RolloutCompletion] = deque()
+        self._n_submitted = 0
+        self.stats = RolloutStats()
+
+    # -- build ----------------------------------------------------------
+    def _ensure_built(self):
+        if self._step_fn is None:
+            self._step_fn = _build_cont_step_fn(self.cfg, self.use_kernel)
+            self._refill_fn = _build_refill_fn(self.cfg, self.use_kernel,
+                                               self.max_len)
+            self._write_adapter_fn = jax.jit(
+                lambda buf, tree, i: jax.tree.map(
+                    lambda b, l: b.at[:, i].set(l), buf, tree),
+                donate_argnums=(0,))
+        if self._cache is None:
+            N = self.max_slots
+            self._cache = init_cache(
+                self.cfg, N, self.max_len,
+                enc_len=8 if self.cfg.family == "encdec" else 0)
+            self._d_cur = jnp.zeros((N,), jnp.int32)
+            self._d_counters = jnp.zeros((N,), jnp.int32)
+            self._d_keys = jnp.zeros((N, 2), jnp.uint32)
+            self._d_temps = jnp.ones((N,), jnp.float32)
+            self._d_row_ids = jnp.zeros((N,), jnp.int32)
+
+    # -- adapters --------------------------------------------------------
+    def set_adapters(self, index: int, tree):
+        """Install/replace the LoRA tree at adapter slot `index` in the
+        fixed-capacity stacked buffer (shape-stable: no recompiles)."""
+        if not 0 <= index < self.max_adapters:
+            raise ValueError(f"adapter slot {index} out of range "
+                             f"[0, {self.max_adapters})")
+        self._ensure_built()
+        if self._stacked is None:
+            self._stacked = jax.tree.map(
+                lambda l: jnp.zeros(
+                    (l.shape[0], self.max_adapters) + l.shape[1:], l.dtype),
+                tree)
+        self._stacked = self._write_adapter_fn(self._stacked, tree,
+                                               jnp.int32(index))
+
+    # -- submission ------------------------------------------------------
+    def submit(self, req: RolloutRequest, meta=None):
+        if len(req.prompt) + 1 >= self.max_len:
+            raise ValueError("prompt does not fit decode cache")
+        key = np.asarray(jax.random.fold_in(
+            self._master,
+            req.seed if req.seed is not None else self._n_submitted),
+            np.uint32)
+        row = _Row(req, key, self._n_submitted, meta=meta,
+                   submitted_at=time.monotonic())
+        self._n_submitted += 1
+        self._queue.append(row)
+        return row.submit_index
+
+    # -- introspection ---------------------------------------------------
+    def occupancy(self) -> Tuple[int, int]:
+        return sum(r is not None for r in self._rows), self.max_slots
+
+    def occupant_tasks(self) -> frozenset:
+        return frozenset(r.req.task_id for r in self._rows if r is not None)
+
+    def queued(self) -> int:
+        return len(self._queue)
+
+    def idle(self) -> bool:
+        return not self._queue and all(r is None for r in self._rows)
+
+    def drain_completions(self) -> List[RolloutCompletion]:
+        out = []
+        while self._completed:
+            out.append(self._completed.popleft())
+        return out
+
+    # -- slot lifecycle --------------------------------------------------
+    def _evict(self, slot: int):
+        row = self._rows[slot]
+        prompt = self._prompts[slot]
+        res = row.result(prompt)
+        comp = RolloutCompletion(
+            task_id=row.req.task_id, prompt_len=row.prompt_len,
+            tokens=res["tokens"], gen_logprobs=row.lps,
+            gen_loss_mask=row.lmask, truth=row.req.truth, env=row.req.env,
+            finish_reason=row.finish_reason, slot=slot,
+            sampled_tokens=row.sampled, forced_tokens=row.forced,
+            submit_index=row.submit_index, submitted_at=row.submitted_at,
+            started_at=row.started_at, finished_at=time.monotonic(),
+            finished_step=self.stats.decode_steps, meta=row.meta)
+        self._completed.append(comp)
+        self.stats.completions += 1
+        self._rows[slot] = None
+        self._prompts[slot] = None
+        self._pending.pop(slot, None)
+        self._pending_t0.pop(slot, None)
+
+    def _refill_free_slots(self) -> bool:
+        """Fill every freed slot from the queue with ONE fused jitted call:
+        batch-prefill the incoming rows, splice their KV/SSM state into the
+        pool, and sample their first tokens. Ghost lanes (fewer queued rows
+        than the padded width) scatter out of bounds and are dropped, so the
+        call shape depends only on (width, prompt bucket)."""
+        free = [s for s in range(self.max_slots) if self._rows[s] is None]
+        if not free or not self._queue:
+            return False
+        self._ensure_built()
+        if self._stacked is None:
+            raise RuntimeError("no adapters installed — call set_adapters()")
+        t0 = time.monotonic()
+        incoming: List[Tuple[int, _Row]] = []
+        while free and self._queue:
+            incoming.append((free.pop(0), self._queue.popleft()))
+        k = len(incoming)
+        W = 1                                    # next-pow2 width bucket
+        while W < k:
+            W *= 2
+        S_p = _bucket_len(max(row.prompt_len for _, row in incoming))
+        tokens = np.zeros((W, S_p), np.int32)
+        prompt_lens = np.ones((W,), np.int32)    # ghosts: len-1 dummy prompt
+        row_ids = np.zeros((W,), np.int32)
+        slots = np.full((W,), self.max_slots, np.int32)   # ghosts: OOB → drop
+        keys = np.zeros((W, 2), np.uint32)
+        temps = np.ones((W,), np.float32)
+        for j, (slot, row) in enumerate(incoming):
+            tokens[j, :row.prompt_len] = row.req.prompt
+            prompt_lens[j] = row.prompt_len
+            row_ids[j] = row.req.adapter_index
+            slots[j] = slot
+            keys[j] = row.key
+            temps[j] = row.req.temperature
+        first, lp, self._cache, state = self._refill_fn(
+            self.base_params, self._stacked, jnp.asarray(tokens),
+            jnp.asarray(prompt_lens), jnp.asarray(slots),
+            jnp.asarray(row_ids), jnp.asarray(keys), jnp.asarray(temps),
+            self._cache, self._d_cur, self._d_counters, self._d_keys,
+            self._d_temps, self._d_row_ids)
+        (self._d_cur, self._d_counters, self._d_keys, self._d_temps,
+         self._d_row_ids) = state
+        first = np.asarray(first)
+        lp = np.asarray(lp)
+        now = time.monotonic()
+        self.stats.refills += 1
+        self.stats.prefills += k
+        self.stats.decode_seconds += now - t0
+        for j, (slot, row) in enumerate(incoming):
+            self._rows[slot] = row
+            self._prompts[slot] = list(row.req.prompt)
+            row.started_at = now
+            self.stats.prefill_tokens += row.prompt_len
+            self.stats.tokens_generated += 1
+            self.stats.sampled_tokens += 1
+            action = row.accept(int(first[j]), float(lp[j]), 1.0,
+                                self.max_len)
+            if action == "call":
+                self._dispatch_tool(slot)
+            elif action == "done":
+                self._evict(slot)
+        return True
+
+    def _dispatch_tool(self, slot: int):
+        self._pending[slot] = _submit_tool_call(
+            self._rows[slot], self._prompts[slot], self._pool, self._rng,
+            self.sim_latency)
+        self._pending_t0[slot] = time.monotonic()
+
+    # -- scheduler interface ---------------------------------------------
+    def step(self) -> bool:
+        """One engine iteration: resolve tools, refill freed slots, one
+        decode step over the pool, evict finished rows. Returns True if any
+        device work happened (refill or decode)."""
+        now = time.monotonic()
+        progressed = False
+        # resolve / time out pending tool calls
+        for slot in list(self._pending):
+            fut = self._pending[slot]
+            row = self._rows[slot]
+            if fut.done():
+                resp = fut.result()
+                self.stats.env_wait_seconds += now - self._pending_t0[slot]
+                row.forced_q = [tok.RESP] + list(resp) + [tok.ENDRESP]
+                row.status = "active"
+                del self._pending[slot], self._pending_t0[slot]
+            elif now - self._pending_t0[slot] > self.tool_timeout_s:
+                row.status, row.finish_reason = "done", "tool_timeout"
+                self._evict(slot)
+        # refill freed slots from the cross-task queue (one fused call)
+        if self._refill_free_slots():
+            progressed = True
+        advance = np.array(
+            [1 if (r is not None and r.status == "active") else 0
+             for r in self._rows], np.int32)
+        if advance.sum() == 0:
+            return progressed
+        forced = np.zeros((self.max_slots,), np.int32)
+        fmask = np.zeros((self.max_slots,), np.int32)
+        for i, r in enumerate(self._rows):
+            if r is not None and r.status == "active" and r.forced_q:
+                forced[i] = r.forced_q[0]
+                fmask[i] = 1
+        # upload the masks only when they changed (steady decode between
+        # evictions re-uses the device copies — zero uploads per step)
+        sig = advance.tobytes() + forced.tobytes() + fmask.tobytes()
+        if sig != self._mask_sig:
+            self._d_masks = (jnp.asarray(forced), jnp.asarray(fmask),
+                             jnp.asarray(advance))
+            self._mask_sig = sig
+        d_forced, d_fmask, d_advance = self._d_masks
+        t0 = time.monotonic()
+        nxt, lp, self._cache, self._d_counters = self._step_fn(
+            self.base_params, self._stacked, self._d_row_ids, self._d_cur,
+            self._cache, self._d_keys, self._d_counters, self._d_temps,
+            d_forced, d_fmask, d_advance)
+        self._d_cur = nxt
+        nxt = np.asarray(nxt)
+        lp = np.asarray(lp)
+        self.stats.decode_seconds += time.monotonic() - t0
+        self.stats.decode_steps += 1
+        self.stats.occupied_row_steps += int(advance.sum())
+        self.stats.capacity_row_steps += self.max_slots
+        for slot, r in enumerate(self._rows):
+            if r is None or r.status != "active" or advance[slot] == 0:
+                continue
+            was_forced = fmask[slot] == 1
+            if was_forced:
+                r.forced_q.pop(0)
+            action = r.accept(int(nxt[slot]), float(lp[slot]),
+                              0.0 if was_forced else 1.0, self.max_len)
+            self.stats.tokens_generated += 1
+            if not was_forced:
+                self.stats.sampled_tokens += 1
+            if action == "call":
+                self._dispatch_tool(slot)
+            elif action == "done":
+                self._evict(slot)
+        return True
+
+    def drain(self, deadline_s: float = 300.0,
+              stop: Optional[Callable[[], bool]] = None
+              ) -> List[RolloutCompletion]:
+        """Run until queue and pool are empty (or deadline); returns all
+        completions produced during the drain."""
+        out: List[RolloutCompletion] = []
+        deadline = time.monotonic() + deadline_s
+        while not self.idle() and time.monotonic() < deadline:
+            if stop is not None and stop():
+                break
+            progressed = self.step()
+            out.extend(self.drain_completions())
+            if not progressed:
+                time.sleep(0.001)     # waiting only on external tools
+        # deadline: abort whatever is still resident OR still queued, so
+        # every submitted request yields exactly one completion
+        for slot, r in enumerate(self._rows):
+            if r is not None:
+                r.status = "done"
+                r.finish_reason = r.finish_reason or "aborted"
+                self._evict(slot)
+        while self._queue:
+            row = self._queue.popleft()
+            row.status, row.finish_reason = "done", "aborted"
+            self._completed.append(RolloutCompletion(
+                task_id=row.req.task_id, prompt_len=row.prompt_len,
+                tokens=list(row.req.prompt), gen_logprobs=[],
+                gen_loss_mask=[], truth=row.req.truth, env=row.req.env,
+                finish_reason="aborted", slot=-1,
+                submit_index=row.submit_index,
+                submitted_at=row.submitted_at,
+                finished_at=time.monotonic(),
+                finished_step=self.stats.decode_steps, meta=row.meta))
+            self.stats.completions += 1
+        out.extend(self.drain_completions())
+        return out
+
+    def run_requests(self, requests: Sequence[RolloutRequest], adapter_trees,
+                     deadline_s: float = 300.0
+                     ) -> Tuple[List[Dict], RolloutStats]:
+        """Convenience: submit a request list, drain, return results in
+        submission order — drop-in comparable with `generate()`."""
+        t0 = time.monotonic()
+        for i, tree in enumerate(adapter_trees):
+            self.set_adapters(i, tree)
+        idx = {}
+        for i, r in enumerate(requests):
+            # unseeded requests default to the advancing submission counter
+            # inside submit() — matching generate()'s _n_issued behaviour
+            idx[self.submit(r)] = i
+        comps = self.drain(deadline_s)
+        results: List[Optional[Dict]] = [None] * len(requests)
+        for c in comps:
+            if c.submit_index in idx:     # skip strays from an earlier call
+                results[idx[c.submit_index]] = c.to_result()
+        self.stats.wall_seconds += time.monotonic() - t0
+        return results, self.stats
+
+    def shutdown(self):
+        if self._own_pool:
+            self._pool.shutdown(wait=False)
 
 
 class _RandomShim:
@@ -262,10 +824,13 @@ class _RandomShim:
         return float(self.rs.normal(mu, sigma))
 
 
-def to_trajectory_batch(results: List[Dict], task_id: str, version: int,
+def to_trajectory_batch(results: List, task_id: str, version: int,
                         group_size: int, pad_to: int = None) -> TrajectoryBatch:
     """Pack engine results for ONE task into a padded TrajectoryBatch and
-    verify rewards."""
+    verify rewards. Accepts `generate()` result dicts or
+    `RolloutCompletion`s (continuous engine)."""
+    results = [r.to_result() if isinstance(r, RolloutCompletion) else r
+               for r in results]
     rows = [r for r in results if r["task_id"] == task_id]
     S = max(len(r["tokens"]) for r in rows)
     if pad_to:
@@ -291,8 +856,11 @@ def to_trajectory_batch(results: List[Dict], task_id: str, version: int,
             loss_mask[j, pos] = r["gen_loss_mask"][k]
         comp = r["tokens"][r["prompt_len"]:]
         rewards[j] = r["env"].verify(r["truth"], comp)
+    meta = {"loss_mask": loss_mask}
+    if any("finish_reason" in r for r in rows):
+        meta["finish_reasons"] = [r.get("finish_reason", "") for r in rows]
     return TrajectoryBatch(task_id=task_id, version=version, tokens=tokens,
                            prompt_lens=p_lens, total_lens=t_lens,
                            rewards=rewards, group_size=group_size,
                            behavior_logprobs=behavior[:, :S - 1],
-                           meta={"loss_mask": loss_mask})
+                           meta=meta)

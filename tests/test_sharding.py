@@ -9,16 +9,14 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import REGISTRY, get_config, shapes_for, ShapeConfig
 from repro.launch import shardings as sh, specs as sp
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_abstract_mesh, make_host_mesh
 from repro.launch.roofline import parse_collectives
 from repro.train.sharding import mesh_context
 
 
 def _fake_mesh_16x16():
     """AbstractMesh stands in for the 256-chip mesh (no devices needed)."""
-    return jax.sharding.AbstractMesh(
-        (16, 16), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.mark.parametrize("name", list(REGISTRY))
