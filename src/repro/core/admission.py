@@ -39,10 +39,29 @@ def task_state_bytes(cfg: ModelConfig, spec: TaskSpec,
 
 
 class AdmissionController:
+    """Byte-budget admission with preemption accounting.
+
+    Lifecycle: try_admit → (preempt ↔ try_readmit)* → release. `preempt`
+    releases a still-running task's bytes back to the budget while
+    remembering the charge, so a higher-priority newcomer can admit;
+    `try_readmit` re-charges the same estimate once budget frees. Without
+    this, preempted tasks kept their reservation forever and preemption
+    could never create capacity (the bug this accounting fixes — bytes
+    were only released at task finish).
+
+    Soft, like the rest of the controller (paper §4.3): a preempted
+    task's evicted rows hold no state while queued, but they prefix-
+    replay into decode slots as they free, so the modelled budget can be
+    transiently exceeded while victim and newcomer rows coexist. The
+    engine's actual KV pool is a fixed preallocation (max_slots ×
+    max_len), so this over-subscription shows up as queueing, never as
+    allocation beyond the pool."""
+
     def __init__(self, cfg: ModelConfig, acfg: AdmissionConfig):
         self.cfg = cfg
         self.acfg = acfg
         self._admitted: Dict[str, int] = {}
+        self._preempted: Dict[str, int] = {}
 
     @property
     def used_bytes(self) -> int:
@@ -75,8 +94,38 @@ class AdmissionController:
         return rows * (total_len * self.cfg.state_bytes_per_token(db)
                        + self.cfg.state_bytes_fixed(db))
 
+    def preempt(self, task_id: str) -> int:
+        """Release an admitted task's bytes while it is preempted; the
+        charge is remembered for `try_readmit`. Returns the bytes freed."""
+        need = self._admitted.pop(task_id, None)
+        if need is None:
+            return 0
+        self._preempted[task_id] = need
+        return need
+
+    def try_readmit(self, task_id: str) -> bool:
+        """Re-charge a preempted task's remembered estimate if it fits (the
+        empty-system soft rule of try_admit_bytes applies)."""
+        need = self._preempted.get(task_id)
+        if need is None:
+            return False
+        if self.try_admit_bytes(task_id, need):
+            del self._preempted[task_id]
+            return True
+        return False
+
     def release(self, task_id: str):
+        """Finished (or cancelled) task: drop its reservation wherever it
+        is — admitted or parked in the preempted set."""
         self._admitted.pop(task_id, None)
+        self._preempted.pop(task_id, None)
 
     def admitted(self) -> List[str]:
         return list(self._admitted)
+
+    def admitted_bytes(self, task_id: str) -> int:
+        """Current reservation charged to an admitted task (0 if absent)."""
+        return self._admitted.get(task_id, 0)
+
+    def preempted(self) -> List[str]:
+        return list(self._preempted)

@@ -34,6 +34,7 @@ class TaskSpec:
     target_steps: int = 20         # requested train steps
     temperature: float = 1.0
     lr: float = 3e-3
+    priority: int = 0              # scheduler/preemption tier (higher wins)
 
     @property
     def rows_per_batch(self) -> int:
@@ -47,11 +48,14 @@ class TaskState:
     opt_state: Any = None           # φ_t^(v)
     version: int = 0
     steps_done: int = 0
-    status: str = "pending"         # pending|admitted|finished
+    status: str = "pending"         # pending|admitted|preempted|finished
     rollout_issued_version: int = -1   # highest v handed to the rollout engine
     rollout_inflight_rows: int = 0     # rows currently resident/queued in the
                                        # continuous engine for this task
     rollout_rows_total: int = 0        # lifetime rows streamed through slots
+    adapter_slot: Optional[int] = None  # stacked-LoRA slot while resident
+    adapter_installs: int = 0          # times the adapter was (re)installed
+    preempt_count: int = 0             # admission-driven preemptions suffered
     submitted_at: float = 0.0
     admitted_at: float = 0.0
     first_step_at: Optional[float] = None
@@ -89,6 +93,45 @@ class MultiTaskManager:
                 st.status = "admitted"
                 st.admitted_at = self.clock()
                 self._cv.notify_all()
+
+    # -- admission-driven preemption (paper §4.3) -------------------------
+    def preempt(self, task_id: str) -> bool:
+        """Mark an admitted task preempted: it issues no NEW rollout rounds
+        (next_policy returns None) while its already-queued rows replay at
+        the engine's leisure. Returns True if the state changed."""
+        with self._lock:
+            st = self.tasks[task_id]
+            if st.status != "admitted" or st.done:
+                return False
+            st.status = "preempted"
+            st.preempt_count += 1
+            self._cv.notify_all()
+            return True
+
+    def readmit(self, task_id: str) -> bool:
+        with self._lock:
+            st = self.tasks[task_id]
+            if st.status != "preempted":
+                return False
+            st.status = "finished" if st.done else "admitted"
+            self._cv.notify_all()
+            return True
+
+    # -- stacked-LoRA residency (LRU eviction bookkeeping) ----------------
+    def adapter_bound(self, task_id: str, slot: int):
+        with self._lock:
+            st = self.tasks[task_id]
+            st.adapter_slot = slot
+            st.adapter_installs += 1
+
+    def adapter_unbound(self, task_id: str):
+        with self._lock:
+            self.tasks[task_id].adapter_slot = None
+
+    def resident_adapters(self) -> Dict[str, int]:
+        with self._lock:
+            return {tid: st.adapter_slot for tid, st in self.tasks.items()
+                    if st.adapter_slot is not None}
 
     # -- Algorithm 1, line 5: M.next_policy(t) ---------------------------
     def next_policy(self, task_id: str):
@@ -170,6 +213,12 @@ class MultiTaskManager:
             self._cv.notify_all()
 
     # -- introspection ----------------------------------------------------
+    def task_items(self) -> List:
+        """Snapshot of (task_id, state) pairs — safe to iterate while other
+        threads submit new tasks."""
+        with self._lock:
+            return list(self.tasks.items())
+
     def all_done(self) -> bool:
         with self._lock:
             return bool(self.tasks) and all(

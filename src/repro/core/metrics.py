@@ -53,8 +53,14 @@ class MetricsRecorder:
         self.pools = dict(pools)
         self.intervals: List[Interval] = []
         self.slot_samples: List[Tuple[float, int, int]] = []  # (t, occ, cap)
+        self.counters: Dict[str, int] = {}    # preemption/eviction/replay...
         self.t0: Optional[float] = None
         self.t1: Optional[float] = None
+
+    def incr(self, name: str, n: int = 1):
+        """Count a scheduler event (preemptions, adapter_evictions,
+        adapter_installs, replays, readmissions, ...)."""
+        self.counters[name] = self.counters.get(name, 0) + n
 
     def record(self, pool: str, phase: str, task_id: str, start: float,
                end: float, devices: float = None):
@@ -153,4 +159,7 @@ def summarize(manager, rec: MetricsRecorder) -> Dict[str, float]:
         "time_hrs": span / 3600.0,
         "slot_util_pct": rec.slot_utilization_pct(),
     }
+    # scheduler event counters (zero-valued keys omitted: absent == 0)
+    for name, n in sorted(rec.counters.items()):
+        out[f"n_{name}"] = float(n)
     return out

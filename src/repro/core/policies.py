@@ -74,7 +74,11 @@ def _drive_marlaas(sim: Simulator, mgr: MultiTaskManager,
     adm = AdmissionController(sim.cfg, acfg)
 
     def try_admit():
-        for tid in mgr.pending_tasks():
+        # highest-priority pending tenants claim freed budget first (ties
+        # keep submission order — pending_tasks preserves it)
+        pending = sorted(mgr.pending_tasks(),
+                         key=lambda t: -mgr.tasks[t].spec.priority)
+        for tid in pending:
             wl = workloads[tid]
             need = adm.workload_bytes(wl.rows, wl.prompt_len + wl.gen_len)
             if adm.try_admit_bytes(tid, need):

@@ -28,6 +28,7 @@ from __future__ import annotations
 import random
 import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -38,6 +39,7 @@ import numpy as np
 from repro.configs import ModelConfig
 from repro.envs.tasks import make_env
 from repro.lora.adapters import init_lora
+from repro.lora.multilora import AdapterResidency
 from repro.rollout.engine import (ContinuousRolloutEngine, RolloutEngine,
                                   RolloutRequest, to_trajectory_batch)
 from repro.train.optimizer import AdamWConfig
@@ -53,6 +55,10 @@ class RuntimeConfig:
     rollout_mode: str = "continuous"  # continuous (slot engine) | round (fused)
     max_slots: int = 8                # decode slots in the continuous engine
     max_adapter_slots: int = 8        # stacked-LoRA capacity (tenants resident)
+    scheduler: str = "srpt"           # slot-queue pop order: srpt | fifo
+    starvation_k: int = 8             # refills before a queued row jumps tiers
+    preemption: bool = True           # admission may preempt lower-priority
+                                      # tenants' resident rows
     max_len: int = 96
     use_kernel: bool = False
     seed: int = 0
@@ -101,9 +107,19 @@ class MARLaaSRuntime:
             cfg, base_params, max_slots=rcfg.max_slots,
             max_adapters=rcfg.max_adapter_slots, max_len=rcfg.max_len,
             use_kernel=rcfg.use_kernel, seed=rcfg.seed,
-            tool_executor=self._tool_pool)
-        self._adapter_slot: Dict[str, int] = {}    # task -> stacked-LoRA slot
-        self._free_adapter_slots = list(range(rcfg.max_adapter_slots))
+            tool_executor=self._tool_pool, scheduler=rcfg.scheduler,
+            starvation_k=rcfg.starvation_k)
+        # LRU tenant -> stacked-LoRA slot map (rollout thread only). The
+        # device write happens in _feed_continuous once the consumable
+        # version is known (and only when it changed), so the residency's
+        # own install hook is a no-op slot assignment.
+        self.residency = AdapterResidency(
+            rcfg.max_adapter_slots, lambda slot, tree: None,
+            on_evict=self._on_adapter_evict)
+        self._resident_version: Dict[str, int] = {}   # tenant -> installed v
+        # admission-driven preemptions requested by the driver thread,
+        # executed on the rollout thread (the engine is single-threaded)
+        self._preempt_q: deque = deque()
         self._stop = threading.Event()
         self.failure = failure
         self.error: Optional[BaseException] = None
@@ -146,7 +162,8 @@ class MARLaaSRuntime:
                         task_id=tid, adapter_index=adapter_order[tid],
                         prompt=prompt, truth=truth, env=env,
                         max_new_tokens=st.spec.max_new_tokens,
-                        temperature=st.spec.temperature))
+                        temperature=st.spec.temperature,
+                        priority=st.spec.priority))
         return reqs
 
     # -- rollout worker -------------------------------------------------------
@@ -198,36 +215,42 @@ class MARLaaSRuntime:
             self._stop.set()
 
     # -- streaming rollout worker (continuous slot engine) -----------------
-    def _acquire_adapter_slot(self, tid: str) -> Optional[int]:
-        """Stable stacked-LoRA slot per task; reclaims slots of finished
-        tasks with nothing resident in the engine."""
-        if tid in self._adapter_slot:
-            return self._adapter_slot[tid]
-        if not self._free_adapter_slots:
-            for t2 in list(self._adapter_slot):
-                st2 = self.mgr.tasks[t2]
-                if st2.done and st2.rollout_inflight_rows == 0:
-                    self._free_adapter_slots.append(
-                        self._adapter_slot.pop(t2))
-        if not self._free_adapter_slots:
-            return None
-        slot = self._free_adapter_slots.pop()
-        self._adapter_slot[tid] = slot
-        return slot
+    def _on_adapter_evict(self, tid: str, slot: int):
+        self.mgr.adapter_unbound(tid)
+        self._resident_version.pop(tid, None)
+        self.rec.incr("adapter_evictions")
+
+    def _adapter_in_use(self, tid: str) -> bool:
+        """A tenant's adapter may not be evicted while it has rows resident
+        or queued in the engine (queued requests carry its slot index)."""
+        return (tid in self.cengine.active_tenants()
+                or self.mgr.tasks[tid].rollout_inflight_rows > 0)
 
     def _feed_continuous(self) -> bool:
         """Submit every consumable (task, version) round into the engine
-        queue. Called from the rollout thread only."""
+        queue, acquiring the tenant's stacked-LoRA slot through the LRU
+        residency map (idle tenants' adapters are evicted on demand, so
+        tenant counts ≫ max_adapter_slots stream through). Called from the
+        rollout thread only."""
         fed = False
         for tid in self.mgr.rollout_ready_tasks():
-            slot = self._acquire_adapter_slot(tid)
+            st = self.mgr.tasks[tid]
+            slot = self.residency.acquire(tid, st.adapters,
+                                          in_use=self._adapter_in_use)
             if slot is None:
-                continue          # all adapter slots busy; task stays ready
+                continue     # every adapter slot pinned; task stays ready
+            if st.adapter_slot != slot:          # fresh slot, not a hit
+                self.mgr.adapter_bound(tid, slot)
+                self.rec.incr("adapter_installs")
             np_ = self.mgr.next_policy(tid)
             if np_ is None:
                 continue
             version, adapters = np_
-            self.cengine.set_adapters(slot, adapters)
+            # one device write per (tenant, version): skip when the resident
+            # copy is already this committed tree
+            if self._resident_version.get(tid) != version:
+                self.cengine.set_adapters(slot, adapters)
+                self._resident_version[tid] = version
             reqs = self._build_requests([tid], {tid: slot})
             self.mgr.rollout_started(tid, len(reqs))
             for r in reqs:
@@ -235,6 +258,19 @@ class MARLaaSRuntime:
                                              "version": version})
             fed = True
         return fed
+
+    def _execute_preemptions(self) -> bool:
+        """Apply admission-driven preemptions queued by the driver thread
+        (the engine may only be touched from the rollout thread)."""
+        did = False
+        while self._preempt_q:
+            victim = self._preempt_q.popleft()
+            n = self.cengine.preempt_tenant(victim)
+            if n:
+                self.rec.incr("preemptions")
+                self.rec.incr("preempted_rows", n)
+                did = True
+        return did
 
     def _flush_decode_segment(self, now: float):
         if self._seg_tasks and self._seg_t0 is not None and now > self._seg_t0:
@@ -252,6 +288,7 @@ class MARLaaSRuntime:
         self._seg_t0: Optional[float] = None
         last_slot_sample = None
         while not self._stop.is_set():
+            self._execute_preemptions()
             fed = self._feed_continuous()
             progressed = eng.step()
             now = time.monotonic()
@@ -338,10 +375,67 @@ class MARLaaSRuntime:
             self.error = e
             self._stop.set()
 
+    # -- admission driver (priority-ordered, preemption-capable) -----------
+    def _pending_by_priority(self) -> List[str]:
+        pending = self.mgr.pending_tasks()
+        pending.sort(key=lambda t: -self.mgr.tasks[t].spec.priority)
+        return pending
+
+    def _try_admit_with_preemption(self, tid: str) -> bool:
+        """Admit `tid`, preempting strictly-lower-priority admitted tasks
+        (lowest first) until its byte estimate fits. A preempted victim's
+        resident rows are evicted on the rollout thread and replay later;
+        its bytes move to the admission controller's preempted set for
+        re-admission once capacity frees."""
+        st = self.mgr.tasks[tid]
+        if self.admission.try_admit(st.spec, 32):
+            return True
+        if not (self.rcfg.preemption
+                and self.rcfg.rollout_mode == "continuous"):
+            return False
+        victims = [t2 for t2, s2 in self.mgr.task_items()
+                   if s2.status == "admitted" and not s2.done
+                   and s2.spec.priority < st.spec.priority]
+        victims.sort(key=lambda t2: (self.mgr.tasks[t2].spec.priority,
+                                     -self.mgr.tasks[t2].admitted_at))
+        # feasibility: don't preempt anyone unless evicting ALL eligible
+        # victims would actually fit the newcomer (else thrash for nothing)
+        from .admission import task_state_bytes
+        need = task_state_bytes(self.cfg, st.spec, 32,
+                                self.acfg.kv_dtype_bytes)
+        freeable = sum(self.admission.admitted_bytes(t2) for t2 in victims)
+        if (self.admission.used_bytes - freeable + need
+                > self.acfg.memory_budget_bytes):
+            return False
+        for victim in victims:
+            self.admission.preempt(victim)
+            self.mgr.preempt(victim)
+            self._preempt_q.append(victim)     # engine evicts on its thread
+            if self.admission.try_admit(st.spec, 32):
+                return True
+        return False
+
+    def _admission_tick(self):
+        """One driver pass: release finished, re-admit preempted, admit
+        pending (highest priority first, preempting if allowed)."""
+        for tid, st in self.mgr.task_items():
+            if st.done and (tid in self.admission.admitted()
+                            or tid in self.admission.preempted()):
+                self.admission.release(tid)
+                self.mgr.readmit(tid)          # preempted+done -> finished
+        for tid in sorted(self.admission.preempted(),
+                          key=lambda t: -self.mgr.tasks[t].spec.priority):
+            if self.admission.try_readmit(tid):
+                self.mgr.readmit(tid)
+                self.rec.incr("readmissions")
+        for tid in self._pending_by_priority():
+            if self._try_admit_with_preemption(tid):
+                self.mgr.admit(tid)
+
     # -- drivers ----------------------------------------------------------------
     def run(self, timeout_s: float = 600.0):
         """Run to completion under the configured policy."""
-        for tid in self.mgr.pending_tasks():
+        for tid in self._pending_by_priority():
             st = self.mgr.tasks[tid]
             wl_prompt = 32
             if (self.rcfg.policy == "marlaas"
@@ -368,14 +462,9 @@ class MARLaaSRuntime:
         while time.monotonic() < deadline:
             if self.mgr.all_done() or self._stop.is_set():
                 break
-            # admit pending tasks as slots free up
-            for tid in self.mgr.pending_tasks():
-                st = self.mgr.tasks[tid]
-                if self.admission.try_admit(st.spec, 32):
-                    self.mgr.admit(tid)
-            for tid, st in self.mgr.tasks.items():
-                if st.done and tid in self.admission.admitted():
-                    self.admission.release(tid)
+            # release finished / re-admit preempted / admit pending (with
+            # priority preemption) as capacity moves
+            self._admission_tick()
             time.sleep(0.01)
         self._stop.set()
         rt.join(timeout=10); tt.join(timeout=10)

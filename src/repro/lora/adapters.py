@@ -117,3 +117,17 @@ def stack_adapters(trees):
     single-task ([L, d, r] -> [d, r]) and batched ([L, T, d, r] -> [T, d, r])
     modes (the model's scan body never needs to know)."""
     return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *trees)
+
+
+def init_stacked_buffer(tree, capacity: int):
+    """Zeroed fixed-capacity stacked-LoRA buffer shaped like
+    ``stack_adapters([tree] * capacity)``: leaves [L, capacity, ...].
+
+    Zero is the identity adapter (b == 0 ⇒ delta == 0), so unoccupied /
+    evicted slots are inert — a row routed at a freshly-evicted slot sees
+    the base model, and a buffer rebuilt from scratch from the surviving
+    tenants is bit-identical to one that reached the same occupancy through
+    any install/evict interleaving (the LRU-consistency property test)."""
+    return jax.tree.map(
+        lambda l: jnp.zeros((l.shape[0], capacity) + l.shape[1:], l.dtype),
+        tree)

@@ -78,9 +78,11 @@ def _segsum(dA):
     return jnp.where(mask, diff, -jnp.inf)
 
 
-def _causal_conv_train(xbc, w, b, W: int, conv_state=None):
+def _causal_conv_train(xbc, w, b, W: int, conv_state=None, seq_lens=None):
     """Depthwise causal conv. xbc: [B, S, ch]; w: [ch, W].
-    conv_state: [B, ch, W-1] history (prefill continuation) or None."""
+    conv_state: [B, ch, W-1] history (prefill continuation) or None.
+    seq_lens: [B] true row lengths — the returned state is the window
+    ending at each row's OWN last real token, not at the padded tail."""
     B, S, ch = xbc.shape
     x = xbc.transpose(0, 2, 1)                               # [B, ch, S]
     if conv_state is None:
@@ -93,8 +95,15 @@ def _causal_conv_train(xbc, w, b, W: int, conv_state=None):
     for i in range(W):                                       # W is 4: unroll
         out = out + xp[:, :, i:i + S].astype(jnp.float32) * w[:, i][None, :, None].astype(jnp.float32)
     out = out + b[None, :, None].astype(jnp.float32)
-    new_state = xp[:, :, S:][..., -(W - 1):] if S >= 1 else pad
-    new_state = xp[:, :, -(W - 1):]
+    if seq_lens is None:
+        new_state = xp[:, :, -(W - 1):]
+    else:
+        # real input j sits at xp column W-1+j, so the last W-1 real inputs
+        # of a length-L row are columns [L, L+W-1)
+        idx = seq_lens[:, None, None] + jnp.arange(W - 1)[None, None, :]
+        new_state = jnp.take_along_axis(
+            xp, jnp.broadcast_to(idx, (B, ch, W - 1)).astype(jnp.int32),
+            axis=-1)
     return jax.nn.silu(out).astype(xbc.dtype).transpose(0, 2, 1), new_state
 
 
@@ -164,8 +173,17 @@ def ssd_chunked(x, dt, A, B_, C_, chunk: int, init_state=None):
 
 def mamba_block(x, p: MambaParams, cfg: ModelConfig,
                 lora: Optional[LoraCtx] = None,
-                ssm_state=None, conv_state=None, return_state: bool = False):
-    """Full Mamba2 block over a sequence. x: [B, S, d]."""
+                ssm_state=None, conv_state=None, return_state: bool = False,
+                seq_lens=None):
+    """Full Mamba2 block over a sequence. x: [B, S, d].
+
+    seq_lens [B] (prefill of a mixed-length batch): positions >= the row's
+    true length become state no-ops (dt = 0 ⇒ decay 1, zero injection) and
+    the conv state is taken at the row's own last real token, so the
+    returned states equal an unpadded per-row run exactly. Without it, pad
+    tokens pollute the recurrent state of every row shorter than the
+    padded width (outputs at real positions are unaffected either way —
+    the recurrence is causal)."""
     s = cfg.ssm
     d_in, H, N, G, conv_dim = dims(cfg)
     B, S, _ = x.shape
@@ -174,12 +192,15 @@ def mamba_block(x, p: MambaParams, cfg: ModelConfig,
         zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N], axis=-1)
     xbc = jnp.concatenate([xr, Bc, Cc], axis=-1)             # [B,S,conv_dim]
     xbc, new_conv = _causal_conv_train(xbc, p.conv_w, p.conv_b, s.conv_width,
-                                       conv_state)
+                                       conv_state, seq_lens)
     xr, Bc, Cc = jnp.split(xbc, [d_in, d_in + G * N], axis=-1)
     xh = xr.reshape(B, S, H, s.head_dim)
     Bh = Bc.reshape(B, S, G, N)
     Ch = Cc.reshape(B, S, G, N)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)
+    if seq_lens is not None:
+        dt = dt * (jnp.arange(S)[None, :, None]
+                   < seq_lens[:, None, None]).astype(dt.dtype)
     A = -jnp.exp(p.a_log)
     y, final_state = ssd_chunked(xh, dt, A, Bh, Ch, s.chunk_size, ssm_state)
     y = y + xh.astype(jnp.float32).astype(y.dtype) * p.d_skip[None, None, :, None].astype(y.dtype)

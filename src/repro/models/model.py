@@ -235,12 +235,17 @@ def _lora_layer_slice(lora: Optional[LoraCtx], i=None, sub="layers"):
 def forward_seq(params: Params, tokens, cfg: ModelConfig,
                 lora: Optional[LoraCtx] = None, cache: Optional[Params] = None,
                 *, enc_embeds=None, q_chunk: int = 512,
-                inputs_embeds=None) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+                inputs_embeds=None,
+                seq_lens=None) -> Tuple[jax.Array, Optional[Params], jax.Array]:
     """Full-sequence forward. Returns (hidden [B,S,d], cache', aux_loss).
 
     - train: cache=None
     - prefill: cache provided; K/V written; cache["pos"] must be set by caller
-      afterwards (per-row prompt lengths).
+      afterwards (per-row prompt lengths). For recurrent families
+      (ssm/hybrid) pass `seq_lens` [B] too: the returned ssm/conv states are
+      then exact at each row's true length instead of absorbing pad-token
+      contributions out to the padded width (attention K/V needs no mask —
+      reads beyond `pos` never happen and decode overwrites in place).
     """
     B, S = tokens.shape[:2] if tokens is not None else inputs_embeds.shape[:2]
     if inputs_embeds is None:
@@ -332,7 +337,7 @@ def forward_seq(params: Params, tokens, cfg: ModelConfig,
             lctx = lora.at_layer(lora_i) if (lora is not None and lora_i is not None) else None
             h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
             y, (st, cs) = mamba_block(h, lp["mamba"], cfg, lctx,
-                                      return_state=True)
+                                      return_state=True, seq_lens=seq_lens)
             ys = (st, cs) if want_cache else None
             return x + y, ys
 
@@ -419,7 +424,8 @@ def forward_seq(params: Params, tokens, cfg: ModelConfig,
 
         def run_mamba(h, mp, lt_tree):
             lctx = lora.at_layer(lt_tree) if lt_tree is not None else None
-            y, (st, cs) = mamba_block(h, mp, cfg, lctx, return_state=True)
+            y, (st, cs) = mamba_block(h, mp, cfg, lctx, return_state=True,
+                                      seq_lens=seq_lens)
             return y, st, cs
         if cfg.remat:
             run_mamba = jax.checkpoint(run_mamba)

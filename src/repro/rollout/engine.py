@@ -29,6 +29,21 @@ coupling (dense/hybrid; dropping-MoE capacity is batch-global).
 Budget: only *sampled* tokens (loss_mask == 1) count against
 ``max_new_tokens``; force-fed tool-response tokens are budget-exempt, so a
 long tool response cannot terminate a row before it samples its answer.
+
+Preemption protocol (admission-driven, paper §4.3): ``preempt_slots`` /
+``preempt_tenant`` evict *resident* rows mid-decode. A victim's generated
+prefix lives entirely on the host (``_Row.gen``/``lps``/``lmask``), so
+preemption is free of device copies: the slot is simply marked empty and
+the row re-queued. When the scheduler later pops it, the refill call
+prefill-replays ``prompt + gen`` as one sequence and samples the *next*
+token with counter ``len(gen)`` — exactly the (key, counter) the
+uninterrupted run would have used — so a row preempted at any decode step
+finishes with bit-identical tokens/logprobs. Rows awaiting a tool response
+or mid force-feed are not preemptible (a replayed first token is always
+sampled, never forced); they keep their slot until the forced queue
+drains. Queue pop order is pluggable (``scheduler=``):
+shortest-predicted-remaining with priority tiers and a starvation bound
+(default), or FIFO — see ``rollout/scheduler.py``.
 """
 from __future__ import annotations
 
@@ -45,9 +60,10 @@ import numpy as np
 from repro.configs import ModelConfig
 from repro.data import tokenizer as tok
 from repro.envs.base import Env
-from repro.lora.adapters import batched_ctx, stack_adapters
+from repro.lora.adapters import batched_ctx, init_stacked_buffer, stack_adapters
 from repro.models import decode_step, forward_seq, init_cache, lm_logits
 from repro.rl.types import RolloutCompletion, TrajectoryBatch
+from repro.rollout.scheduler import LengthPredictor, SlotScheduler
 
 
 @dataclass
@@ -61,6 +77,9 @@ class RolloutRequest:
     temperature: float = 1.0
     seed: Optional[int] = None    # per-row key = fold_in(master, seed)
                                   # (defaults to batch/submission index)
+    priority: int = 0             # scheduler tier: higher pops first and is
+                                  # never chosen as a preemption victim over
+                                  # a lower tier
 
 
 @dataclass
@@ -78,6 +97,9 @@ class RolloutStats:
     sampled_tokens: int = 0
     occupied_row_steps: int = 0    # Σ over decode steps of advanced rows
     capacity_row_steps: int = 0    # decode_steps × max_slots
+    preemptions: int = 0           # rows evicted mid-decode and re-queued
+    replays: int = 0               # preempted rows re-prefilled into a slot
+    replay_tokens: int = 0         # prompt+prefix tokens re-processed
 
     def slot_utilization(self) -> float:
         if self.capacity_row_steps <= 0:
@@ -124,7 +146,8 @@ def _build_fns(cfg: ModelConfig, use_kernel: bool):
 
     def prefill(params, adapters, row_ids, tokens, prompt_lens, cache):
         lora = batched_ctx(adapters, row_ids, cfg, use_kernel)
-        h, cache, _ = forward_seq(params, tokens, cfg, lora, cache)
+        h, cache, _ = forward_seq(params, tokens, cfg, lora, cache,
+                                  seq_lens=prompt_lens)
         cache = dict(cache, pos=prompt_lens)
         last = jnp.take_along_axis(
             h, (prompt_lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
@@ -176,22 +199,27 @@ def _build_refill_fn(cfg: ModelConfig, use_kernel: bool, max_len: int):
     call has a single static shape per (width, prompt-bucket) and the refill
     path costs one dispatch regardless of how many slots freed this step.
     The pool's device-resident row state (cur/counters/keys/temps/row_ids)
-    is updated in the same call."""
+    is updated in the same call.
 
-    def refill(params, adapters, tokens, prompt_lens, slots, new_row_ids,
-               new_keys, new_temps, cache, cur, counters, keys, temps,
-               row_ids):
-        k = tokens.shape[0]
-        pcache = init_cache(cfg, k, max_len,
+    `init_counters` is the per-row sampling counter for the token sampled
+    off the prefill logits: 0 for fresh rows, `len(gen)` for
+    preemption-replayed rows (whose `tokens` are prompt + generated prefix)
+    — the replayed row's next token therefore uses the identical
+    fold_in(key, counter) an uninterrupted run would have."""
+
+    def refill(params, adapters, tokens, prompt_lens, init_counters, slots,
+               new_row_ids, new_keys, new_temps, cache, cur, counters, keys,
+               temps, row_ids):
+        pcache = init_cache(cfg, tokens.shape[0], max_len,
                             enc_len=8 if cfg.family == "encdec" else 0)
         lora = batched_ctx(adapters, new_row_ids, cfg, use_kernel)
-        h, pcache, _ = forward_seq(params, tokens, cfg, lora, pcache)
+        h, pcache, _ = forward_seq(params, tokens, cfg, lora, pcache,
+                                   seq_lens=prompt_lens)
         pcache = dict(pcache, pos=prompt_lens)
         last = jnp.take_along_axis(
             h, (prompt_lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
         logits = lm_logits(last, params, cfg)
-        first = _sample_rows(logits, new_keys, jnp.zeros((k,), jnp.int32),
-                             new_temps)
+        first = _sample_rows(logits, new_keys, init_counters, new_temps)
         first = first.astype(jnp.int32)
         lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
                                  first[:, None], axis=-1)[:, 0]
@@ -202,20 +230,21 @@ def _build_refill_fn(cfg: ModelConfig, use_kernel: bool, max_len: int):
             else:                                   # [L, B, ...]
                 out[name] = cache[name].at[:, slots].set(pcache[name])
         state = (cur.at[slots].set(first),
-                 counters.at[slots].set(1),
+                 counters.at[slots].set(init_counters + 1),
                  keys.at[slots].set(new_keys),
                  temps.at[slots].set(new_temps),
                  row_ids.at[slots].set(new_row_ids))
         return first, lp, out, state
 
-    return jax.jit(refill, donate_argnums=(8, 9, 10, 11, 12, 13))
+    return jax.jit(refill, donate_argnums=(9, 10, 11, 12, 13, 14))
 
 
 class _Row:
     """Host-side per-row decode state (one slot / one batch lane)."""
     __slots__ = ("req", "prompt_len", "gen", "lps", "lmask", "sampled",
                  "forced", "status", "forced_q", "finish_reason", "key",
-                 "submit_index", "meta", "submitted_at", "started_at")
+                 "submit_index", "meta", "submitted_at", "started_at",
+                 "replays")
 
     def __init__(self, req: RolloutRequest, key, submit_index: int,
                  meta=None, submitted_at: float = 0.0):
@@ -234,6 +263,7 @@ class _Row:
         self.meta = meta or {}
         self.submitted_at = submitted_at
         self.started_at = 0.0
+        self.replays = 0              # times preempted and re-queued
 
     def accept(self, token: int, lp: float, mask: float, max_total: int) -> str:
         """Record one token; returns "continue" | "done" | "call".
@@ -475,13 +505,22 @@ class ContinuousRolloutEngine:
     ``step()`` from the scheduler loop — or ``drain()`` to run to empty.
     Finished rows stream out of ``drain_completions()`` the moment they
     evict.
+
+    The request queue pops in ``scheduler`` order ("srpt": priority tiers,
+    then shortest predicted remaining budget via a per-tenant EMA length
+    predictor, with a ``starvation_k``-refill progress bound; "fifo":
+    PR-1 arrival order). ``preempt_tenant``/``preempt_slots`` implement the
+    admission-driven preemption protocol documented in the module
+    docstring; preempted rows replay token-for-token.
     """
 
     def __init__(self, cfg: ModelConfig, base_params, *, max_slots: int = 8,
                  max_adapters: int = 8, max_len: int = 128,
                  use_kernel: bool = False, seed: int = 0,
                  tool_executor: Optional[ThreadPoolExecutor] = None,
-                 sim_latency: bool = False, tool_timeout_s: float = 60.0):
+                 sim_latency: bool = False, tool_timeout_s: float = 60.0,
+                 scheduler: str = "srpt", starvation_k: int = 8,
+                 predictor: Optional[LengthPredictor] = None):
         self.cfg = cfg
         self.base_params = base_params
         self.max_slots = max_slots
@@ -516,7 +555,10 @@ class ContinuousRolloutEngine:
         self._d_masks = None
         self._pending: Dict[int, Future] = {}
         self._pending_t0: Dict[int, float] = {}
-        self._queue: Deque[_Row] = deque()
+        self.predictor = predictor or LengthPredictor()
+        self._sched = SlotScheduler(policy=scheduler,
+                                    predictor=self.predictor,
+                                    starvation_k=starvation_k)
         self._completed: Deque[RolloutCompletion] = deque()
         self._n_submitted = 0
         self.stats = RolloutStats()
@@ -551,10 +593,7 @@ class ContinuousRolloutEngine:
                              f"[0, {self.max_adapters})")
         self._ensure_built()
         if self._stacked is None:
-            self._stacked = jax.tree.map(
-                lambda l: jnp.zeros(
-                    (l.shape[0], self.max_adapters) + l.shape[1:], l.dtype),
-                tree)
+            self._stacked = init_stacked_buffer(tree, self.max_adapters)
         self._stacked = self._write_adapter_fn(self._stacked, tree,
                                                jnp.int32(index))
 
@@ -569,7 +608,7 @@ class ContinuousRolloutEngine:
         row = _Row(req, key, self._n_submitted, meta=meta,
                    submitted_at=time.monotonic())
         self._n_submitted += 1
-        self._queue.append(row)
+        self._sched.push(row, self.stats.refills)
         return row.submit_index
 
     # -- introspection ---------------------------------------------------
@@ -580,10 +619,15 @@ class ContinuousRolloutEngine:
         return frozenset(r.req.task_id for r in self._rows if r is not None)
 
     def queued(self) -> int:
-        return len(self._queue)
+        return len(self._sched)
 
     def idle(self) -> bool:
-        return not self._queue and all(r is None for r in self._rows)
+        return not self._sched and all(r is None for r in self._rows)
+
+    def active_tenants(self) -> frozenset:
+        """Tenants with rows resident in slots OR queued (incl. preempted
+        rows awaiting replay) — i.e. whose adapter slot must stay resident."""
+        return self.occupant_tasks() | self._sched.tenants()
 
     def drain_completions(self) -> List[RolloutCompletion]:
         out = []
@@ -607,64 +651,131 @@ class ContinuousRolloutEngine:
             finished_step=self.stats.decode_steps, meta=row.meta)
         self._completed.append(comp)
         self.stats.completions += 1
+        if row.finish_reason in ("eos", "budget", "capacity"):
+            # natural finishes only: a tool_timeout/aborted row's partial
+            # sampled count would bias the tenant's length EMA low
+            self.predictor.observe(row.req.task_id, row.sampled)
         self._rows[slot] = None
         self._prompts[slot] = None
         self._pending.pop(slot, None)
         self._pending_t0.pop(slot, None)
+
+    # -- preemption -------------------------------------------------------
+    def _preemptible(self, slot: int, protect=()) -> bool:
+        r = self._rows[slot]
+        return (r is not None and r.status == "active" and not r.forced_q
+                and slot not in self._pending
+                and r.req.task_id not in protect)
+
+    def _preempt_slot(self, slot: int):
+        """Free one slot: snapshot is implicit (the generated prefix already
+        lives host-side in the _Row), so just vacate and re-queue."""
+        row = self._rows[slot]
+        row.replays += 1
+        self._rows[slot] = None
+        self._prompts[slot] = None
+        self.stats.preemptions += 1
+        self._sched.push(row, self.stats.refills)
+
+    def preempt_tenant(self, task_id: str, max_rows: Optional[int] = None
+                       ) -> int:
+        """Preempt up to `max_rows` (default: all) of a tenant's resident
+        rows; returns the number preempted. Rows mid tool-call or mid
+        force-feed keep their slots (replay always samples its first
+        token). The freed KV needs no save: replay re-prefills the prefix."""
+        n = 0
+        for slot in range(self.max_slots):
+            if max_rows is not None and n >= max_rows:
+                break
+            r = self._rows[slot]
+            if (r is not None and r.req.task_id == task_id
+                    and self._preemptible(slot)):
+                self._preempt_slot(slot)
+                n += 1
+        return n
+
+    def preempt_slots(self, n: int, protect=()) -> int:
+        """Free up to `n` slots for an incoming tenant by preempting the
+        lowest-priority / longest-remaining-budget resident rows (tenants in
+        `protect` are never victims). Returns the number actually freed."""
+        victims = [s for s in range(self.max_slots)
+                   if self._preemptible(s, protect)]
+        victims.sort(key=lambda s: (self._rows[s].req.priority,
+                                    -(self._rows[s].req.max_new_tokens
+                                      - self._rows[s].sampled),
+                                    -self._rows[s].submit_index))
+        freed = 0
+        for slot in victims[:n]:
+            self._preempt_slot(slot)
+            freed += 1
+        return freed
 
     def _refill_free_slots(self) -> bool:
         """Fill every freed slot from the queue with ONE fused jitted call:
         batch-prefill the incoming rows, splice their KV/SSM state into the
         pool, and sample their first tokens. Ghost lanes (fewer queued rows
         than the padded width) scatter out of bounds and are dropped, so the
-        call shape depends only on (width, prompt bucket)."""
+        call shape depends only on (width, prompt bucket).
+
+        The queue pops in scheduler order (priority / predicted-remaining /
+        starvation tier). A preemption-replayed row prefills its prompt +
+        generated prefix in one sequence and samples token `len(gen)` with
+        counter `len(gen)` — bit-identical continuation."""
         free = [s for s in range(self.max_slots) if self._rows[s] is None]
-        if not free or not self._queue:
+        if not free or not self._sched:
             return False
         self._ensure_built()
         if self._stacked is None:
             raise RuntimeError("no adapters installed — call set_adapters()")
         t0 = time.monotonic()
         incoming: List[Tuple[int, _Row]] = []
-        while free and self._queue:
-            incoming.append((free.pop(0), self._queue.popleft()))
+        while free and self._sched:
+            incoming.append((free.pop(0),
+                             self._sched.pop(self.stats.refills)))
         k = len(incoming)
         W = 1                                    # next-pow2 width bucket
         while W < k:
             W *= 2
-        S_p = _bucket_len(max(row.prompt_len for _, row in incoming))
+        seqs = [list(row.req.prompt) + row.gen for _, row in incoming]
+        S_p = _bucket_len(max(len(s) for s in seqs))
         tokens = np.zeros((W, S_p), np.int32)
         prompt_lens = np.ones((W,), np.int32)    # ghosts: len-1 dummy prompt
+        init_counters = np.zeros((W,), np.int32)
         row_ids = np.zeros((W,), np.int32)
         slots = np.full((W,), self.max_slots, np.int32)   # ghosts: OOB → drop
         keys = np.zeros((W, 2), np.uint32)
         temps = np.ones((W,), np.float32)
         for j, (slot, row) in enumerate(incoming):
-            tokens[j, :row.prompt_len] = row.req.prompt
-            prompt_lens[j] = row.prompt_len
+            tokens[j, :len(seqs[j])] = seqs[j]
+            prompt_lens[j] = len(seqs[j])
+            init_counters[j] = len(row.gen)
             row_ids[j] = row.req.adapter_index
             slots[j] = slot
             keys[j] = row.key
             temps[j] = row.req.temperature
         first, lp, self._cache, state = self._refill_fn(
             self.base_params, self._stacked, jnp.asarray(tokens),
-            jnp.asarray(prompt_lens), jnp.asarray(slots),
-            jnp.asarray(row_ids), jnp.asarray(keys), jnp.asarray(temps),
-            self._cache, self._d_cur, self._d_counters, self._d_keys,
-            self._d_temps, self._d_row_ids)
+            jnp.asarray(prompt_lens), jnp.asarray(init_counters),
+            jnp.asarray(slots), jnp.asarray(row_ids), jnp.asarray(keys),
+            jnp.asarray(temps), self._cache, self._d_cur, self._d_counters,
+            self._d_keys, self._d_temps, self._d_row_ids)
         (self._d_cur, self._d_counters, self._d_keys, self._d_temps,
          self._d_row_ids) = state
         first = np.asarray(first)
         lp = np.asarray(lp)
         now = time.monotonic()
         self.stats.refills += 1
-        self.stats.prefills += k
         self.stats.decode_seconds += now - t0
         for j, (slot, row) in enumerate(incoming):
             self._rows[slot] = row
             self._prompts[slot] = list(row.req.prompt)
-            row.started_at = now
-            self.stats.prefill_tokens += row.prompt_len
+            if row.gen:                           # preemption replay
+                self.stats.replays += 1
+                self.stats.replay_tokens += len(seqs[j])
+            else:                                 # fresh row
+                self.stats.prefills += 1
+                row.started_at = now
+            self.stats.prefill_tokens += len(seqs[j])
             self.stats.tokens_generated += 1
             self.stats.sampled_tokens += 1
             action = row.accept(int(first[j]), float(lp[j]), 1.0,
@@ -773,16 +884,18 @@ class ContinuousRolloutEngine:
                 r.status = "done"
                 r.finish_reason = r.finish_reason or "aborted"
                 self._evict(slot)
-        while self._queue:
-            row = self._queue.popleft()
+        for row in self._sched.pop_all():
             row.status, row.finish_reason = "done", "aborted"
+            # a preempted-then-aborted row keeps its generated prefix
             self._completed.append(RolloutCompletion(
                 task_id=row.req.task_id, prompt_len=row.prompt_len,
-                tokens=list(row.req.prompt), gen_logprobs=[],
-                gen_loss_mask=[], truth=row.req.truth, env=row.req.env,
-                finish_reason="aborted", slot=-1,
+                tokens=list(row.req.prompt) + row.gen,
+                gen_logprobs=list(row.lps),
+                gen_loss_mask=list(row.lmask), truth=row.req.truth,
+                env=row.req.env, finish_reason="aborted", slot=-1,
+                sampled_tokens=row.sampled, forced_tokens=row.forced,
                 submit_index=row.submit_index,
-                submitted_at=row.submitted_at,
+                submitted_at=row.submitted_at, started_at=row.started_at,
                 finished_at=time.monotonic(),
                 finished_step=self.stats.decode_steps, meta=row.meta))
             self.stats.completions += 1

@@ -1,0 +1,126 @@
+"""Slot-scheduling policies for the continuous engine (paper §4.3/§4.5).
+
+The continuous engine's cross-task request queue was FIFO in PR 1; at high
+tenant counts a few long rollouts head-of-line block everyone else (the
+skew "RL in the Wild" characterizes). This module provides the ordered pop
+that replaces it:
+
+``LengthPredictor`` — per-tenant EMA of *sampled* completion length, fed by
+every evicted row. Until a tenant has history its prediction is its request
+budget (``max_new_tokens``), so cold tenants are scheduled pessimistically
+and converge as rows complete.
+
+``SlotScheduler`` — the queue. Pop order under policy ``"srpt"``:
+
+  1. starvation tier: any entry that has waited ``starvation_k`` refill
+     events pops first, FIFO among the starved — every queued tenant is
+     guaranteed progress within K refills no matter how many short rows
+     keep arriving;
+  2. priority tier: higher ``RolloutRequest.priority`` first;
+  3. shortest-predicted-remaining-budget first (predicted length minus
+     tokens already sampled — replayed rows get credit for their prefix);
+  4. deterministic tie-break on ``submit_index`` (unique per row).
+
+Policy ``"fifo"`` preserves PR-1 arrival order (the benchmark baseline).
+Token streams are unaffected by pop order: sampling is per-row
+(key, counter), so any schedule yields the same tokens per request.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+POLICIES = ("fifo", "srpt")
+
+
+class LengthPredictor:
+    """EMA per-tenant predictor of sampled completion length."""
+
+    def __init__(self, alpha: float = 0.25):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha {alpha} outside (0, 1]")
+        self.alpha = alpha
+        self._ema: Dict[str, float] = {}
+
+    def observe(self, tenant: str, sampled_tokens: int):
+        """Feed one completed row's sampled-token count."""
+        prev = self._ema.get(tenant)
+        x = float(sampled_tokens)
+        self._ema[tenant] = x if prev is None else (
+            self.alpha * x + (1.0 - self.alpha) * prev)
+
+    def predict(self, tenant: str, budget: int) -> float:
+        """Expected sampled length for a row of `tenant` with this budget.
+
+        No history -> the full budget (pessimistic prior); with history the
+        EMA, still capped by the budget (a row can never exceed it)."""
+        e = self._ema.get(tenant)
+        return float(budget) if e is None else min(float(budget), e)
+
+    def remaining(self, tenant: str, budget: int, sampled: int) -> float:
+        """Predicted sampled tokens still to come for a (possibly replayed)
+        row that has already sampled `sampled` of its `budget`."""
+        return max(1.0, self.predict(tenant, budget) - float(sampled))
+
+
+@dataclass
+class _Entry:
+    row: object          # duck-typed: .req.{task_id,priority,max_new_tokens},
+                         # .sampled, .submit_index
+    seq: int             # push order (FIFO key)
+    enq_refill: int      # engine refill counter at push time (starvation age)
+
+
+class SlotScheduler:
+    """Ordered request queue for the continuous engine's free-slot refill."""
+
+    def __init__(self, policy: str = "srpt",
+                 predictor: Optional[LengthPredictor] = None,
+                 starvation_k: int = 8):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown scheduler policy {policy!r}; "
+                             f"one of {POLICIES}")
+        if starvation_k < 1:
+            raise ValueError("starvation_k must be >= 1")
+        self.policy = policy
+        self.predictor = predictor or LengthPredictor()
+        self.starvation_k = starvation_k
+        self._entries: List[_Entry] = []
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def push(self, row, refill_count: int = 0):
+        self._entries.append(_Entry(row, self._seq, refill_count))
+        self._seq += 1
+
+    def _key(self, e: _Entry, refill_count: int):
+        if self.policy == "fifo":
+            return (e.seq,)
+        starved = (refill_count - e.enq_refill) >= self.starvation_k
+        if starved:
+            # starvation tier wins outright; FIFO among the starved
+            return (0, e.seq, 0, 0.0, 0)
+        req = e.row.req
+        rem = self.predictor.remaining(req.task_id, req.max_new_tokens,
+                                       e.row.sampled)
+        return (1, 0, -req.priority, rem, e.row.submit_index)
+
+    def pop(self, refill_count: int = 0):
+        """Remove and return the highest-ranked row, or None if empty."""
+        if not self._entries:
+            return None
+        best = min(range(len(self._entries)),
+                   key=lambda i: self._key(self._entries[i], refill_count))
+        return self._entries.pop(best).row
+
+    def pop_all(self) -> List:
+        """Drain every queued row in current pop order (abort path)."""
+        out = []
+        while self._entries:
+            out.append(self.pop())
+        return out
+
+    def tenants(self) -> frozenset:
+        return frozenset(e.row.req.task_id for e in self._entries)

@@ -112,3 +112,29 @@ def test_advance_mask_freezes_rows(rng_key):
     lg_clean, _ = decode_step(p, real, cache2, cfg)
     err = float(jnp.max(jnp.abs(lg_frozen[1] - lg_clean[1])))
     assert err < 1e-4, f"frozen-row resume diverged: {err}"
+
+
+@pytest.mark.parametrize("name", ["mamba2-780m", "zamba2-1.2b"])
+def test_mixed_length_prefill_state_exact(name, rng_key):
+    """Regression (ISSUE 2): recurrent-state prefill of a padded
+    mixed-length batch must equal per-row unpadded prefill — without the
+    seq_lens mask, pad tokens beyond a short row's length polluted its
+    ssm/conv state (and any later decode from it)."""
+    cfg = tiny(name)
+    p = init_params(rng_key, cfg)
+    B, S = 3, 24
+    lens = jnp.array([9, 24, 15], jnp.int32)
+    toks = jax.random.randint(rng_key, (B, S), 1, cfg.vocab_size)
+
+    cache = init_cache(cfg, B, 32, dtype=jnp.float32)
+    _, cache, _ = forward_seq(p, toks, cfg, None, cache, seq_lens=lens)
+
+    for i in range(B):
+        L = int(lens[i])
+        solo = init_cache(cfg, 1, 32, dtype=jnp.float32)
+        _, solo, _ = forward_seq(p, toks[i:i + 1, :L], cfg, None, solo)
+        for nm in ("ssm", "conv"):
+            got = cache[nm][:, i]
+            want = solo[nm][:, 0]
+            err = float(jnp.max(jnp.abs(got - want)))
+            assert err < 1e-5, f"row {i} ({nm}): padded-state err {err}"

@@ -1,0 +1,229 @@
+"""Slot-scheduler policies (SRPT pop order, priority tiers, starvation
+bound, deterministic ties), the EMA length predictor, LRU adapter
+residency, and the admission controller's preempt/readmit accounting."""
+from types import SimpleNamespace
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.admission import AdmissionConfig, AdmissionController
+from repro.core.manager import MultiTaskManager, TaskSpec
+from repro.lora.multilora import AdapterResidency
+from repro.rollout.scheduler import LengthPredictor, SlotScheduler
+
+_IDX = [0]
+
+
+def row(task="t", priority=0, budget=16, sampled=0):
+    """Duck-typed stand-in for the engine's _Row (unique submit_index)."""
+    _IDX[0] += 1
+    return SimpleNamespace(
+        req=SimpleNamespace(task_id=task, priority=priority,
+                            max_new_tokens=budget),
+        sampled=sampled, submit_index=_IDX[0])
+
+
+# -- LengthPredictor ------------------------------------------------------
+
+def test_predictor_prior_is_budget_then_ema():
+    p = LengthPredictor(alpha=0.5)
+    assert p.predict("a", 32) == 32.0            # cold tenant: full budget
+    p.observe("a", 8)
+    assert p.predict("a", 32) == 8.0
+    p.observe("a", 16)
+    assert p.predict("a", 32) == 12.0            # 0.5*16 + 0.5*8
+    assert p.predict("a", 10) == 10.0            # capped by the row's budget
+    assert p.predict("b", 32) == 32.0            # other tenants unaffected
+
+
+def test_predictor_remaining_credits_replayed_prefix():
+    p = LengthPredictor()
+    p.observe("a", 20)
+    assert p.remaining("a", 64, sampled=15) == 5.0
+    assert p.remaining("a", 64, sampled=25) == 1.0   # floor at 1
+
+
+# -- SRPT pop ordering ----------------------------------------------------
+
+def test_srpt_pops_shortest_remaining_budget_first():
+    s = SlotScheduler(policy="srpt")
+    long_, short, mid = row(budget=64), row(budget=4), row(budget=16)
+    for r in (long_, short, mid):
+        s.push(r)
+    assert s.pop() is short
+    assert s.pop() is mid
+    assert s.pop() is long_
+    assert s.pop() is None
+
+
+def test_srpt_uses_predicted_not_nominal_length():
+    p = LengthPredictor()
+    p.observe("chatty", 6)              # big budget but short in practice
+    s = SlotScheduler(policy="srpt", predictor=p)
+    nominal_short = row(task="fresh", budget=10)
+    learned_short = row(task="chatty", budget=64)
+    s.push(nominal_short)
+    s.push(learned_short)
+    assert s.pop() is learned_short     # predicted 6 < fresh prior 10
+
+
+def test_priority_tiers_dominate_remaining():
+    s = SlotScheduler(policy="srpt")
+    low_short = row(priority=0, budget=2)
+    high_long = row(priority=5, budget=64)
+    s.push(low_short)
+    s.push(high_long)
+    assert s.pop() is high_long         # tier first, length second
+
+
+def test_deterministic_tie_break_on_submit_index():
+    s = SlotScheduler(policy="srpt")
+    rows = [row(task="t", budget=8) for _ in range(5)]
+    for r in reversed(rows):            # push in reverse submit order
+        s.push(r)
+    assert [s.pop() for _ in range(5)] == rows
+
+
+def test_fifo_policy_preserves_arrival_order():
+    s = SlotScheduler(policy="fifo")
+    a, b, c = row(budget=64), row(budget=2), row(budget=8)
+    for r in (a, b, c):
+        s.push(r)
+    assert [s.pop(), s.pop(), s.pop()] == [a, b, c]
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="policy"):
+        SlotScheduler(policy="wfq")
+
+
+def test_starvation_bound_every_tenant_progresses_within_k_refills():
+    """A long row can be bypassed by newly-arriving short rows at most
+    `starvation_k` times: after K refill events it jumps to the starved
+    tier and pops before any fresh short row."""
+    K = 4
+    s = SlotScheduler(policy="srpt", starvation_k=K)
+    long_ = row(task="long", budget=100)
+    s.push(long_, refill_count=0)
+    popped_at = None
+    for refill in range(20):
+        # adversary: two fresh short rows arrive every refill
+        s.push(row(task="spam", budget=1), refill_count=refill)
+        s.push(row(task="spam", budget=1), refill_count=refill)
+        got = s.pop(refill_count=refill)
+        if got is long_:
+            popped_at = refill
+            break
+    assert popped_at is not None and popped_at <= K, popped_at
+
+
+def test_starved_rows_pop_fifo_among_themselves():
+    s = SlotScheduler(policy="srpt", starvation_k=2)
+    first = row(task="a", budget=50)
+    second = row(task="b", budget=1)    # shorter, but starved later
+    s.push(first, refill_count=0)
+    s.push(second, refill_count=0)
+    assert s.pop(refill_count=10) is first     # both starved: FIFO
+    assert s.pop(refill_count=10) is second
+
+
+# -- AdapterResidency (LRU) ----------------------------------------------
+
+def test_residency_lru_evicts_least_recently_used_idle_tenant():
+    installed = {}
+    res = AdapterResidency(2, lambda slot, tree: installed.update({slot: tree}))
+    assert res.acquire("a", "tree-a") == 0
+    assert res.acquire("b", "tree-b") == 1
+    res.touch("a")                      # b is now LRU
+    slot = res.acquire("c", "tree-c")
+    assert slot == 1 and installed[1] == "tree-c"
+    assert res.resident() == {"a": 0, "c": 1}
+    assert res.evictions == 1 and res.installs == 3
+
+
+def test_residency_never_evicts_in_use_tenant():
+    res = AdapterResidency(1, lambda slot, tree: None)
+    res.acquire("busy", "t1")
+    assert res.acquire("new", "t2", in_use=lambda t: t == "busy") is None
+    assert res.resident() == {"busy": 0}
+    assert res.acquire("new", "t2") == 0          # evictable once idle
+    assert res.slot_of("busy") is None
+
+
+def test_residency_hit_does_not_reinstall():
+    res = AdapterResidency(2, lambda slot, tree: None)
+    res.acquire("a", "t")
+    res.acquire("a", "t")
+    assert res.installs == 1 and res.hits == 1
+
+
+# -- AdmissionController preempt/readmit accounting -----------------------
+
+def _strict_controller(budget):
+    return AdmissionController(
+        get_config("granite-3-2b"),
+        AdmissionConfig(memory_budget_bytes=budget, strict=True))
+
+
+def test_admission_preempt_releases_bytes_regression():
+    """Regression: preempted (not finished) tasks must release their
+    reservation — previously bytes were only dropped at task finish, so
+    preemption could never create admission capacity."""
+    ac = _strict_controller(100)
+    assert ac.try_admit_bytes("a", 80)
+    assert not ac.try_admit_bytes("b", 80)       # no room
+    assert ac.preempt("a") == 80
+    assert ac.used_bytes == 0                    # bytes actually freed
+    assert ac.try_admit_bytes("b", 80)           # newcomer fits now
+    assert ac.admitted() == ["b"] and ac.preempted() == ["a"]
+
+
+def test_admission_readmit_recharges_same_estimate():
+    ac = _strict_controller(100)
+    ac.try_admit_bytes("a", 60)
+    ac.preempt("a")
+    ac.try_admit_bytes("b", 70)
+    assert not ac.try_readmit("a")               # 70 + 60 > 100
+    ac.release("b")
+    assert ac.try_readmit("a")
+    assert ac.used_bytes == 60 and ac.preempted() == []
+
+
+def test_admission_release_clears_preempted_reservation():
+    ac = _strict_controller(100)
+    ac.try_admit_bytes("a", 60)
+    ac.preempt("a")
+    ac.release("a")                              # finished while preempted
+    assert ac.preempted() == [] and not ac.try_readmit("a")
+
+
+def test_preempt_unknown_or_pending_task_is_noop():
+    ac = _strict_controller(100)
+    assert ac.preempt("ghost") == 0
+    assert ac.used_bytes == 0
+
+
+# -- manager preemption state machine -------------------------------------
+
+def test_manager_preempt_blocks_new_rounds_until_readmit():
+    m = MultiTaskManager()
+    m.submit(TaskSpec("t", "gsm8k", target_steps=5))
+    m.admit("t")
+    assert m.preempt("t")
+    assert m.tasks["t"].status == "preempted"
+    assert m.tasks["t"].preempt_count == 1
+    assert m.next_policy("t") is None            # no NEW rollout rounds
+    assert m.rollout_ready_tasks() == []
+    assert m.readmit("t")
+    assert m.next_policy("t") == (0, None)       # unblocked
+    assert not m.readmit("t")                    # only from preempted
+
+
+def test_manager_adapter_residency_bookkeeping():
+    m = MultiTaskManager()
+    m.submit(TaskSpec("t", "gsm8k"))
+    m.adapter_bound("t", 3)
+    assert m.resident_adapters() == {"t": 3}
+    assert m.tasks["t"].adapter_installs == 1
+    m.adapter_unbound("t")
+    assert m.resident_adapters() == {}
