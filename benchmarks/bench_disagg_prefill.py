@@ -1,0 +1,223 @@
+"""Disaggregated async prefill vs fused-refill baseline (ISSUE 3 tentpole).
+
+Workload: mixed prompt lengths through a shared slot engine — SHORT_TENANTS
+tenants with short prompts and short budgets (the interference victims)
+alongside LONG_TENANTS tenants whose long prompts dominate prefill cost.
+Every tenant streams rounds of ROWS rows, resubmitting the moment its
+previous round completes, so long-prompt prefills arrive continuously while
+the short tenants decode.
+
+Two engines over the IDENTICAL workload (same scheduler, same seeds, same
+token streams — the engines are bit-identical by construction):
+
+  fused   — baseline: every refill prefill runs as one fused jitted call ON
+            the decode stream; a long prompt stalls decode for all resident
+            tenants (booked as decode_stall_seconds).
+  disagg  — this PR: prefill runs chunked on async worker threads; the
+            decode stream only splices ready rows (scatter-only call), so
+            short tenants' decode proceeds while long prompts prefill.
+
+Metric: wall-clock per-round latency of the SHORT tenants (what a latency-
+sensitive tenant of the service experiences), p95 across rounds. Gate:
+
+    p95(fused) / p95(disagg) >= 1.2x
+
+The win is core-count independent: even on one core, chunked prefill
+yields the decode stream between chunks, so short rounds stop paying for
+whole long prompts. decode-stall seconds are reported for both modes —
+~0 for disagg while the fused baseline stalls on every refill.
+
+  PYTHONPATH=src python -m benchmarks.bench_disagg_prefill [--json out.json]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import random
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import REGISTRY, reduced
+from repro.data import tokenizer as tok
+from repro.envs.tasks import make_env
+from repro.lora.adapters import init_lora
+from repro.models import init_params
+from repro.rollout.engine import ContinuousRolloutEngine, RolloutRequest
+
+SHORT_TENANTS = 2
+LONG_TENANTS = 2
+N_TENANTS = SHORT_TENANTS + LONG_TENANTS
+DECODE_SLOTS = 4
+MAX_LEN = 320
+ROWS = 2
+SHORT_ROUNDS = 8          # measured rounds per short tenant
+LONG_PROMPT = 256         # long-prompt tokens (prefill-dominated)
+SHORT_BUDGET, LONG_BUDGET = 6, 4
+PREFILL_CHUNK = 64
+PREFILL_WORKERS = 2
+GATE = 1.2
+
+_STATE = {}
+
+
+def _model():
+    if not _STATE:
+        cfg = dataclasses.replace(reduced(REGISTRY["granite-3-2b"],
+                                          dtype="float32"),
+                                  vocab_size=tok.VOCAB_SIZE)
+        _STATE["cfg"] = cfg
+        _STATE["params"] = init_params(jax.random.PRNGKey(0), cfg)
+        _STATE["trees"] = [init_lora(jax.random.PRNGKey(100 + t), cfg)
+                           for t in range(N_TENANTS)]
+    return _STATE["cfg"], _STATE["params"], _STATE["trees"]
+
+
+def _prompts():
+    """Deterministic per-(tenant, round, row) prompts: tenants < SHORT are
+    natural short env prompts; the rest are stretched to LONG_PROMPT."""
+    env = make_env("gsm8k")
+    rng = random.Random(0)
+    table = {}
+    for t in range(N_TENANTS):
+        for r in range(64):           # enough rounds for the long streamers
+            for i in range(ROWS):
+                prompt, truth = env.sample_prompt(rng)
+                if t >= SHORT_TENANTS:
+                    prompt = (prompt * 64)[:LONG_PROMPT]
+                table[(t, r, i)] = (prompt, truth)
+    return env, table
+
+
+def _stream(eng, env, table):
+    """Stream rounds until every SHORT tenant finished SHORT_ROUNDS; long
+    tenants resubmit continuously so prefill pressure never lets up.
+    Returns short-round wall latencies."""
+    rounds_done = [0] * N_TENANTS
+    inflight = [0] * N_TENANTS
+    ready_at = [0.0] * N_TENANTS
+    short_lat = []
+    t0 = time.monotonic()
+    guard = t0 + 600.0
+
+    def short_done():
+        return all(rounds_done[t] >= SHORT_ROUNDS
+                   for t in range(SHORT_TENANTS))
+
+    while not short_done() and time.monotonic() < guard:
+        for t in range(N_TENANTS):
+            if inflight[t] == 0:
+                if t < SHORT_TENANTS and rounds_done[t] >= SHORT_ROUNDS:
+                    continue
+                r = rounds_done[t]
+                budget = SHORT_BUDGET if t < SHORT_TENANTS else LONG_BUDGET
+                for i in range(ROWS):
+                    prompt, truth = table[(t, r % 64, i)]
+                    eng.submit(RolloutRequest(
+                        f"t{t}", t, prompt, truth, env,
+                        max_new_tokens=budget, seed=t * 4096 + r * 8 + i))
+                inflight[t] = ROWS
+        progressed = eng.step()
+        now = time.monotonic()
+        for c in eng.drain_completions():
+            t = int(c.task_id[1:])
+            inflight[t] -= 1
+            if inflight[t] == 0:
+                rounds_done[t] += 1
+                if t < SHORT_TENANTS:
+                    short_lat.append(now - t0 - ready_at[t])
+                ready_at[t] = now - t0
+        if not progressed:
+            time.sleep(0.0002)        # waiting on the async prefill stage
+    assert len(short_lat) == SHORT_TENANTS * SHORT_ROUNDS, (
+        f"only {len(short_lat)} short rounds completed")
+    return short_lat
+
+
+def run_mode(mode: str):
+    """One engine per mode; the IDENTICAL workload streams twice — the
+    first pass warms every jit variant (refill width/prompt buckets, chunk
+    offsets, splice) on the SAME engine instance, the second is measured.
+    p95 would otherwise gate on compile pauses, not scheduling."""
+    cfg, params, trees = _model()
+    env, table = _prompts()
+    eng = ContinuousRolloutEngine(
+        cfg, params, max_slots=DECODE_SLOTS, max_adapters=N_TENANTS,
+        max_len=MAX_LEN, seed=0, scheduler="srpt",
+        disagg_prefill=(mode == "disagg"), prefill_chunk=PREFILL_CHUNK,
+        prefill_workers=PREFILL_WORKERS)
+    for t in range(N_TENANTS):
+        eng.set_adapters(t, trees[t])
+    _stream(eng, env, table)                 # warm pass (compiles)
+    eng.drain(120.0)                         # finish the long stragglers
+    eng.drain_completions()
+    from repro.rollout.engine import RolloutStats
+    eng.stats = RolloutStats()               # measure the second pass only
+    lat = _stream(eng, env, table)
+    stats = eng.stats
+    eng.shutdown()
+    return lat, stats
+
+
+def bench():
+    out = {"config": {
+        "short_tenants": SHORT_TENANTS, "long_tenants": LONG_TENANTS,
+        "decode_slots": DECODE_SLOTS, "rows_per_round": ROWS,
+        "short_rounds": SHORT_ROUNDS, "long_prompt": LONG_PROMPT,
+        "budgets": [SHORT_BUDGET, LONG_BUDGET],
+        "prefill_chunk": PREFILL_CHUNK, "prefill_workers": PREFILL_WORKERS}}
+    for mode in ("fused", "disagg"):
+        lat, stats = run_mode(mode)
+        out[mode] = {
+            "p50_s": float(np.percentile(lat, 50)),
+            "p95_s": float(np.percentile(lat, 95)),
+            "mean_s": float(np.mean(lat)),
+            "max_s": float(np.max(lat)),
+            "decode_stall_s": stats.decode_stall_seconds,
+            "prefill_s": stats.prefill_seconds,
+            "decode_s": stats.decode_seconds,
+            "splice_s": stats.splice_seconds,
+            "splices": stats.splices,
+            "prefill_chunks": stats.prefill_chunks,
+            "decode_steps": stats.decode_steps,
+        }
+    ratio = out["fused"]["p95_s"] / out["disagg"]["p95_s"]
+    out["p95_speedup"] = float(ratio)
+    out["gate"] = GATE
+    out["pass"] = bool(ratio >= GATE)
+    # the disaggregation guarantee itself: decode never ran prefill work
+    if out["disagg"]["decode_stall_s"] != 0.0:
+        out["pass"] = False
+    if out["disagg"]["prefill_chunks"] <= out["disagg"]["splices"]:
+        out["pass"] = False                  # chunking never engaged
+    print(f"bench_disagg_prefill,short={SHORT_TENANTS},long={LONG_TENANTS},"
+          f"long_prompt={LONG_PROMPT},"
+          f"fused_p95={out['fused']['p95_s']*1e3:.0f}ms,"
+          f"disagg_p95={out['disagg']['p95_s']*1e3:.0f}ms,"
+          f"p95_speedup={ratio:.2f}x,"
+          f"fused_stall={out['fused']['decode_stall_s']:.2f}s,"
+          f"disagg_stall={out['disagg']['decode_stall_s']:.2f}s,"
+          f"{'ok' if out['pass'] else 'FAIL'}")
+    return out
+
+
+def main(argv):
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            print("usage: bench_disagg_prefill [--json OUT.json]")
+            return 2
+        json_path = argv[i + 1]
+    out = bench()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {json_path}")
+    return 0 if out["pass"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -53,6 +53,12 @@ def main():
     ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
     ap.add_argument("--timeout", type=float, default=3600.0)
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--disagg-prefill", action="store_true",
+                    help="async prefill stage (Fig 5): prefills run on "
+                         "worker threads, decode only splices")
+    ap.add_argument("--prefill-workers", type=int, default=1)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill size (0 = whole prompt)")
     args = ap.parse_args()
 
     cfg = base_config(args.preset)
@@ -64,7 +70,10 @@ def main():
     rt = MARLaaSRuntime(cfg, params, RuntimeConfig(
         policy=args.policy, max_len=64, seed=0,
         checkpoint_dir=args.checkpoint_dir,
-        checkpoint_every=5 if args.checkpoint_dir else 0))
+        checkpoint_every=5 if args.checkpoint_dir else 0,
+        disagg_prefill=args.disagg_prefill,
+        prefill_workers=args.prefill_workers,
+        prefill_chunk=args.prefill_chunk))
     for i in range(args.tasks):
         env = ENVS[i % len(ENVS)]
         rt.submit_task(TaskSpec(f"{env}-{i}", env, group_size=4, num_groups=1,

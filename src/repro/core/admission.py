@@ -14,7 +14,7 @@ raises per-step latency with marginal throughput gain.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.configs import ModelConfig
 from .manager import TaskSpec
@@ -36,6 +36,27 @@ def task_state_bytes(cfg: ModelConfig, spec: TaskSpec,
     per_tok = cfg.state_bytes_per_token(dtype_bytes)
     fixed = cfg.state_bytes_fixed(dtype_bytes)
     return rows * (max_len * per_tok + fixed)
+
+
+def task_state_bytes_remaining(cfg: ModelConfig, spec: TaskSpec,
+                               prompt_len: int = 64, dtype_bytes: int = 2,
+                               sampled_mean: float = 0.0) -> int:
+    """Remaining-budget-aware re-estimate for a PREEMPTED task (ROADMAP
+    open item): its rows carry `sampled_mean` already-generated tokens on
+    average, so the modelled KV headroom charged at readmission shrinks by
+    that share — readmission packs tighter than the original admission.
+
+    Modelling note (soft, like the rest of the controller): a replayed
+    row's prefix KV is re-materialized at replay, so the true peak matches
+    the original estimate; but the prefix re-decode phase is brief and the
+    controller's budget is a knee model, not an allocator — charging only
+    the remaining growth is the paper's intent for re-admission packing."""
+    rows = spec.rows_per_batch
+    done = max(0.0, min(float(sampled_mean), float(spec.max_new_tokens)))
+    rem_len = prompt_len + spec.max_new_tokens - done
+    per_tok = cfg.state_bytes_per_token(dtype_bytes)
+    fixed = cfg.state_bytes_fixed(dtype_bytes)
+    return int(rows * (rem_len * per_tok + fixed))
 
 
 class AdmissionController:
@@ -103,9 +124,27 @@ class AdmissionController:
         self._preempted[task_id] = need
         return need
 
+    def reestimate_preempted(self, task_id: str, spec: TaskSpec,
+                             sampled_mean: float,
+                             prompt_len: int = 64) -> Optional[int]:
+        """Tighten a preempted task's parked reservation to the
+        remaining-budget-aware estimate (never raises it — the original
+        charge is the ceiling). Returns the new estimate, or None if the
+        task is not in the preempted set."""
+        old = self._preempted.get(task_id)
+        if old is None:
+            return None
+        new = task_state_bytes_remaining(self.cfg, spec, prompt_len,
+                                         self.acfg.kv_dtype_bytes,
+                                         sampled_mean)
+        self._preempted[task_id] = min(old, new)
+        return self._preempted[task_id]
+
     def try_readmit(self, task_id: str) -> bool:
         """Re-charge a preempted task's remembered estimate if it fits (the
-        empty-system soft rule of try_admit_bytes applies)."""
+        empty-system soft rule of try_admit_bytes applies). The estimate
+        may have been tightened by `reestimate_preempted` since preemption
+        (rows already partially decoded need less KV headroom)."""
         need = self._preempted.get(task_id)
         if need is None:
             return False

@@ -13,12 +13,25 @@
                    fraction of the engine's decode slots holding a live row
                    (the §4.1 quantity round-fused scheduling wastes at the
                    end-of-round barrier).
+  stage busy     — per-stage (prefill / decode / splice) busy seconds of the
+                   disaggregated rollout layout (Fig 5): prefill intervals
+                   come from the async prefill workers, decode intervals
+                   from the decode stream, splice intervals from the
+                   scatter-only installs. Under the fused baseline prefill
+                   intervals sit ON the decode stream (decode-stall); under
+                   ``disagg_prefill`` they overlap it.
+  queue depth    — step-function timeline of the prefill-stage queues
+                   (waiting + in-prefill, ready-to-splice) — the Fig-5
+                   hand-off depths between the two rollout stages.
 
 Both runtimes (real threads and virtual-time simulator) record through this
-same recorder, so benchmark tables are produced by one code path.
+same recorder, so benchmark tables are produced by one code path. The
+recorder is thread-safe: the disaggregated prefill workers record stage
+intervals concurrently with the decode and trainer threads.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -27,6 +40,7 @@ from typing import Dict, List, Optional, Tuple
 PHASE_INTENSITY = {
     "decode": 0.08,
     "prefill": 0.45,
+    "splice": 0.05,     # scatter-only cache install (HBM copy, no compute)
     "train": 0.40,
     "env": 0.0,
 }
@@ -53,23 +67,28 @@ class MetricsRecorder:
         self.pools = dict(pools)
         self.intervals: List[Interval] = []
         self.slot_samples: List[Tuple[float, int, int]] = []  # (t, occ, cap)
+        self.queue_samples: List[Tuple[float, int, int]] = []  # (t, pq, rq)
         self.counters: Dict[str, int] = {}    # preemption/eviction/replay...
         self.t0: Optional[float] = None
         self.t1: Optional[float] = None
+        self._lock = threading.Lock()   # prefill workers record concurrently
 
     def incr(self, name: str, n: int = 1):
         """Count a scheduler event (preemptions, adapter_evictions,
         adapter_installs, replays, readmissions, ...)."""
-        self.counters[name] = self.counters.get(name, 0) + n
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0) + n
 
     def record(self, pool: str, phase: str, task_id: str, start: float,
                end: float, devices: float = None):
         if end <= start:
             return
         devices = devices if devices is not None else self.pools.get(pool, 0)
-        self.intervals.append(Interval(pool, phase, task_id, start, end, devices))
-        self.t0 = start if self.t0 is None else min(self.t0, start)
-        self.t1 = end if self.t1 is None else max(self.t1, end)
+        with self._lock:
+            self.intervals.append(Interval(pool, phase, task_id, start, end,
+                                           devices))
+            self.t0 = start if self.t0 is None else min(self.t0, start)
+            self.t1 = end if self.t1 is None else max(self.t1, end)
 
     def record_slot_sample(self, t: float, occupied: int, capacity: int):
         """Point sample of continuous-engine slot occupancy (step-function
@@ -77,6 +96,30 @@ class MetricsRecorder:
         if capacity <= 0:
             return
         self.slot_samples.append((t, occupied, capacity))
+
+    def record_queue_sample(self, t: float, prefill_q: int, ready_q: int):
+        """Point sample of the disaggregated prefill stage's queue depths
+        (waiting+in-prefill, ready-to-splice); step-function timeline like
+        the slot samples."""
+        self.queue_samples.append((t, prefill_q, ready_q))
+
+    def queue_depth_stats(self) -> Dict[str, float]:
+        """Time-weighted mean + max depth per stage queue over the run."""
+        qs = self.queue_samples
+        if len(qs) < 2:
+            return {}
+        wp = wr = total = 0.0
+        for (t0, pq, rq), (t1, _, _) in zip(qs, qs[1:]):
+            dt = max(0.0, t1 - t0)
+            wp += dt * pq
+            wr += dt * rq
+            total += dt
+        if total <= 0:
+            return {}
+        return {"prefill_q_mean": wp / total,
+                "prefill_q_max": float(max(pq for _, pq, _ in qs)),
+                "ready_q_mean": wr / total,
+                "ready_q_max": float(max(rq for _, _, rq in qs))}
 
     def slot_utilization_pct(self) -> float:
         """Time-weighted mean of occupied/capacity over the sampled span."""
@@ -99,9 +142,11 @@ class MetricsRecorder:
     def total_device_seconds(self) -> float:
         return sum(self.pools.values()) * self.span()
 
-    def busy_device_seconds(self, pool: str = None) -> float:
+    def busy_device_seconds(self, pool: str = None,
+                            phase: str = None) -> float:
         return sum((iv.end - iv.start) * iv.devices for iv in self.intervals
-                   if iv.phase != "env" and (pool is None or iv.pool == pool))
+                   if iv.phase != "env" and (pool is None or iv.pool == pool)
+                   and (phase is None or iv.phase == phase))
 
     def utilization_pct(self) -> float:
         """AI-core utilization (paper Table 3 definition)."""
@@ -159,6 +204,12 @@ def summarize(manager, rec: MetricsRecorder) -> Dict[str, float]:
         "time_hrs": span / 3600.0,
         "slot_util_pct": rec.slot_utilization_pct(),
     }
+    # per-stage busy time of the disaggregated rollout layout (Fig 5)
+    for phase in ("prefill", "decode", "splice"):
+        busy = rec.busy_device_seconds(pool="rollout", phase=phase)
+        if busy > 0:
+            out[f"{phase}_busy_s"] = busy
+    out.update(rec.queue_depth_stats())
     # scheduler event counters (zero-valued keys omitted: absent == 0)
     for name, n in sorted(rec.counters.items()):
         out[f"n_{name}"] = float(n)

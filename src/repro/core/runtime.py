@@ -1,21 +1,39 @@
-"""Real (threaded) MARLaaS runtime: the disaggregated engines of Fig 5
+"""Real (threaded) MARLaaS runtime: the disaggregated stages of Fig 5
 executing actual JAX rollout + GRPO training on this host.
 
-  RolloutWorker thread — streaming (default, `rollout_mode="continuous"`):
-    feeds per-task requests into the persistent slot engine's cross-task
-    queue the moment each task's `next_policy` version becomes consumable,
-    pumps the engine (refill freed slots, one decode step), and assembles
-    completed trajectories from the engine's completion stream — so decode
-    never drains between tenant groups (paper §4.1/§4.5). The legacy
-    `rollout_mode="round"` fuses one multi-LoRA generate() per round and
-    blocks on its slowest row.
+Stage layout (`rollout_mode="continuous"`, `disagg_prefill=True`):
+
+    submit ──> SlotScheduler queue ──> PrefillWorker thread(s)
+                (SRPT/priority/         chunked prefill on own caches
+                 starvation order)             │ ReadyRow (KV/SSM state +
+                                               ▼  first token + logprob)
+               RolloutWorker thread <── ready queue
+                 decode stream: scatter-only splice + one fused decode
+                 step over the slot pool — NEVER runs a prefill graph
+               Trainer thread — pops FIFO, runs PolicyUpdate, commits v+1
+
+  RolloutWorker thread — streaming (default): feeds per-task requests into
+    the engine's cross-task queue the moment each task's `next_policy`
+    version becomes consumable, pumps the engine (splice/refill freed
+    slots, one decode step), and assembles completed trajectories from the
+    engine's completion stream — so decode never drains between tenant
+    groups (paper §4.1/§4.5). With `disagg_prefill=False` (baseline) the
+    prefill of incoming rows runs fused ON the decode stream — a long
+    prompt stalls every resident tenant (booked as decode-stall time).
+    The legacy `rollout_mode="round"` fuses one multi-LoRA generate() per
+    round and blocks on its slowest row.
+  PrefillWorker thread(s) — `prefill_workers` async workers pop
+    scheduler-ordered rows and prefill them in `prefill_chunk`-sized
+    chunks (rollout/prefill.py); preempted rows replay through the same
+    path token-for-token.
   Trainer thread — pops FIFO, runs the task's PolicyUpdate, commits v+1.
   Environment interactions run on the engine's tool thread-pool and overlap
   decode of the other rows (paper's rollout/env overlap).
 
 The same MultiTaskManager/MetricsRecorder as the simulator; scheduling
 regimes: marlaas (async), multilora_sync (barrier), single_disagg
-(sequential tasks).
+(sequential tasks). Per-stage timelines (prefill/decode/splice busy time,
+stage queue depths) land in the recorder for the Fig-5 utilization story.
 
 Fault tolerance: `checkpoint_every` writes atomic manager snapshots
 (repro.checkpoint); `FailureInjector` can kill a step to exercise
@@ -59,6 +77,14 @@ class RuntimeConfig:
     starvation_k: int = 8             # refills before a queued row jumps tiers
     preemption: bool = True           # admission may preempt lower-priority
                                       # tenants' resident rows
+    disagg_prefill: bool = False      # async prefill stage (Fig 5): refill
+                                      # prefills run on worker threads, the
+                                      # decode stream only splices; False =
+                                      # fused-refill baseline
+    prefill_workers: int = 1          # async prefill worker threads
+    prefill_chunk: int = 0            # chunked prefill size (0 = whole
+                                      # prompt per call); rounded up for
+                                      # recurrent-state exactness
     max_len: int = 96
     use_kernel: bool = False
     seed: int = 0
@@ -108,7 +134,11 @@ class MARLaaSRuntime:
             max_adapters=rcfg.max_adapter_slots, max_len=rcfg.max_len,
             use_kernel=rcfg.use_kernel, seed=rcfg.seed,
             tool_executor=self._tool_pool, scheduler=rcfg.scheduler,
-            starvation_k=rcfg.starvation_k)
+            starvation_k=rcfg.starvation_k,
+            disagg_prefill=rcfg.disagg_prefill,
+            prefill_chunk=rcfg.prefill_chunk,
+            prefill_workers=rcfg.prefill_workers,
+            on_stage=self._on_stage)
         # LRU tenant -> stacked-LoRA slot map (rollout thread only). The
         # device write happens in _feed_continuous once the consumable
         # version is known (and only when it changed), so the residency's
@@ -120,6 +150,10 @@ class MARLaaSRuntime:
         # admission-driven preemptions requested by the driver thread,
         # executed on the rollout thread (the engine is single-threaded)
         self._preempt_q: deque = deque()
+        # victim decode progress observed at preemption (rollout thread
+        # writes, admission tick reads): feeds the remaining-budget-aware
+        # readmission re-estimate
+        self._preempt_progress: Dict[str, float] = {}
         self._stop = threading.Event()
         self.failure = failure
         self.error: Optional[BaseException] = None
@@ -215,6 +249,14 @@ class MARLaaSRuntime:
             self._stop.set()
 
     # -- streaming rollout worker (continuous slot engine) -----------------
+    def _on_stage(self, phase: str, task_id: str, t0: float, t1: float):
+        """Engine stage hook: prefill intervals arrive from the async
+        prefill workers, splice/refill intervals from the rollout thread —
+        the recorder is thread-safe. This is what makes prefill-stage vs
+        decode-stage busy time separately measurable (Fig 5)."""
+        self.rec.record("rollout", phase, task_id, t0, t1,
+                        self.rcfg.rollout_pool_devices)
+
     def _on_adapter_evict(self, tid: str, slot: int):
         self.mgr.adapter_unbound(tid)
         self._resident_version.pop(tid, None)
@@ -261,7 +303,10 @@ class MARLaaSRuntime:
 
     def _execute_preemptions(self) -> bool:
         """Apply admission-driven preemptions queued by the driver thread
-        (the engine may only be touched from the rollout thread)."""
+        (the engine may only be touched from the rollout thread). Records
+        each victim's decode progress so the driver's admission tick can
+        tighten its parked byte reservation (remaining-budget re-estimate —
+        partially decoded rows need less KV headroom at readmission)."""
         did = False
         while self._preempt_q:
             victim = self._preempt_q.popleft()
@@ -270,6 +315,9 @@ class MARLaaSRuntime:
                 self.rec.incr("preemptions")
                 self.rec.incr("preempted_rows", n)
                 did = True
+            rows, sampled_mean = self.cengine.queued_progress(victim)
+            if rows:
+                self._preempt_progress[victim] = sampled_mean
         return did
 
     def _flush_decode_segment(self, now: float):
@@ -287,6 +335,7 @@ class MARLaaSRuntime:
         self._seg_tasks: frozenset = frozenset()
         self._seg_t0: Optional[float] = None
         last_slot_sample = None
+        last_queue_sample = None
         while not self._stop.is_set():
             self._execute_preemptions()
             fed = self._feed_continuous()
@@ -298,6 +347,10 @@ class MARLaaSRuntime:
             if (occ, cap) != last_slot_sample:
                 self.rec.record_slot_sample(now, occ, cap)
                 last_slot_sample = (occ, cap)
+            qd = eng.queue_depths()
+            if qd != last_queue_sample:
+                self.rec.record_queue_sample(now, *qd)
+                last_queue_sample = qd
             # decode timeline: one interval per contiguous occupant-set run,
             # task_id joined with "+" (fused multi-tenant decode)
             tasks_now = eng.occupant_tasks()
@@ -329,7 +382,10 @@ class MARLaaSRuntime:
         now = time.monotonic()
         occ, cap = eng.occupancy()
         self.rec.record_slot_sample(now, occ, cap)   # close the timeline
+        self.rec.record_queue_sample(now, *eng.queue_depths())
         self._flush_decode_segment(now)
+        if self.rcfg.disagg_prefill:
+            eng._halt_stage()       # workers die with the rollout loop
 
     # -- trainer ---------------------------------------------------------------
     def _train_one(self, tb) -> None:
@@ -425,6 +481,13 @@ class MARLaaSRuntime:
                 self.mgr.readmit(tid)          # preempted+done -> finished
         for tid in sorted(self.admission.preempted(),
                           key=lambda t: -self.mgr.tasks[t].spec.priority):
+            # remaining-budget-aware re-estimate (ROADMAP open item): rows
+            # already partially decoded shrink the reservation re-charged at
+            # readmission, so preempted tenants pack back in tighter
+            progress = self._preempt_progress.pop(tid, None)
+            if progress is not None:
+                self.admission.reestimate_preempted(
+                    tid, self.mgr.tasks[tid].spec, progress, 32)
             if self.admission.try_readmit(tid):
                 self.mgr.readmit(tid)
                 self.rec.incr("readmissions")

@@ -1,7 +1,7 @@
 from .common import LoraCtx, OFF, proj, rmsnorm, softcap, dtype_of
-from .model import (decode_step, forward_seq, forward_train, init_cache,
-                    init_params, lm_logits)
+from .model import (decode_step, forward_prefill_chunk, forward_seq,
+                    forward_train, init_cache, init_params, lm_logits)
 
 __all__ = ["LoraCtx", "OFF", "proj", "rmsnorm", "softcap", "dtype_of",
-           "decode_step", "forward_seq", "forward_train", "init_cache",
-           "init_params", "lm_logits"]
+           "decode_step", "forward_prefill_chunk", "forward_seq",
+           "forward_train", "init_cache", "init_params", "lm_logits"]

@@ -144,6 +144,31 @@ def attention_chunked(q, k, v, cfg: ModelConfig, *, causal: bool,
     return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
 
 
+def attention_prefill_chunk(q, k, v, cfg: ModelConfig, *, q_start: int,
+                            window=0):
+    """Chunk-incremental prefill attention: queries sit at ABSOLUTE
+    positions ``q_start .. q_start+Sq``, keys/values are the cache read
+    back over ``[0, k_len)`` (prior chunks + this one, already RoPE'd at
+    their absolute positions when written).
+
+    Numerically this is `attention_dense` with an offset causal mask: the
+    same repeat_kv / einsum / softcap / softmax op sequence, so a prompt
+    prefilled chunk-by-chunk reproduces the fused whole-prompt prefill
+    token-for-token (masked lanes contribute exact zeros either way)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    k = repeat_kv(k, H // cfg.num_kv_heads)
+    v = repeat_kv(v, H // cfg.num_kv_heads)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k.astype(q.dtype)).astype(jnp.float32) * scale
+    s = softcap(s, cfg.attn_softcap)
+    mask = _pair_mask(q_start + jnp.arange(Sq), jnp.arange(Sk),
+                      causal=True, window=window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(q.dtype))
+
+
 def attention_decode(q, cache_k, cache_v, pos, cfg: ModelConfig, *, window=0):
     """Single-token decode. q: [B, H, hd]; cache: [B, Smax, KVH, hd];
     pos: [B] number of valid cache entries (incl. the just-written token).

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.configs import ModelConfig
 from repro.train.sharding import constrain
 from .attention import (AttnParams, attention_chunked, attention_decode,
-                        attn_init, qkv)
+                        attention_prefill_chunk, attn_init, qkv)
 from .common import (LoraCtx, dense_init, dtype_of, embed_init, proj, rmsnorm,
                      rmsnorm_init, softcap)
 from .mamba2 import MambaParams, dims as ssm_dims, mamba_block, mamba_decode_step, mamba_init
@@ -501,6 +501,155 @@ def _encdec_fill_cross_cache(params, cache, enc_memory, cfg):
     ks, vs = jax.lax.map(one, params["layers"])
     return dict(cache, xk=ks.astype(cache["xk"].dtype),
                 xv=vs.astype(cache["xv"].dtype))
+
+
+# ===========================================================================
+# chunk-incremental prefill (disaggregated prefill stage)
+# ===========================================================================
+
+def _dense_block_chunk(x, lp, cfg, lora, window, positions, ck, cv,
+                       start: int):
+    """One dense block over a prefill CHUNK at absolute offset `start`.
+    x: [B, C, d]; ck/cv: [B, Smax, KVH, hd] per-layer cache. Writes the
+    chunk's K/V at [start, start+C) and attends causally over [0, start+C).
+    Same qkv / proj / mlp ops as `_dense_block_seq` — only the mask offset
+    and the cache-resident keys differ."""
+    C = x.shape[1]
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = qkv(h, lp["attn"], cfg, positions, lora)
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, start, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, start, 0, 0))
+    o = attention_prefill_chunk(q, ck[:, :start + C], cv[:, :start + C], cfg,
+                                q_start=start, window=window)
+    o = o.reshape(x.shape[0], C, cfg.q_dim)
+    x = x + proj(o, lp["attn"].wo, lora=lora, name="attn_o")
+    h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        y, _ = moe_apply(h, lp["moe"], cfg, lora)
+    else:
+        y = mlp_apply(h, lp["mlp"], cfg.mlp_act, lora)
+    return x + y, ck, cv
+
+
+def forward_prefill_chunk(params: Params, tokens, cfg: ModelConfig,
+                          lora: Optional[LoraCtx] = None,
+                          cache: Optional[Params] = None, *,
+                          start: int = 0,
+                          seq_lens=None) -> Tuple[jax.Array, Params]:
+    """One fixed-size chunk of an incremental prefill (paper §4.1: the
+    disaggregated prefill stage processes long prompts chunk-by-chunk so a
+    huge prompt cannot monopolize the stage).
+
+    tokens: [B, C] — absolute positions ``start .. start+C`` of the prompt.
+    `start` must be a PYTHON INT (static under jit; jit one variant per
+    offset). The cache carries everything between chunks: attention K/V is
+    written in place at the chunk's offset, recurrent ssm/conv states are
+    read, advanced through `mamba_block`'s state-carry path, and written
+    back. `seq_lens` [B] is the VALID length within this chunk (== C for
+    every chunk but the padded last one).
+
+    Exactness: attention chunks decompose exactly (causal masking), SSD
+    chunks decompose exactly when `start` is a multiple of
+    ``cfg.ssm.chunk_size`` (the internal scan boundaries then coincide) —
+    the prefill worker rounds its chunk size up to guarantee this. Returns
+    (hidden [B, C, d] final-normed, cache'); only the LAST chunk's hidden
+    states are meaningful at the row's final real position.
+    """
+    B, C = tokens.shape
+    x = params["embed"][tokens]
+    positions = (start + jnp.arange(C))[None, :]
+    windows = _window_for(cfg, None)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, xs):
+            lp, ck, cv, lora_i, win = (xs["lp"], xs["ck"], xs["cv"],
+                                       xs.get("lora"), xs.get("win"))
+            lctx = lora.at_layer(lora_i) if (lora is not None and lora_i is not None) else None
+            w = win if win is not None else 0
+            x, ck, cv = _dense_block_chunk(x, lp, cfg, lctx, w, positions,
+                                           ck, cv, start)
+            return x, (ck, cv)
+
+        xs = {"lp": params["layers"], "ck": cache["k"], "cv": cache["v"]}
+        lt = _lora_layer_slice(lora)
+        if lt is not None:
+            xs["lora"] = lt
+        if windows is not None:
+            xs["win"] = windows
+        if cfg.scan_layers:
+            x, (cks, cvs) = jax.lax.scan(body, x, xs)
+        else:
+            cks_l, cvs_l = [], []
+            for i in range(cfg.num_layers):
+                xi = jax.tree.map(lambda t: t[i], xs)
+                x, (ck, cv) = body(x, xi)
+                cks_l.append(ck); cvs_l.append(cv)
+            cks, cvs = jnp.stack(cks_l), jnp.stack(cvs_l)
+        cache = dict(cache, k=cks, v=cvs)
+
+    elif cfg.family == "ssm":
+        def body(x, xs):
+            lp, st0, cs0, lora_i = xs["lp"], xs["st"], xs["cs"], xs.get("lora")
+            lctx = lora.at_layer(lora_i) if (lora is not None and lora_i is not None) else None
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            y, (st, cs) = mamba_block(h, lp["mamba"], cfg, lctx,
+                                      ssm_state=st0, conv_state=cs0,
+                                      return_state=True, seq_lens=seq_lens)
+            return x + y, (st, cs.astype(cs0.dtype))
+
+        xs = {"lp": params["layers"], "st": cache["ssm"], "cs": cache["conv"]}
+        lt = _lora_layer_slice(lora)
+        if lt is not None:
+            xs["lora"] = lt
+        if cfg.scan_layers:
+            x, (sts, css) = jax.lax.scan(body, x, xs)
+        else:
+            sts_l, css_l = [], []
+            for i in range(cfg.num_layers):
+                xi = jax.tree.map(lambda t: t[i], xs)
+                x, (st, cs) = body(x, xi)
+                sts_l.append(st); css_l.append(cs)
+            sts, css = jnp.stack(sts_l), jnp.stack(css_l)
+        cache = dict(cache, ssm=sts.astype(cache["ssm"].dtype), conv=css)
+
+    elif cfg.family == "hybrid":
+        k_every = cfg.hybrid_attn_every
+        sts_l, css_l = [], []
+        cks, cvs = cache.get("k"), cache.get("v")
+        inv = 0
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            lt = _lora_layer_slice(lora, i)
+            lctx = lora.at_layer(lt) if lt is not None else None
+            h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            y, (st, cs) = mamba_block(h, lp["mamba"], cfg, lctx,
+                                      ssm_state=cache["ssm"][i],
+                                      conv_state=cache["conv"][i],
+                                      return_state=True, seq_lens=seq_lens)
+            x = x + y
+            sts_l.append(st)
+            css_l.append(cs.astype(cache["conv"].dtype))
+            if k_every and (i + 1) % k_every == 0:
+                sp = params["shared"]
+                slt = _lora_layer_slice(lora, inv, sub="shared")
+                slctx = lora.at_layer(slt) if slt is not None else None
+                x, ck, cv = _dense_block_chunk(x, sp, cfg, slctx, 0,
+                                               positions, cks[inv], cvs[inv],
+                                               start)
+                cks = cks.at[inv].set(ck)
+                cvs = cvs.at[inv].set(cv)
+                inv += 1
+        cache = dict(cache, ssm=jnp.stack(sts_l).astype(cache["ssm"].dtype),
+                     conv=jnp.stack(css_l))
+        if cks is not None:
+            cache["k"], cache["v"] = cks, cvs
+    else:
+        raise NotImplementedError(
+            f"chunked prefill unsupported for family {cfg.family!r} "
+            f"(the prefill worker falls back to whole-prompt calls)")
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, cache
 
 
 # ===========================================================================

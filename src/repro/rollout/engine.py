@@ -13,11 +13,24 @@ per-slot adapter id into a fixed-capacity stacked-LoRA buffer. Decode is
 one jitted step over the pool and never drains: the moment a row finishes
 (EOS / sampled budget / cache capacity) it is evicted, its
 ``RolloutCompletion`` streams back to the scheduler, and freed slots are
-refilled from a cross-task request queue — prefill of the incoming rows
-runs as its own jitted call (batched over every slot freed that step)
-whose KV/SSM state and sampled first tokens are spliced into the running
-pool at the freed slots. Rows awaiting an external tool response freeze
-(advance=0) while the rest of the pool keeps decoding.
+filled from a cross-task request queue. Two fill paths (Fig 5):
+
+  fused (default)       — prefill of the incoming rows runs as its own
+    jitted call ON THE DECODE STREAM (batched over every slot freed that
+    step) whose KV/SSM state and sampled first tokens are spliced into the
+    running pool. A long prompt stalls decode for every resident tenant —
+    this stall is booked as ``stats.decode_stall_seconds``.
+  disaggregated (``disagg_prefill=True``) — ``prefill_workers`` async
+    worker threads (rollout/prefill.py) pop the SAME scheduler-ordered
+    queue, run (optionally ``prefill_chunk``-chunked) prefill on their own
+    caches, and emit ready row states; the decode stream installs them
+    with a scatter-only jitted splice (``_build_splice_fn``). Decode never
+    executes a prefill graph: ``decode_stall_seconds`` stays 0 while
+    prefills are in flight, and outputs are bit-identical to the fused
+    path (same forward math, same per-row sampling rule).
+
+Rows awaiting an external tool response freeze (advance=0) while the rest
+of the pool keeps decoding.
 
 Determinism: sampling is per-row — each request carries a base PRNG key
 (``fold_in(master, request.seed or submit-index)``) folded with the row's
@@ -53,6 +66,8 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+import threading
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -63,6 +78,8 @@ from repro.envs.base import Env
 from repro.lora.adapters import batched_ctx, init_stacked_buffer, stack_adapters
 from repro.models import decode_step, forward_seq, init_cache, lm_logits
 from repro.rl.types import RolloutCompletion, TrajectoryBatch
+from repro.rollout.prefill import (PrefillKernels, PrefillWorker, ReadyRow,
+                                   _bucket_len, _sample_rows, effective_chunk)
 from repro.rollout.scheduler import LengthPredictor, SlotScheduler
 
 
@@ -86,7 +103,11 @@ class RolloutRequest:
 class RolloutStats:
     decode_steps: int = 0
     prefill_tokens: int = 0
-    decode_seconds: float = 0.0
+    decode_seconds: float = 0.0     # decode-stage device time ONLY (the
+                                    # per-stage split is load-bearing for the
+                                    # Fig-5 utilization metrics)
+    prefill_seconds: float = 0.0    # prefill-stage device time (fused refill
+                                    # OR async prefill-worker calls)
     env_wait_seconds: float = 0.0
     wall_seconds: float = 0.0
     # continuous-engine extras (zero for round-fused generate())
@@ -100,30 +121,21 @@ class RolloutStats:
     preemptions: int = 0           # rows evicted mid-decode and re-queued
     replays: int = 0               # preempted rows re-prefilled into a slot
     replay_tokens: int = 0         # prompt+prefix tokens re-processed
+    # disaggregated-prefill extras
+    splices: int = 0               # ready rows scatter-installed into slots
+    splice_seconds: float = 0.0    # decode-side scatter time (≪ prefill)
+    splice_wait_seconds: float = 0.0    # Σ (install time - prefill-ready
+                                        # time): hand-off latency between
+                                        # the two stages (slot availability)
+    prefill_chunks: int = 0        # prefill device calls (≥ rows prefilled)
+    decode_stall_seconds: float = 0.0   # prefill-stage work executed ON the
+                                        # decode stream (fused refill); 0 by
+                                        # construction when disaggregated
 
     def slot_utilization(self) -> float:
         if self.capacity_row_steps <= 0:
             return 0.0
         return self.occupied_row_steps / self.capacity_row_steps
-
-
-def _bucket_len(n: int) -> int:
-    return int(max(8, -(-int(n) // 8) * 8))
-
-
-def _sample_rows(logits, keys, counters, temps):
-    """Per-row categorical: row i uses fold_in(keys[i], counters[i]).
-
-    The sample depends only on the row's own (key, count, logits) — not on
-    batch width or slot position — which is what makes continuous batching
-    bit-reproduce one-shot generation.
-    """
-    scaled = logits / jnp.maximum(temps[:, None], 1e-4)
-
-    def one(k, c, row):
-        return jax.random.categorical(jax.random.fold_in(k, c), row)
-
-    return jax.vmap(one)(keys, counters, scaled)
 
 
 def _decode_sample_core(cfg, use_kernel, params, adapters, row_ids,
@@ -237,6 +249,32 @@ def _build_refill_fn(cfg: ModelConfig, use_kernel: bool, max_len: int):
         return first, lp, out, state
 
     return jax.jit(refill, donate_argnums=(9, 10, 11, 12, 13, 14))
+
+
+def _build_splice_fn(cfg: ModelConfig):
+    """Scatter-ONLY install of one prefilled row into the persistent pool
+    (the decode half of the disaggregated split): copies every cache leaf of
+    the ready row's width-1 prefill cache into the pool at `slot` and
+    updates the device-resident row state. No forward pass, no prefill
+    graph — the decode stream pays one cheap scatter per incoming row
+    instead of the whole prompt."""
+
+    def splice(cache, pcache, slot, seq_len, first, init_counter, key, temp,
+               row_id, cur, counters, keys, temps, row_ids):
+        out = {}
+        for name in cache:
+            if cache[name].ndim == 1:              # "pos": [B]
+                out[name] = cache[name].at[slot].set(seq_len)
+            else:                                   # [L, B, ...]
+                out[name] = cache[name].at[:, slot].set(pcache[name][:, 0])
+        state = (cur.at[slot].set(first),
+                 counters.at[slot].set(init_counter + 1),
+                 keys.at[slot].set(key),
+                 temps.at[slot].set(temp),
+                 row_ids.at[slot].set(row_id))
+        return out, state
+
+    return jax.jit(splice, donate_argnums=(0, 9, 10, 11, 12, 13))
 
 
 class _Row:
@@ -391,7 +429,7 @@ class RolloutEngine:
                                          jnp.asarray(tokens),
                                          jnp.asarray(prompt_lens), cache)
         jax.block_until_ready(logits)
-        stats.decode_seconds += time.monotonic() - t0
+        stats.prefill_seconds += time.monotonic() - t0
 
         rows = [_Row(r, keys[i], i) for i, r in enumerate(requests)]
         pending: Dict[int, Future] = {}
@@ -511,7 +549,10 @@ class ContinuousRolloutEngine:
     predictor, with a ``starvation_k``-refill progress bound; "fifo":
     PR-1 arrival order). ``preempt_tenant``/``preempt_slots`` implement the
     admission-driven preemption protocol documented in the module
-    docstring; preempted rows replay token-for-token.
+    docstring; preempted rows replay token-for-token — under
+    ``disagg_prefill=True`` the replay prefill runs asynchronously on the
+    prefill workers and splices back with the row's original per-row
+    counter, so replay parity is preserved across both fill paths.
     """
 
     def __init__(self, cfg: ModelConfig, base_params, *, max_slots: int = 8,
@@ -520,7 +561,9 @@ class ContinuousRolloutEngine:
                  tool_executor: Optional[ThreadPoolExecutor] = None,
                  sim_latency: bool = False, tool_timeout_s: float = 60.0,
                  scheduler: str = "srpt", starvation_k: int = 8,
-                 predictor: Optional[LengthPredictor] = None):
+                 predictor: Optional[LengthPredictor] = None,
+                 disagg_prefill: bool = False, prefill_chunk: int = 0,
+                 prefill_workers: int = 1, on_stage=None):
         self.cfg = cfg
         self.base_params = base_params
         self.max_slots = max_slots
@@ -529,6 +572,11 @@ class ContinuousRolloutEngine:
         self.use_kernel = use_kernel
         self.tool_timeout_s = tool_timeout_s
         self.sim_latency = sim_latency
+        self.disagg_prefill = disagg_prefill
+        self.prefill_workers = max(1, prefill_workers)
+        self._prefill_chunk_eff = effective_chunk(cfg, prefill_chunk)
+        self.on_stage = on_stage    # optional (phase, task_id, t0, t1) hook
+                                    # (called from worker threads too)
         self._master = jax.random.PRNGKey(seed)
         self._rng = np.random.RandomState(seed + 7919)
         self._own_pool = tool_executor is None
@@ -562,6 +610,17 @@ class ContinuousRolloutEngine:
         self._completed: Deque[RolloutCompletion] = deque()
         self._n_submitted = 0
         self.stats = RolloutStats()
+        # -- disaggregated prefill stage (workers <-> decode thread) -------
+        self._stage_lock = threading.Lock()   # guards _sched/_ready/
+                                              # _stage_inflight/stage stats
+        self._ready: Deque[ReadyRow] = deque()
+        self._stage_inflight: List[_Row] = []  # popped by a worker, not yet
+                                               # ready (host refs only)
+        self._stage_stop = threading.Event()
+        self._stage_error: Optional[BaseException] = None
+        self._workers: List[PrefillWorker] = []
+        self._pkernels: Optional[PrefillKernels] = None
+        self._splice_fn = None
 
     # -- build ----------------------------------------------------------
     def _ensure_built(self):
@@ -569,10 +628,17 @@ class ContinuousRolloutEngine:
             self._step_fn = _build_cont_step_fn(self.cfg, self.use_kernel)
             self._refill_fn = _build_refill_fn(self.cfg, self.use_kernel,
                                                self.max_len)
+            # disaggregated mode: the write must NOT donate the old buffer —
+            # a prefill worker's in-flight call may still be reading it (the
+            # old immutable tree stays valid until its last reader drops it)
             self._write_adapter_fn = jax.jit(
                 lambda buf, tree, i: jax.tree.map(
                     lambda b, l: b.at[:, i].set(l), buf, tree),
-                donate_argnums=(0,))
+                donate_argnums=() if self.disagg_prefill else (0,))
+            if self.disagg_prefill:
+                self._splice_fn = _build_splice_fn(self.cfg)
+                self._pkernels = PrefillKernels(self.cfg, self.use_kernel,
+                                                self.max_len)
         if self._cache is None:
             N = self.max_slots
             self._cache = init_cache(
@@ -608,8 +674,43 @@ class ContinuousRolloutEngine:
         row = _Row(req, key, self._n_submitted, meta=meta,
                    submitted_at=time.monotonic())
         self._n_submitted += 1
-        self._sched.push(row, self.stats.refills)
+        with self._stage_lock:
+            self._sched.push(row, self.stats.refills)
         return row.submit_index
+
+    # -- prefill stage lifecycle ------------------------------------------
+    def _ensure_stage(self):
+        """Spawn the async prefill workers — the full complement after a
+        halt, or just replacements for workers that died on an error
+        (survivors keep running; total parallelism stays at
+        `prefill_workers`). A no-op until the first adapter install —
+        workers have nothing to prefill against before then (requests may
+        already be queued; they keep until the buffer exists)."""
+        if not self.disagg_prefill or self._stacked is None:
+            return
+        self._ensure_built()
+        alive = [w for w in self._workers if w.is_alive()]
+        if len(alive) >= self.prefill_workers:
+            return
+        self._stage_stop.clear()
+        fresh = [PrefillWorker(self, i)
+                 for i in range(len(alive), self.prefill_workers)]
+        self._workers = alive + fresh
+        for w in fresh:
+            w.start()
+
+    def _halt_stage(self):
+        """Stop the prefill workers; their unfinished rows return to the
+        queue (worker teardown pushes them back under the stage lock)."""
+        self._stage_stop.set()
+        for w in self._workers:
+            w.join(timeout=30)
+        self._workers = []
+
+    def _raise_stage_error(self):
+        if self._stage_error is not None:
+            err, self._stage_error = self._stage_error, None
+            raise err
 
     # -- introspection ---------------------------------------------------
     def occupancy(self) -> Tuple[int, int]:
@@ -619,15 +720,44 @@ class ContinuousRolloutEngine:
         return frozenset(r.req.task_id for r in self._rows if r is not None)
 
     def queued(self) -> int:
-        return len(self._sched)
+        with self._stage_lock:
+            return (len(self._sched) + len(self._stage_inflight)
+                    + len(self._ready))
+
+    def queue_depths(self) -> Tuple[int, int]:
+        """(prefill queue + in-prefill, ready-to-splice) — the two stage
+        queues of the disaggregated layout (Fig 5)."""
+        with self._stage_lock:
+            return (len(self._sched) + len(self._stage_inflight),
+                    len(self._ready))
 
     def idle(self) -> bool:
-        return not self._sched and all(r is None for r in self._rows)
+        return self.queued() == 0 and all(r is None for r in self._rows)
 
     def active_tenants(self) -> frozenset:
-        """Tenants with rows resident in slots OR queued (incl. preempted
-        rows awaiting replay) — i.e. whose adapter slot must stay resident."""
-        return self.occupant_tasks() | self._sched.tenants()
+        """Tenants with rows resident in slots OR anywhere in the pipeline
+        (queued, mid-prefill, ready-to-splice, incl. preempted rows awaiting
+        replay) — i.e. whose adapter slot must stay resident."""
+        with self._stage_lock:
+            stage = (frozenset(r.req.task_id for r in self._stage_inflight)
+                     | frozenset(rr.row.req.task_id for rr in self._ready)
+                     | self._sched.tenants())
+        return self.occupant_tasks() | stage
+
+    def queued_progress(self, task_id: str) -> Tuple[int, float]:
+        """(row count, mean sampled tokens) over a tenant's not-yet-resident
+        rows (queued / mid-prefill / ready). Preempted rows carry their
+        generated prefix, so this feeds the admission controller's
+        remaining-budget re-estimate (readmission packs tighter)."""
+        with self._stage_lock:
+            rows = self._sched.rows_for(task_id)
+            rows += [r for r in self._stage_inflight
+                     if r.req.task_id == task_id]
+            rows += [rr.row for rr in self._ready
+                     if rr.row.req.task_id == task_id]
+        if not rows:
+            return 0, 0.0
+        return len(rows), float(sum(r.sampled for r in rows)) / len(rows)
 
     def drain_completions(self) -> List[RolloutCompletion]:
         out = []
@@ -669,13 +799,18 @@ class ContinuousRolloutEngine:
 
     def _preempt_slot(self, slot: int):
         """Free one slot: snapshot is implicit (the generated prefix already
-        lives host-side in the _Row), so just vacate and re-queue."""
+        lives host-side in the _Row), so just vacate and re-queue. The
+        re-queued row flows through the SAME path as a fresh one — in
+        disaggregated mode a prefill worker replays prompt+prefix
+        asynchronously and the row splices back with its original per-row
+        counter, preserving token-for-token replay parity."""
         row = self._rows[slot]
         row.replays += 1
         self._rows[slot] = None
         self._prompts[slot] = None
         self.stats.preemptions += 1
-        self._sched.push(row, self.stats.refills)
+        with self._stage_lock:
+            self._sched.push(row, self.stats.refills)
 
     def preempt_tenant(self, task_id: str, max_rows: Optional[int] = None
                        ) -> int:
@@ -729,9 +864,12 @@ class ContinuousRolloutEngine:
             raise RuntimeError("no adapters installed — call set_adapters()")
         t0 = time.monotonic()
         incoming: List[Tuple[int, _Row]] = []
-        while free and self._sched:
-            incoming.append((free.pop(0),
-                             self._sched.pop(self.stats.refills)))
+        with self._stage_lock:
+            while free and self._sched:
+                incoming.append((free.pop(0),
+                                 self._sched.pop(self.stats.refills)))
+        if not incoming:
+            return False
         k = len(incoming)
         W = 1                                    # next-pow2 width bucket
         while W < k:
@@ -765,7 +903,16 @@ class ContinuousRolloutEngine:
         lp = np.asarray(lp)
         now = time.monotonic()
         self.stats.refills += 1
-        self.stats.decode_seconds += now - t0
+        # stage attribution (pre-existing bug: this was booked as decode
+        # time): the fused refill is PREFILL-stage work, and because it runs
+        # on the decode stream it is also decode-stall time — the quantity
+        # the disaggregated path drives to zero.
+        self.stats.prefill_seconds += now - t0
+        self.stats.decode_stall_seconds += now - t0
+        if self.on_stage is not None:
+            self.on_stage("prefill",
+                          "+".join(sorted({r.req.task_id
+                                           for _, r in incoming})), t0, now)
         for j, (slot, row) in enumerate(incoming):
             self._rows[slot] = row
             self._prompts[slot] = list(row.req.prompt)
@@ -786,6 +933,64 @@ class ContinuousRolloutEngine:
                 self._evict(slot)
         return True
 
+    def _splice_ready_rows(self) -> bool:
+        """Decode-side half of the disaggregated split: install rows the
+        async prefill stage finished into freed slots with one scatter-only
+        jitted call each. No prefill graph runs on the decode stream — the
+        splice is O(cache row copy), so decode never stalls on a prompt."""
+        free = [s for s in range(self.max_slots) if self._rows[s] is None]
+        if not free:
+            return False
+        ready: List[ReadyRow] = []
+        with self._stage_lock:
+            while free and self._ready:
+                ready.append(self._ready.popleft())
+                free.pop(0)
+        if not ready:
+            return False
+        free = [s for s in range(self.max_slots) if self._rows[s] is None]
+        t0 = time.monotonic()
+        for rr in ready:
+            slot = free.pop(0)
+            row = rr.row
+            self._cache, state = self._splice_fn(
+                self._cache, rr.pcache, jnp.int32(slot),
+                jnp.int32(rr.seq_len), jnp.int32(rr.first),
+                jnp.int32(rr.init_counter), jnp.asarray(row.key, jnp.uint32),
+                jnp.float32(row.req.temperature),
+                jnp.int32(row.req.adapter_index), self._d_cur,
+                self._d_counters, self._d_keys, self._d_temps,
+                self._d_row_ids)
+            (self._d_cur, self._d_counters, self._d_keys, self._d_temps,
+             self._d_row_ids) = state
+            self._mask_sig = None      # slot contents changed
+            now = time.monotonic()
+            self._rows[slot] = row
+            self._prompts[slot] = list(row.req.prompt)
+            if row.gen:                           # preemption replay
+                self.stats.replays += 1
+                self.stats.replay_tokens += rr.seq_len
+            else:                                 # fresh row
+                self.stats.prefills += 1
+                row.started_at = now
+            self.stats.splices += 1
+            self.stats.splice_wait_seconds += max(0.0, now - rr.ready_at)
+            self.stats.tokens_generated += 1
+            self.stats.sampled_tokens += 1
+            action = row.accept(rr.first, rr.lp, 1.0, self.max_len)
+            if action == "call":
+                self._dispatch_tool(slot)
+            elif action == "done":
+                self._evict(slot)
+        now = time.monotonic()
+        self.stats.refills += 1        # one refill event (starvation aging)
+        self.stats.splice_seconds += now - t0
+        if self.on_stage is not None:
+            self.on_stage("splice",
+                          "+".join(sorted({rr.row.req.task_id
+                                           for rr in ready})), t0, now)
+        return True
+
     def _dispatch_tool(self, slot: int):
         self._pending[slot] = _submit_tool_call(
             self._rows[slot], self._prompts[slot], self._pool, self._rng,
@@ -794,9 +999,10 @@ class ContinuousRolloutEngine:
 
     # -- scheduler interface ---------------------------------------------
     def step(self) -> bool:
-        """One engine iteration: resolve tools, refill freed slots, one
-        decode step over the pool, evict finished rows. Returns True if any
-        device work happened (refill or decode)."""
+        """One engine iteration: resolve tools, fill freed slots (fused
+        refill, or splice of async-prefilled rows in disaggregated mode),
+        one decode step over the pool, evict finished rows. Returns True if
+        any device work happened (refill/splice or decode)."""
         now = time.monotonic()
         progressed = False
         # resolve / time out pending tool calls
@@ -812,8 +1018,22 @@ class ContinuousRolloutEngine:
             elif now - self._pending_t0[slot] > self.tool_timeout_s:
                 row.status, row.finish_reason = "done", "tool_timeout"
                 self._evict(slot)
-        # refill freed slots from the cross-task queue (one fused call)
-        if self._refill_free_slots():
+        # fill freed slots from the cross-task queue: disaggregated mode
+        # splices asynchronously-prefilled rows (decode never runs a prefill
+        # graph); fused mode runs the baseline one-call refill
+        if self.disagg_prefill:
+            self._raise_stage_error()
+            if self._stacked is None:
+                with self._stage_lock:
+                    has_queued = len(self._sched) > 0
+                if has_queued:      # same fail-fast as the fused refill
+                    raise RuntimeError(
+                        "no adapters installed — call set_adapters()")
+            else:
+                self._ensure_stage()
+                if self._splice_ready_rows():
+                    progressed = True
+        elif self._refill_free_slots():
             progressed = True
         advance = np.array(
             [1 if (r is not None and r.status == "active") else 0
@@ -877,14 +1097,30 @@ class ContinuousRolloutEngine:
             out.extend(self.drain_completions())
             if not progressed:
                 time.sleep(0.001)     # waiting only on external tools
-        # deadline: abort whatever is still resident OR still queued, so
-        # every submitted request yields exactly one completion
+        # deadline: abort whatever is still resident OR anywhere in the
+        # prefill pipeline, so every submitted request yields exactly one
+        # completion. Workers are halted first: their unfinished rows return
+        # to the queue, ready-but-unspliced rows abort like queued ones. A
+        # worker stuck past the join timeout (e.g. mid cold-compile) still
+        # can't lose rows: its in-flight rows are swept into the queue here,
+        # and the worker's late emit/teardown drops rows it no longer owns.
+        if self.queued() > 0 and self.disagg_prefill:
+            self._halt_stage()
+            with self._stage_lock:
+                for rr in self._ready:
+                    self._sched.push(rr.row, self.stats.refills)
+                self._ready.clear()
+                for row in self._stage_inflight:
+                    self._sched.push(row, self.stats.refills)
+                self._stage_inflight.clear()
         for slot, r in enumerate(self._rows):
             if r is not None:
                 r.status = "done"
                 r.finish_reason = r.finish_reason or "aborted"
                 self._evict(slot)
-        for row in self._sched.pop_all():
+        with self._stage_lock:
+            leftovers = self._sched.pop_all()
+        for row in leftovers:
             row.status, row.finish_reason = "done", "aborted"
             # a preempted-then-aborted row keeps its generated prefix
             self._completed.append(RolloutCompletion(
@@ -924,6 +1160,8 @@ class ContinuousRolloutEngine:
         return results, self.stats
 
     def shutdown(self):
+        if self._workers:
+            self._halt_stage()
         if self._own_pool:
             self._pool.shutdown(wait=False)
 

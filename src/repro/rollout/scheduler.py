@@ -24,6 +24,13 @@ and converge as rows complete.
 Policy ``"fifo"`` preserves PR-1 arrival order (the benchmark baseline).
 Token streams are unaffected by pop order: sampling is per-row
 (key, counter), so any schedule yields the same tokens per request.
+
+With the disaggregated prefill stage (``rollout/prefill.py``) this queue
+IS the prefill queue: workers pop in the same scheduler order the fused
+refill used, so SRPT/priority/starvation semantics carry over unchanged —
+the pop just happens on a prefill worker instead of the decode stream.
+The queue itself is not thread-safe; the engine serializes access under
+its stage lock.
 """
 from __future__ import annotations
 
@@ -124,3 +131,8 @@ class SlotScheduler:
 
     def tenants(self) -> frozenset:
         return frozenset(e.row.req.task_id for e in self._entries)
+
+    def rows_for(self, task_id: str) -> List:
+        """A tenant's queued rows (admission re-estimates read `.sampled`
+        off preempted rows awaiting replay)."""
+        return [e.row for e in self._entries if e.row.req.task_id == task_id]
