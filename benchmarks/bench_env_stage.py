@@ -1,0 +1,225 @@
+"""Disaggregated env-interaction stage vs freeze-in-slot baseline (ISSUE 4
+tentpole gate).
+
+Workload: agentic high-latency tenants mixed with plain tenants through a
+shared slot engine — AGENTIC_TENANTS tenants run multi-turn multi-hop
+search episodes whose tool calls cost ENV_LATENCY seconds each (the
+paper's external tool/judge latency), alongside PLAIN_TENANTS tenants of
+short math rows that keep the scheduler queue non-empty.
+
+Two engines over the IDENTICAL workload (same seeds, same forced-CALL
+pattern, same tool responses — token streams are bit-identical by
+construction, asserted below):
+
+  frozen    — baseline: a row that emits CALL freezes in its decode slot
+              (advance=0) for the whole env latency; the slot is dead
+              weight (booked as tool_wait_slot_steps).
+  envstage  — this PR: the row PARKS (slot vacated and instantly refilled
+              from the queue) while an EnvWorker runs the call; the
+              response resumes through the prefill path. No slot is ever
+              held by an I/O-waiting row.
+
+Both modes run with the disaggregated prefill stage on, so the ONLY
+difference is where tool-waiting rows live. Metric: rollout tokens/sec
+over a full drain of the mixed workload. Gate:
+
+    tokens_per_sec(envstage) / tokens_per_sec(frozen) >= 1.2x
+
+Agentic rows emit CALL deterministically (the sampler is biased at fixed
+per-row token counters), so both modes replay the exact same episodes.
+
+  PYTHONPATH=src python -m benchmarks.bench_env_stage [--json out.json]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import random
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import REGISTRY, reduced
+from repro.data import tokenizer as tok
+from repro.envs.tasks import make_env
+from repro.lora.adapters import init_lora
+from repro.models import init_params
+import repro.rollout.engine as eng_mod
+import repro.rollout.prefill as pf_mod
+from repro.rollout.engine import ContinuousRolloutEngine, RolloutRequest
+
+PLAIN_TENANTS = 2
+AGENTIC_TENANTS = 2
+N_TENANTS = PLAIN_TENANTS + AGENTIC_TENANTS
+DECODE_SLOTS = 4
+MAX_LEN = 64
+PLAIN_ROWS = 10               # rows per plain tenant
+AGENTIC_ROWS = 8              # rows per agentic tenant
+PLAIN_BUDGET, AGENTIC_BUDGET = 8, 8
+ENV_LATENCY = 0.12            # per tool call (deterministic: std 0)
+HOPS = 2                      # tool turns per agentic episode
+CALL_AT = (1, 10)             # per-row sampled-token counters that emit CALL
+ENV_WORKERS = 8
+GATE = 1.2
+
+_STATE = {}
+
+
+def _bias_sampler():
+    """Deterministic forced-CALL pattern: rows sample CALL at fixed token
+    counters (EOS remapped away so row lengths are deterministic). Applies
+    identically to every engine/mode — token streams stay bit-identical."""
+    if _STATE.get("biased"):
+        return
+    orig = pf_mod._sample_rows
+
+    def biased(logits, keys, counters, temps):
+        s = orig(logits, keys, counters, temps)
+        s = jnp.where(s == tok.EOS, 10, s)
+        hit = jnp.zeros(counters.shape, bool)
+        for c in CALL_AT:
+            hit = hit | (counters == c)
+        return jnp.where(hit, tok.CALL, s)
+
+    pf_mod._sample_rows = biased
+    eng_mod._sample_rows = biased
+    _STATE["biased"] = True
+
+
+def _model():
+    if "cfg" not in _STATE:
+        cfg = dataclasses.replace(reduced(REGISTRY["granite-3-2b"],
+                                          dtype="float32"),
+                                  vocab_size=tok.VOCAB_SIZE)
+        _STATE["cfg"] = cfg
+        _STATE["params"] = init_params(jax.random.PRNGKey(0), cfg)
+        _STATE["trees"] = [init_lora(jax.random.PRNGKey(100 + t), cfg)
+                           for t in range(N_TENANTS)]
+    return _STATE["cfg"], _STATE["params"], _STATE["trees"]
+
+
+def _requests():
+    """Deterministic mixed workload: same requests (prompts, truths, seeds)
+    for both modes."""
+    plain_env = make_env("gsm8k")
+    agentic_env = make_env("hopsearch", kb_size=16, hops=HOPS, seed=0)
+    agentic_env.env_latency_mean = ENV_LATENCY
+    agentic_env.env_latency_std = 0.0
+    rng = random.Random(0)
+    reqs = []
+    for t in range(N_TENANTS):
+        agentic = t >= PLAIN_TENANTS
+        env = agentic_env if agentic else plain_env
+        rows = AGENTIC_ROWS if agentic else PLAIN_ROWS
+        budget = AGENTIC_BUDGET if agentic else PLAIN_BUDGET
+        for i in range(rows):
+            prompt, truth = env.sample_prompt(rng)
+            reqs.append(RolloutRequest(
+                f"t{t}", t, prompt, truth, env, max_new_tokens=budget,
+                seed=t * 4096 + i))
+    return reqs
+
+
+def _drain(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    n, t0 = 0, time.monotonic()
+    guard = t0 + 600.0
+    while not eng.idle() and time.monotonic() < guard:
+        progressed = eng.step()
+        n += len(eng.drain_completions())
+        if not progressed:
+            time.sleep(0.0002)      # waiting on env/prefill stages only
+    wall = time.monotonic() - t0
+    assert n == len(reqs), f"only {n}/{len(reqs)} rows completed"
+    return wall
+
+
+def run_mode(mode: str):
+    """One engine per mode; the IDENTICAL workload drains twice — the first
+    pass warms every jit variant (refill widths/buckets, splice) on the
+    SAME engine, the second is measured. Throughput would otherwise gate on
+    compile pauses, not scheduling."""
+    _bias_sampler()
+    cfg, params, trees = _model()
+    eng = ContinuousRolloutEngine(
+        cfg, params, max_slots=DECODE_SLOTS, max_adapters=N_TENANTS,
+        max_len=MAX_LEN, seed=0, scheduler="srpt", disagg_prefill=True,
+        env_stage=(mode == "envstage"), env_workers=ENV_WORKERS)
+    for t in range(N_TENANTS):
+        eng.set_adapters(t, trees[t])
+    _drain(eng, _requests())                 # warm pass (compiles)
+    from repro.rollout.engine import RolloutStats
+    eng.stats = RolloutStats()               # measure the second pass only
+    wall = _drain(eng, _requests())
+    stats = eng.stats
+    eng.shutdown()
+    return wall, stats
+
+
+def bench():
+    out = {"config": {
+        "plain_tenants": PLAIN_TENANTS, "agentic_tenants": AGENTIC_TENANTS,
+        "decode_slots": DECODE_SLOTS, "plain_rows": PLAIN_ROWS,
+        "agentic_rows": AGENTIC_ROWS, "env_latency_s": ENV_LATENCY,
+        "hops": HOPS, "env_workers": ENV_WORKERS,
+        "budgets": [PLAIN_BUDGET, AGENTIC_BUDGET]}}
+    for mode in ("frozen", "envstage"):
+        wall, stats = run_mode(mode)
+        out[mode] = {
+            "wall_s": wall,
+            "tokens_per_sec": stats.tokens_generated / wall,
+            "tokens_generated": stats.tokens_generated,
+            "decode_steps": stats.decode_steps,
+            "tool_wait_slot_steps": stats.tool_wait_slot_steps,
+            "parks": stats.parks,
+            "resumes": stats.resumes,
+            "env_wait_s": stats.env_wait_seconds,
+            "env_wait_by_task": dict(stats.env_wait_by_task),
+            "slot_utilization": stats.slot_utilization(),
+        }
+    ratio = (out["envstage"]["tokens_per_sec"]
+             / out["frozen"]["tokens_per_sec"])
+    out["tokens_per_sec_speedup"] = float(ratio)
+    out["gate"] = GATE
+    out["pass"] = bool(ratio >= GATE)
+    # identical workload sanity: bit-identical token streams => same totals
+    if out["frozen"]["tokens_generated"] != out["envstage"]["tokens_generated"]:
+        out["pass"] = False
+    # the disaggregation guarantee itself: no slot ever held a waiting row
+    if out["envstage"]["tool_wait_slot_steps"] != 0:
+        out["pass"] = False
+    if out["envstage"]["parks"] == 0 or out["frozen"]["tool_wait_slot_steps"] == 0:
+        out["pass"] = False                  # the agentic path never engaged
+    print(f"bench_env_stage,plain={PLAIN_TENANTS},agentic={AGENTIC_TENANTS},"
+          f"lat={ENV_LATENCY*1e3:.0f}ms,hops={HOPS},"
+          f"frozen={out['frozen']['tokens_per_sec']:.0f}tok/s,"
+          f"envstage={out['envstage']['tokens_per_sec']:.0f}tok/s,"
+          f"speedup={ratio:.2f}x,"
+          f"frozen_wait_steps={out['frozen']['tool_wait_slot_steps']},"
+          f"envstage_wait_steps={out['envstage']['tool_wait_slot_steps']},"
+          f"{'ok' if out['pass'] else 'FAIL'}")
+    return out
+
+
+def main(argv):
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            print("usage: bench_env_stage [--json OUT.json]")
+            return 2
+        json_path = argv[i + 1]
+    out = bench()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {json_path}")
+    return 0 if out["pass"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -27,7 +27,14 @@ from repro.core.runtime import MARLaaSRuntime, RuntimeConfig
 from repro.data import tokenizer as tok
 from repro.models import init_params
 
-ENVS = ["gsm8k", "amc12", "search"]
+# tenant env rotations: classic = the paper's three archetypes; agentic =
+# multi-turn tool-heavy tenants mixed with plain math (the env-stage
+# workload — pair with --env-stage)
+MIXES = {
+    "classic": ["gsm8k", "amc12", "search"],
+    "agentic": ["gsm8k", "hopsearch", "calcrepl", "guess"],
+}
+AGENTIC_ENVS = {"search", "hopsearch", "calcrepl", "guess"}
 
 
 def base_config(preset: str) -> ModelConfig:
@@ -59,6 +66,18 @@ def main():
     ap.add_argument("--prefill-workers", type=int, default=1)
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill size (0 = whole prompt)")
+    ap.add_argument("--env-stage", action="store_true",
+                    help="disaggregated env-interaction stage: rows park "
+                         "on tool calls instead of freezing in their slot")
+    ap.add_argument("--env-workers", type=int, default=2)
+    ap.add_argument("--env-inflight-per-tenant", type=int, default=0,
+                    help="max concurrent tool calls per tenant in the env "
+                         "stage (0 = uncapped)")
+    ap.add_argument("--max-turns", type=int, default=0,
+                    help="per-episode tool-turn budget (0 = env default)")
+    ap.add_argument("--mix", default="classic", choices=sorted(MIXES),
+                    help="tenant env rotation; 'agentic' is the multi-turn "
+                         "tool-heavy mix the env stage targets")
     args = ap.parse_args()
 
     cfg = base_config(args.preset)
@@ -73,11 +92,17 @@ def main():
         checkpoint_every=5 if args.checkpoint_dir else 0,
         disagg_prefill=args.disagg_prefill,
         prefill_workers=args.prefill_workers,
-        prefill_chunk=args.prefill_chunk))
+        prefill_chunk=args.prefill_chunk,
+        env_stage=args.env_stage,
+        env_workers=args.env_workers,
+        env_inflight_per_tenant=args.env_inflight_per_tenant,
+        max_turns=args.max_turns))
+    envs = MIXES[args.mix]
     for i in range(args.tasks):
-        env = ENVS[i % len(ENVS)]
+        env = envs[i % len(envs)]
         rt.submit_task(TaskSpec(f"{env}-{i}", env, group_size=4, num_groups=1,
-                                max_new_tokens=6 if env != "search" else 12,
+                                max_new_tokens=12 if env in AGENTIC_ENVS
+                                else 6,
                                 target_steps=args.steps, lr=3e-3))
     rt.run(timeout_s=args.timeout)
 

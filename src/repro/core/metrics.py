@@ -22,7 +22,14 @@
                    ``disagg_prefill`` they overlap it.
   queue depth    — step-function timeline of the prefill-stage queues
                    (waiting + in-prefill, ready-to-splice) — the Fig-5
-                   hand-off depths between the two rollout stages.
+                   hand-off depths between the two rollout stages — and of
+                   the env-interaction stage's queues (waiting, executing).
+  env busy/wait  — environment-interaction accounting: "env" intervals are
+                   recorded per task (tool dispatch → response), never
+                   counted as device-busy (PHASE_INTENSITY 0, excluded from
+                   busy/idle). env wait = Σ interval durations (row-seconds
+                   spent blocked on tools); env busy = their merged union
+                   (wall time with ≥1 tool call outstanding).
 
 Both runtimes (real threads and virtual-time simulator) record through this
 same recorder, so benchmark tables are produced by one code path. The
@@ -68,6 +75,7 @@ class MetricsRecorder:
         self.intervals: List[Interval] = []
         self.slot_samples: List[Tuple[float, int, int]] = []  # (t, occ, cap)
         self.queue_samples: List[Tuple[float, int, int]] = []  # (t, pq, rq)
+        self.env_samples: List[Tuple[float, int, int]] = []  # (t, wait, exec)
         self.counters: Dict[str, int] = {}    # preemption/eviction/replay...
         self.t0: Optional[float] = None
         self.t1: Optional[float] = None
@@ -103,23 +111,71 @@ class MetricsRecorder:
         the slot samples."""
         self.queue_samples.append((t, prefill_q, ready_q))
 
-    def queue_depth_stats(self) -> Dict[str, float]:
-        """Time-weighted mean + max depth per stage queue over the run."""
-        qs = self.queue_samples
-        if len(qs) < 2:
+    def record_env_sample(self, t: float, waiting: int, executing: int):
+        """Point sample of the env-interaction stage's queue depths
+        (requests waiting for a worker, tool calls executing)."""
+        self.env_samples.append((t, waiting, executing))
+
+    @staticmethod
+    def _depth_stats(samples, names) -> Dict[str, float]:
+        """Time-weighted mean + max per column of a step-function
+        (t, d0, d1) depth timeline."""
+        if len(samples) < 2:
             return {}
-        wp = wr = total = 0.0
-        for (t0, pq, rq), (t1, _, _) in zip(qs, qs[1:]):
+        w0 = w1 = total = 0.0
+        for (t0, a, b), (t1, _, _) in zip(samples, samples[1:]):
             dt = max(0.0, t1 - t0)
-            wp += dt * pq
-            wr += dt * rq
+            w0 += dt * a
+            w1 += dt * b
             total += dt
         if total <= 0:
             return {}
-        return {"prefill_q_mean": wp / total,
-                "prefill_q_max": float(max(pq for _, pq, _ in qs)),
-                "ready_q_mean": wr / total,
-                "ready_q_max": float(max(rq for _, _, rq in qs))}
+        return {f"{names[0]}_mean": w0 / total,
+                f"{names[0]}_max": float(max(a for _, a, _ in samples)),
+                f"{names[1]}_mean": w1 / total,
+                f"{names[1]}_max": float(max(b for _, _, b in samples))}
+
+    def queue_depth_stats(self) -> Dict[str, float]:
+        """Time-weighted mean + max depth per stage queue over the run
+        (prefill + ready queues, and the env stage's queues if sampled)."""
+        out = self._depth_stats(self.queue_samples,
+                                ("prefill_q", "ready_q"))
+        out.update(self._depth_stats(self.env_samples,
+                                     ("env_q", "env_exec")))
+        return out
+
+    # -- environment-interaction accounting -----------------------------
+    def env_wait_seconds(self) -> float:
+        """Σ env-interval durations: row-seconds spent blocked on external
+        tools/judges (the per-task split is env_wait_by_task)."""
+        return sum(iv.end - iv.start for iv in self.intervals
+                   if iv.phase == "env")
+
+    def env_wait_by_task(self) -> Dict[str, float]:
+        """Per-tenant env-interaction wait seconds (satellite: the global
+        aggregate hid which tenant's tools were slow)."""
+        out: Dict[str, float] = {}
+        for iv in self.intervals:
+            if iv.phase == "env":
+                out[iv.task_id] = out.get(iv.task_id, 0.0) + (iv.end - iv.start)
+        return out
+
+    def env_busy_seconds(self) -> float:
+        """Merged union of env intervals: wall time with at least one tool
+        call outstanding (concurrent calls counted once)."""
+        spans = sorted((iv.start, iv.end) for iv in self.intervals
+                       if iv.phase == "env")
+        busy, cur_s, cur_e = 0.0, None, None
+        for s, e in spans:
+            if cur_e is None or s > cur_e:
+                if cur_e is not None:
+                    busy += cur_e - cur_s
+                cur_s, cur_e = s, e
+            else:
+                cur_e = max(cur_e, e)
+        if cur_e is not None:
+            busy += cur_e - cur_s
+        return busy
 
     def slot_utilization_pct(self) -> float:
         """Time-weighted mean of occupied/capacity over the sampled span."""
@@ -209,6 +265,13 @@ def summarize(manager, rec: MetricsRecorder) -> Dict[str, float]:
         busy = rec.busy_device_seconds(pool="rollout", phase=phase)
         if busy > 0:
             out[f"{phase}_busy_s"] = busy
+    # environment-interaction stage: wait (row-seconds blocked on tools)
+    # and busy (wall time with a tool call outstanding) — never counted as
+    # device time (per-task split: rec.env_wait_by_task())
+    env_wait = rec.env_wait_seconds()
+    if env_wait > 0:
+        out["env_wait_s"] = env_wait
+        out["env_busy_s"] = rec.env_busy_seconds()
     out.update(rec.queue_depth_stats())
     # scheduler event counters (zero-valued keys omitted: absent == 0)
     for name, n in sorted(rec.counters.items()):

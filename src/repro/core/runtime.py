@@ -1,15 +1,20 @@
 """Real (threaded) MARLaaS runtime: the disaggregated stages of Fig 5
 executing actual JAX rollout + GRPO training on this host.
 
-Stage layout (`rollout_mode="continuous"`, `disagg_prefill=True`):
+Stage layout (`rollout_mode="continuous"`, `disagg_prefill=True`,
+`env_stage=True` — all three paper stages disaggregated):
 
     submit ──> SlotScheduler queue ──> PrefillWorker thread(s)
                 (SRPT/priority/         chunked prefill on own caches
                  starvation order)             │ ReadyRow (KV/SSM state +
-                                               ▼  first token + logprob)
-               RolloutWorker thread <── ready queue
-                 decode stream: scatter-only splice + one fused decode
-                 step over the slot pool — NEVER runs a prefill graph
+                      ▲                        ▼  first token + logprob)
+      resume job      │        RolloutWorker thread <── ready queue
+      (prefix +       │          decode stream: scatter-only splice + one
+       forced RESP)   │          fused decode step over the slot pool —
+                      │          NEVER runs a prefill graph
+    EnvStage ─────────┘               │ park on tok.CALL (slot vacated,
+      EnvWorker pool: latency +       ▼  instantly refilled)
+      stateful ToolSession.call  <────┘
                Trainer thread — pops FIFO, runs PolicyUpdate, commits v+1
 
   RolloutWorker thread — streaming (default): feeds per-task requests into
@@ -26,9 +31,16 @@ Stage layout (`rollout_mode="continuous"`, `disagg_prefill=True`):
     scheduler-ordered rows and prefill them in `prefill_chunk`-sized
     chunks (rollout/prefill.py); preempted rows replay through the same
     path token-for-token.
+  EnvWorker thread(s) — `env_workers` env-interaction workers
+    (rollout/env_stage.py, `env_stage=True`): a row that samples a tool
+    call is PARKED (slot freed and refilled) instead of freezing in its
+    slot for the env latency; the tool response re-enters the scheduler
+    queue as a resume job and splices back through the prefill path —
+    token-for-token identical to the freeze-in-slot baseline. With
+    `env_stage=False` (baseline) tool calls run on the engine's shared
+    thread-pool while the row's slot sits frozen (booked as
+    `tool_wait_slot_steps`), overlapping only the other rows' decode.
   Trainer thread — pops FIFO, runs the task's PolicyUpdate, commits v+1.
-  Environment interactions run on the engine's tool thread-pool and overlap
-  decode of the other rows (paper's rollout/env overlap).
 
 The same MultiTaskManager/MetricsRecorder as the simulator; scheduling
 regimes: marlaas (async), multilora_sync (barrier), single_disagg
@@ -85,6 +97,17 @@ class RuntimeConfig:
     prefill_chunk: int = 0            # chunked prefill size (0 = whole
                                       # prompt per call); rounded up for
                                       # recurrent-state exactness
+    env_stage: bool = False           # disaggregated env-interaction stage:
+                                      # rows park on tool calls (slot freed)
+                                      # and resume via the prefill path;
+                                      # False = freeze-in-slot baseline
+    env_workers: int = 2              # env-interaction worker threads
+    env_inflight_per_tenant: int = 0  # max concurrent tool calls per tenant
+                                      # in the env stage (0 = uncapped): a
+                                      # slow-tool tenant can't monopolize
+                                      # the worker pool
+    max_turns: int = 0                # per-episode tool-turn budget applied
+                                      # to every request (0 = env default)
     max_len: int = 96
     use_kernel: bool = False
     seed: int = 0
@@ -138,6 +161,9 @@ class MARLaaSRuntime:
             disagg_prefill=rcfg.disagg_prefill,
             prefill_chunk=rcfg.prefill_chunk,
             prefill_workers=rcfg.prefill_workers,
+            env_stage=rcfg.env_stage,
+            env_workers=rcfg.env_workers,
+            env_inflight_per_tenant=rcfg.env_inflight_per_tenant,
             on_stage=self._on_stage)
         # LRU tenant -> stacked-LoRA slot map (rollout thread only). The
         # device write happens in _feed_continuous once the consumable
@@ -197,7 +223,8 @@ class MARLaaSRuntime:
                         prompt=prompt, truth=truth, env=env,
                         max_new_tokens=st.spec.max_new_tokens,
                         temperature=st.spec.temperature,
-                        priority=st.spec.priority))
+                        priority=st.spec.priority,
+                        max_turns=self.rcfg.max_turns or None))
         return reqs
 
     # -- rollout worker -------------------------------------------------------
@@ -336,6 +363,7 @@ class MARLaaSRuntime:
         self._seg_t0: Optional[float] = None
         last_slot_sample = None
         last_queue_sample = None
+        last_env_sample = None
         while not self._stop.is_set():
             self._execute_preemptions()
             fed = self._feed_continuous()
@@ -351,6 +379,11 @@ class MARLaaSRuntime:
             if qd != last_queue_sample:
                 self.rec.record_queue_sample(now, *qd)
                 last_queue_sample = qd
+            if self.rcfg.env_stage:
+                ed = eng.env_depths()
+                if ed != last_env_sample:
+                    self.rec.record_env_sample(now, *ed)
+                    last_env_sample = ed
             # decode timeline: one interval per contiguous occupant-set run,
             # task_id joined with "+" (fused multi-tenant decode)
             tasks_now = eng.occupant_tasks()
@@ -383,6 +416,10 @@ class MARLaaSRuntime:
         occ, cap = eng.occupancy()
         self.rec.record_slot_sample(now, occ, cap)   # close the timeline
         self.rec.record_queue_sample(now, *eng.queue_depths())
+        if self.rcfg.env_stage:
+            self.rec.record_env_sample(now, *eng.env_depths())
+            if eng._env is not None:
+                eng._env.halt()     # env workers die with the rollout loop
         self._flush_decode_segment(now)
         if self.rcfg.disagg_prefill:
             eng._halt_stage()       # workers die with the rollout loop

@@ -4,9 +4,20 @@ Each env provides:
   sample_prompt(rng)          -> (prompt_token_ids, truth)  — data pipeline
   verify(truth, completion)   -> float reward in [0, 1]     — RLVR verifier
   tool_call(query_ids)        -> response_token_ids          — agentic only
+  open_session(truth)         -> ToolSession                 — multi-turn
   latency profile             — env-interaction latency (real: sleep;
                                  sim: virtual seconds), the paper's external
                                  tool/judge latency source.
+
+Multi-turn episode protocol: an agentic episode may emit ``tok.CALL`` up to
+``max_turns`` times (0 = unlimited). Each episode owns ONE ``ToolSession``
+— a stateful per-episode tool endpoint (REPL register, progressive-reveal
+oracle, hop counter, ...) created lazily at the first call and carried with
+the row across preemption/parking, so sessions survive slot eviction and
+replay. Sessions must be deterministic functions of their call sequence:
+replay never re-executes past calls (responses already live in the
+generated prefix as force-fed tokens), so determinism is what keeps
+preempt-at-any-turn replay token-for-token exact.
 
 Rewards are *graded* (fraction-correct) rather than binary so GRPO groups
 have variance from step one; exact-match is reported separately.
@@ -20,10 +31,29 @@ from typing import List, Optional, Sequence, Tuple
 from repro.data import tokenizer as tok
 
 
+class ToolSession:
+    """One episode's stateful tool endpoint.
+
+    The default session is a stateless adapter over ``env.tool_call`` —
+    every call re-derives the response from the full query. Stateful envs
+    subclass and keep per-episode state across ``call``s (`self.turns`
+    counts completed calls)."""
+
+    def __init__(self, env: "Env", truth):
+        self.env = env
+        self.truth = truth
+        self.turns = 0
+
+    def call(self, query_ids: Sequence[int]) -> List[int]:
+        self.turns += 1
+        return self.env.tool_call(query_ids, self.truth)
+
+
 class Env(abc.ABC):
     name: str = "env"
     is_agentic: bool = False
     max_new_tokens: int = 16
+    max_turns: int = 0           # tool turns per episode (0 = unlimited)
     # latency model for environment interaction (seconds)
     env_latency_mean: float = 0.0
     env_latency_std: float = 0.0
@@ -39,10 +69,25 @@ class Env(abc.ABC):
     def tool_call(self, query_ids: Sequence[int], truth=None) -> List[int]:
         raise NotImplementedError
 
+    def open_session(self, truth) -> ToolSession:
+        """A fresh per-episode tool session (called once per episode, at
+        the first tool call). Stateful envs return their own subclass."""
+        return ToolSession(self, truth)
+
     def sample_env_latency(self, rng: random.Random) -> float:
         if self.env_latency_mean <= 0:
             return 0.0
         return max(0.0, rng.gauss(self.env_latency_mean, self.env_latency_std))
+
+
+def _answer_after_tools(completion_ids: Sequence[int]) -> List[int]:
+    """The episode's final answer: tokens after the LAST force-fed tool
+    response (multi-turn episodes interleave several RESP…ENDRESP blocks;
+    only what the policy says after the last one is graded)."""
+    ids = [int(i) for i in completion_ids]
+    while tok.ENDRESP in ids:
+        ids = ids[ids.index(tok.ENDRESP) + 1:]
+    return ids
 
 
 def _answer_reward(expected: str, completion_ids: Sequence[int]) -> float:

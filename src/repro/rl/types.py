@@ -29,7 +29,9 @@ class RolloutCompletion:
     gen_loss_mask: List[float]        # 0.0 on force-fed (tool-response) tokens
     truth: Any
     env: Any
-    finish_reason: str = ""           # eos|budget|capacity|tool_timeout|aborted
+    finish_reason: str = ""           # eos|budget|capacity|turn_limit|
+                                      # tool_timeout|tool_error|straggler|
+                                      # aborted
     slot: int = -1                    # decode slot the row occupied
     sampled_tokens: int = 0           # tokens charged to max_new_tokens
     forced_tokens: int = 0            # force-fed tokens (budget-exempt)

@@ -29,8 +29,29 @@ filled from a cross-task request queue. Two fill paths (Fig 5):
     prefills are in flight, and outputs are bit-identical to the fused
     path (same forward math, same per-row sampling rule).
 
-Rows awaiting an external tool response freeze (advance=0) while the rest
-of the pool keeps decoding.
+Agentic rows and the environment-interaction stage (two modes):
+
+  freeze-in-slot (default baseline) — a row that emits ``tok.CALL`` keeps
+    its decode slot with advance=0 for the whole env latency while the
+    rest of the pool decodes; every such frozen step is booked as
+    ``stats.tool_wait_slot_steps`` (the dead weight Fig 5 is about).
+  env stage (``env_stage=True``) — the row is PARKED instead: its
+    generated prefix is already host-side (the preemption snapshot), so
+    the slot is vacated and instantly refilled from the scheduler queue
+    while an EnvWorker (rollout/env_stage.py) runs the tool call. The
+    response turns into a resume job: the row re-enters the scheduler
+    queue with its force-feed queue pre-loaded and flows through the
+    ordinary (fused or disaggregated) prefill path — prefix replay plus a
+    FORCED first token (the RESP opener) — then splices back. No decode
+    slot is ever occupied by an I/O-waiting row
+    (``tool_wait_slot_steps == 0`` by construction), and the token stream
+    is bit-identical to freeze-in-slot given the same tool responses.
+
+Multi-turn episodes: each agentic row owns one stateful ``ToolSession``
+(created at its first call, carried across park/preempt/replay) and a turn
+budget (``request.max_turns``, default ``env.max_turns``; 0 = unlimited).
+A CALL sampled with the budget spent ends the episode
+(``finish_reason="turn_limit"``).
 
 Determinism: sampling is per-row — each request carries a base PRNG key
 (``fold_in(master, request.seed or submit-index)``) folded with the row's
@@ -63,7 +84,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import threading
@@ -78,6 +99,7 @@ from repro.envs.base import Env
 from repro.lora.adapters import batched_ctx, init_stacked_buffer, stack_adapters
 from repro.models import decode_step, forward_seq, init_cache, lm_logits
 from repro.rl.types import RolloutCompletion, TrajectoryBatch
+from repro.rollout.env_stage import EnvStage
 from repro.rollout.prefill import (PrefillKernels, PrefillWorker, ReadyRow,
                                    _bucket_len, _sample_rows, effective_chunk)
 from repro.rollout.scheduler import LengthPredictor, SlotScheduler
@@ -97,6 +119,8 @@ class RolloutRequest:
     priority: int = 0             # scheduler tier: higher pops first and is
                                   # never chosen as a preemption victim over
                                   # a lower tier
+    max_turns: Optional[int] = None   # tool-turn budget for this episode
+                                      # (None -> env.max_turns; 0 = unlimited)
 
 
 @dataclass
@@ -131,6 +155,21 @@ class RolloutStats:
     decode_stall_seconds: float = 0.0   # prefill-stage work executed ON the
                                         # decode stream (fused refill); 0 by
                                         # construction when disaggregated
+    # environment-interaction stage extras
+    parks: int = 0                 # rows vacated from their slot on CALL
+    resumes: int = 0               # tool responses turned into resume jobs
+    tool_wait_slot_steps: int = 0  # Σ over decode steps of resident rows
+                                   # frozen on a tool wait — the slot dead
+                                   # weight env_stage drives to 0 by
+                                   # construction
+    env_wait_by_task: Dict[str, float] = field(default_factory=dict)
+                                   # per-tenant env-interaction wait seconds
+
+    def add_env_wait(self, task_id: str, wait: float):
+        """Book one resolved tool call's wait (global + per-tenant)."""
+        self.env_wait_seconds += wait
+        self.env_wait_by_task[task_id] = (
+            self.env_wait_by_task.get(task_id, 0.0) + wait)
 
     def slot_utilization(self) -> float:
         if self.capacity_row_steps <= 0:
@@ -217,11 +256,17 @@ def _build_refill_fn(cfg: ModelConfig, use_kernel: bool, max_len: int):
     off the prefill logits: 0 for fresh rows, `len(gen)` for
     preemption-replayed rows (whose `tokens` are prompt + generated prefix)
     — the replayed row's next token therefore uses the identical
-    fold_in(key, counter) an uninterrupted run would have."""
+    fold_in(key, counter) an uninterrupted run would have.
+
+    `forced`/`forced_mask` override the sampled first token for env-stage
+    resume rows: the prefix ends in CALL, so the installed token is the
+    forced RESP opener with its logprob read off the same final-position
+    logits — exactly what the freeze-in-slot baseline records when it
+    feeds CALL through a decode step."""
 
     def refill(params, adapters, tokens, prompt_lens, init_counters, slots,
-               new_row_ids, new_keys, new_temps, cache, cur, counters, keys,
-               temps, row_ids):
+               new_row_ids, new_keys, new_temps, forced, forced_mask, cache,
+               cur, counters, keys, temps, row_ids):
         pcache = init_cache(cfg, tokens.shape[0], max_len,
                             enc_len=8 if cfg.family == "encdec" else 0)
         lora = batched_ctx(adapters, new_row_ids, cfg, use_kernel)
@@ -231,8 +276,8 @@ def _build_refill_fn(cfg: ModelConfig, use_kernel: bool, max_len: int):
         last = jnp.take_along_axis(
             h, (prompt_lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
         logits = lm_logits(last, params, cfg)
-        first = _sample_rows(logits, new_keys, init_counters, new_temps)
-        first = first.astype(jnp.int32)
+        sampled = _sample_rows(logits, new_keys, init_counters, new_temps)
+        first = jnp.where(forced_mask > 0, forced, sampled).astype(jnp.int32)
         lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
                                  first[:, None], axis=-1)[:, 0]
         out = {}
@@ -248,7 +293,7 @@ def _build_refill_fn(cfg: ModelConfig, use_kernel: bool, max_len: int):
                  row_ids.at[slots].set(new_row_ids))
         return first, lp, out, state
 
-    return jax.jit(refill, donate_argnums=(9, 10, 11, 12, 13, 14))
+    return jax.jit(refill, donate_argnums=(11, 12, 13, 14, 15, 16))
 
 
 def _build_splice_fn(cfg: ModelConfig):
@@ -278,11 +323,12 @@ def _build_splice_fn(cfg: ModelConfig):
 
 
 class _Row:
-    """Host-side per-row decode state (one slot / one batch lane)."""
+    """Host-side per-episode state machine (one slot / one batch lane when
+    resident; parked rows hold no slot at all)."""
     __slots__ = ("req", "prompt_len", "gen", "lps", "lmask", "sampled",
                  "forced", "status", "forced_q", "finish_reason", "key",
                  "submit_index", "meta", "submitted_at", "started_at",
-                 "replays")
+                 "replays", "session", "turns")
 
     def __init__(self, req: RolloutRequest, key, submit_index: int,
                  meta=None, submitted_at: float = 0.0):
@@ -302,12 +348,28 @@ class _Row:
         self.submitted_at = submitted_at
         self.started_at = 0.0
         self.replays = 0              # times preempted and re-queued
+        self.session = None           # per-episode ToolSession (lazy; kept
+                                      # across park/preempt/replay)
+        self.turns = 0                # tool calls dispatched this episode
+
+    def turn_limit(self) -> int:
+        """Effective tool-turn budget (0 = unlimited)."""
+        if self.req.max_turns is not None:
+            return self.req.max_turns
+        return getattr(self.req.env, "max_turns", 0)
+
+    def ensure_session(self):
+        if self.session is None:
+            self.session = self.req.env.open_session(self.req.truth)
+        return self.session
 
     def accept(self, token: int, lp: float, mask: float, max_total: int) -> str:
         """Record one token; returns "continue" | "done" | "call".
 
         Only sampled tokens (mask==1) are charged to max_new_tokens; the
-        length cap is the KV-cache capacity, not the sampling budget.
+        length cap is the KV-cache capacity, not the sampling budget. A
+        CALL sampled with the turn budget spent ends the episode instead
+        of dispatching (finish_reason "turn_limit").
         """
         self.gen.append(token)
         self.lps.append(lp)
@@ -323,6 +385,11 @@ class _Row:
             self.status, self.finish_reason = "done", "capacity"
             return "done"
         if token == tok.CALL and self.req.env.is_agentic and mask == 1.0:
+            limit = self.turn_limit()
+            if limit and self.turns >= limit:
+                self.status, self.finish_reason = "done", "turn_limit"
+                return "done"
+            self.turns += 1
             self.status = "calling"
             return "call"
         if self.sampled >= self.req.max_new_tokens and not self.forced_q:
@@ -345,18 +412,18 @@ class _Row:
 
 def _submit_tool_call(row: "_Row", prompt_tokens, pool, rng,
                       sim_latency: bool) -> Future:
-    """Dispatch a row's agentic tool call (shared by both engines): sample
-    the env-interaction latency, then run env.tool_call on the pool while
-    the rest of the batch keeps decoding."""
-    req = row.req
+    """Dispatch a row's agentic tool call on the shared pool (freeze-in-slot
+    path of both engines): sample the env-interaction latency, then run the
+    episode's stateful session call while the rest of the batch decodes."""
     query = list(prompt_tokens) + row.gen
-    latency = req.env.sample_env_latency(
+    latency = row.req.env.sample_env_latency(
         _RandomShim(rng)) if not sim_latency else 0.0
+    session = row.ensure_session()
 
-    def run_tool(q=query, env=req.env, lat=latency, truth=req.truth):
+    def run_tool(q=query, sess=session, lat=latency):
         if lat > 0:
             time.sleep(lat)
-        return env.tool_call(q, truth)
+        return sess.call(q)
 
     return pool.submit(run_tool)
 
@@ -397,7 +464,8 @@ class RolloutEngine:
     # -- main API ---------------------------------------------------------
     def generate(self, requests: Sequence[RolloutRequest], adapter_trees,
                  *, tool_executor: Optional[ThreadPoolExecutor] = None,
-                 sim_latency: bool = False) -> Tuple[List[Dict], RolloutStats]:
+                 sim_latency: bool = False,
+                 deadline_s: float = 120.0) -> Tuple[List[Dict], RolloutStats]:
         """Run a batch of cross-task requests to completion (one round).
 
         adapter_trees: list of per-task adapter trees; request.adapter_index
@@ -457,11 +525,18 @@ class RolloutEngine:
             cur[i] = int(first[i])
 
         # forced feeds are budget-exempt, so the step bound must cover
-        # budget + worst-case tool-response lengths; the wall deadline is
-        # the actual straggler guard.
-        max_steps = max(r.max_new_tokens for r in requests) + 96
+        # budget + worst-case tool-response lengths (one response per tool
+        # turn; an unlimited turn budget gets a 4-turn allowance — the wall
+        # deadline is the actual straggler guard, and rows it cuts short
+        # are tagged "straggler" below).
+        worst_turns = max(
+            (r.max_turns if r.max_turns is not None
+             else getattr(r.env, "max_turns", 0)) or 4
+            for r in requests)
+        max_steps = (max(r.max_new_tokens for r in requests)
+                     + 96 * max(1, worst_turns))
         steps_done = 0
-        wall_deadline = time.monotonic() + 120.0
+        wall_deadline = time.monotonic() + deadline_s
         while steps_done < max_steps and time.monotonic() < wall_deadline:
             if all(r.status == "done" for r in rows):
                 break
@@ -469,7 +544,8 @@ class RolloutEngine:
             for i in list(pending):
                 if pending[i].done():
                     resp = pending[i].result()
-                    stats.env_wait_seconds += time.monotonic() - pending_t0[i]
+                    stats.add_env_wait(rows[i].req.task_id,
+                                       time.monotonic() - pending_t0[i])
                     rows[i].forced_q = [tok.RESP] + list(resp) + [tok.ENDRESP]
                     rows[i].status = "active"
                     del pending[i], pending_t0[i]
@@ -514,10 +590,19 @@ class RolloutEngine:
                 if not was_forced:
                     stats.sampled_tokens += 1
 
-        # timed-out tool calls: cancel
+        # timed-out tool calls: cancel the Future too — an abandoned
+        # env.tool_call left queued would keep burning the SHARED pool and
+        # starve other tenants' tool calls (satellite bugfix, ISSUE 4)
         for i in pending:
+            pending[i].cancel()
             rows[i].status = "done"
             rows[i].finish_reason = rows[i].finish_reason or "tool_timeout"
+        for row in rows:
+            # rows the step bound / wall deadline cut short return partial
+            # (graded reward on what exists) with an explicit reason
+            if row.status != "done":
+                row.status = "done"
+                row.finish_reason = row.finish_reason or "straggler"
         if own_pool:
             pool.shutdown(wait=False)
 
@@ -553,6 +638,14 @@ class ContinuousRolloutEngine:
     ``disagg_prefill=True`` the replay prefill runs asynchronously on the
     prefill workers and splices back with the row's original per-row
     counter, so replay parity is preserved across both fill paths.
+
+    ``env_stage=True`` activates the disaggregated environment-interaction
+    stage (rollout/env_stage.py, ``env_workers`` threads,
+    ``env_inflight_per_tenant`` fairness cap): rows that sample CALL are
+    parked instead of freezing in their slot, and resume through the
+    prefill path once their tool response lands — works with either fill
+    path, preserving token-for-token parity with the freeze-in-slot
+    baseline.
     """
 
     def __init__(self, cfg: ModelConfig, base_params, *, max_slots: int = 8,
@@ -563,7 +656,9 @@ class ContinuousRolloutEngine:
                  scheduler: str = "srpt", starvation_k: int = 8,
                  predictor: Optional[LengthPredictor] = None,
                  disagg_prefill: bool = False, prefill_chunk: int = 0,
-                 prefill_workers: int = 1, on_stage=None):
+                 prefill_workers: int = 1, env_stage: bool = False,
+                 env_workers: int = 2, env_inflight_per_tenant: int = 0,
+                 on_stage=None):
         self.cfg = cfg
         self.base_params = base_params
         self.max_slots = max_slots
@@ -574,6 +669,11 @@ class ContinuousRolloutEngine:
         self.sim_latency = sim_latency
         self.disagg_prefill = disagg_prefill
         self.prefill_workers = max(1, prefill_workers)
+        self.env_stage = env_stage
+        self._env: Optional[EnvStage] = EnvStage(
+            max(1, env_workers),
+            max_inflight_per_tenant=env_inflight_per_tenant,
+            sim_latency=sim_latency) if env_stage else None
         self._prefill_chunk_eff = effective_chunk(cfg, prefill_chunk)
         self.on_stage = on_stage    # optional (phase, task_id, t0, t1) hook
                                     # (called from worker threads too)
@@ -721,8 +821,12 @@ class ContinuousRolloutEngine:
 
     def queued(self) -> int:
         with self._stage_lock:
-            return (len(self._sched) + len(self._stage_inflight)
-                    + len(self._ready))
+            n = (len(self._sched) + len(self._stage_inflight)
+                 + len(self._ready))
+        if self._env is not None:
+            n += self._env.count()      # parked rows hold no slot but are
+                                        # still in flight (env stage)
+        return n
 
     def queue_depths(self) -> Tuple[int, int]:
         """(prefill queue + in-prefill, ready-to-splice) — the two stage
@@ -731,23 +835,30 @@ class ContinuousRolloutEngine:
             return (len(self._sched) + len(self._stage_inflight),
                     len(self._ready))
 
+    def env_depths(self) -> Tuple[int, int]:
+        """(queued, executing) depths of the env-interaction stage."""
+        return self._env.depths() if self._env is not None else (0, 0)
+
     def idle(self) -> bool:
         return self.queued() == 0 and all(r is None for r in self._rows)
 
     def active_tenants(self) -> frozenset:
         """Tenants with rows resident in slots OR anywhere in the pipeline
-        (queued, mid-prefill, ready-to-splice, incl. preempted rows awaiting
-        replay) — i.e. whose adapter slot must stay resident."""
+        (queued, mid-prefill, ready-to-splice, parked in the env stage,
+        incl. preempted rows awaiting replay) — i.e. whose adapter slot
+        must stay resident."""
         with self._stage_lock:
             stage = (frozenset(r.req.task_id for r in self._stage_inflight)
                      | frozenset(rr.row.req.task_id for rr in self._ready)
                      | self._sched.tenants())
+        if self._env is not None:
+            stage = stage | self._env.tenants()
         return self.occupant_tasks() | stage
 
     def queued_progress(self, task_id: str) -> Tuple[int, float]:
         """(row count, mean sampled tokens) over a tenant's not-yet-resident
-        rows (queued / mid-prefill / ready). Preempted rows carry their
-        generated prefix, so this feeds the admission controller's
+        rows (queued / mid-prefill / ready / parked). Preempted rows carry
+        their generated prefix, so this feeds the admission controller's
         remaining-budget re-estimate (readmission packs tighter)."""
         with self._stage_lock:
             rows = self._sched.rows_for(task_id)
@@ -755,6 +866,8 @@ class ContinuousRolloutEngine:
                      if r.req.task_id == task_id]
             rows += [rr.row for rr in self._ready
                      if rr.row.req.task_id == task_id]
+        if self._env is not None:
+            rows += self._env.rows_for(task_id)
         if not rows:
             return 0, 0.0
         return len(rows), float(sum(r.sampled for r in rows)) / len(rows)
@@ -766,29 +879,44 @@ class ContinuousRolloutEngine:
         return out
 
     # -- slot lifecycle --------------------------------------------------
-    def _evict(self, slot: int):
-        row = self._rows[slot]
-        prompt = self._prompts[slot]
-        res = row.result(prompt)
-        comp = RolloutCompletion(
+    def _completion(self, row: _Row, prompt, slot: int) -> RolloutCompletion:
+        """One finished episode → completion record (shared by slot
+        eviction, parked-row timeout, and the drain abort paths)."""
+        return RolloutCompletion(
             task_id=row.req.task_id, prompt_len=row.prompt_len,
-            tokens=res["tokens"], gen_logprobs=row.lps,
+            tokens=list(prompt) + row.gen, gen_logprobs=row.lps,
             gen_loss_mask=row.lmask, truth=row.req.truth, env=row.req.env,
             finish_reason=row.finish_reason, slot=slot,
             sampled_tokens=row.sampled, forced_tokens=row.forced,
             submit_index=row.submit_index, submitted_at=row.submitted_at,
             started_at=row.started_at, finished_at=time.monotonic(),
             finished_step=self.stats.decode_steps, meta=row.meta)
-        self._completed.append(comp)
+
+    def _evict(self, slot: int):
+        row = self._rows[slot]
+        self._completed.append(self._completion(row, self._prompts[slot],
+                                                slot))
         self.stats.completions += 1
-        if row.finish_reason in ("eos", "budget", "capacity"):
+        if row.finish_reason in ("eos", "budget", "capacity", "turn_limit"):
             # natural finishes only: a tool_timeout/aborted row's partial
             # sampled count would bias the tenant's length EMA low
             self.predictor.observe(row.req.task_id, row.sampled)
         self._rows[slot] = None
         self._prompts[slot] = None
-        self._pending.pop(slot, None)
+        # cancel, don't just drop, a pending tool Future: abandoned
+        # env.tool_call work left queued would keep burning the shared
+        # thread-pool and starve other tenants' tool calls — and a late
+        # response must never reach the slot's next occupant
+        fut = self._pending.pop(slot, None)
+        if fut is not None:
+            fut.cancel()
         self._pending_t0.pop(slot, None)
+
+    def _complete_parked(self, row: _Row):
+        """Finish an episode that holds NO slot (parked in the env stage:
+        tool timeout or abort)."""
+        self._completed.append(self._completion(row, row.req.prompt, -1))
+        self.stats.completions += 1
 
     # -- preemption -------------------------------------------------------
     def _preemptible(self, slot: int, protect=()) -> bool:
@@ -883,6 +1011,8 @@ class ContinuousRolloutEngine:
         slots = np.full((W,), self.max_slots, np.int32)   # ghosts: OOB → drop
         keys = np.zeros((W, 2), np.uint32)
         temps = np.ones((W,), np.float32)
+        forced = np.zeros((W,), np.int32)        # env-stage resumes install
+        fmask = np.zeros((W,), np.int32)         # a forced RESP opener
         for j, (slot, row) in enumerate(incoming):
             tokens[j, :len(seqs[j])] = seqs[j]
             prompt_lens[j] = len(seqs[j])
@@ -891,11 +1021,15 @@ class ContinuousRolloutEngine:
             slots[j] = slot
             keys[j] = row.key
             temps[j] = row.req.temperature
+            if row.forced_q:
+                forced[j] = row.forced_q[0]
+                fmask[j] = 1
         first, lp, self._cache, state = self._refill_fn(
             self.base_params, self._stacked, jnp.asarray(tokens),
             jnp.asarray(prompt_lens), jnp.asarray(init_counters),
             jnp.asarray(slots), jnp.asarray(row_ids), jnp.asarray(keys),
-            jnp.asarray(temps), self._cache, self._d_cur, self._d_counters,
+            jnp.asarray(temps), jnp.asarray(forced), jnp.asarray(fmask),
+            self._cache, self._d_cur, self._d_counters,
             self._d_keys, self._d_temps, self._d_row_ids)
         (self._d_cur, self._d_counters, self._d_keys, self._d_temps,
          self._d_row_ids) = state
@@ -916,7 +1050,10 @@ class ContinuousRolloutEngine:
         for j, (slot, row) in enumerate(incoming):
             self._rows[slot] = row
             self._prompts[slot] = list(row.req.prompt)
-            if row.gen:                           # preemption replay
+            was_forced = fmask[j] == 1
+            if was_forced:                        # env-stage resume splice
+                row.forced_q.pop(0)
+            elif row.gen:                         # preemption replay
                 self.stats.replays += 1
                 self.stats.replay_tokens += len(seqs[j])
             else:                                 # fresh row
@@ -924,11 +1061,12 @@ class ContinuousRolloutEngine:
                 row.started_at = now
             self.stats.prefill_tokens += len(seqs[j])
             self.stats.tokens_generated += 1
-            self.stats.sampled_tokens += 1
-            action = row.accept(int(first[j]), float(lp[j]), 1.0,
-                                self.max_len)
+            if not was_forced:
+                self.stats.sampled_tokens += 1
+            action = row.accept(int(first[j]), float(lp[j]),
+                                0.0 if was_forced else 1.0, self.max_len)
             if action == "call":
-                self._dispatch_tool(slot)
+                self._on_call(slot)
             elif action == "done":
                 self._evict(slot)
         return True
@@ -967,7 +1105,9 @@ class ContinuousRolloutEngine:
             now = time.monotonic()
             self._rows[slot] = row
             self._prompts[slot] = list(row.req.prompt)
-            if row.gen:                           # preemption replay
+            if rr.forced_first:                   # env-stage resume splice
+                row.forced_q.pop(0)
+            elif row.gen:                         # preemption replay
                 self.stats.replays += 1
                 self.stats.replay_tokens += rr.seq_len
             else:                                 # fresh row
@@ -976,10 +1116,13 @@ class ContinuousRolloutEngine:
             self.stats.splices += 1
             self.stats.splice_wait_seconds += max(0.0, now - rr.ready_at)
             self.stats.tokens_generated += 1
-            self.stats.sampled_tokens += 1
-            action = row.accept(rr.first, rr.lp, 1.0, self.max_len)
+            if not rr.forced_first:
+                self.stats.sampled_tokens += 1
+            action = row.accept(rr.first, rr.lp,
+                                0.0 if rr.forced_first else 1.0,
+                                self.max_len)
             if action == "call":
-                self._dispatch_tool(slot)
+                self._on_call(slot)
             elif action == "done":
                 self._evict(slot)
         now = time.monotonic()
@@ -991,11 +1134,70 @@ class ContinuousRolloutEngine:
                                            for rr in ready})), t0, now)
         return True
 
+    def _on_call(self, slot: int):
+        """Route a freshly sampled CALL: park the row in the env stage
+        (env_stage mode) or freeze it in its slot (baseline)."""
+        if self._env is not None:
+            self._park(slot)
+        else:
+            self._dispatch_tool(slot)
+
     def _dispatch_tool(self, slot: int):
         self._pending[slot] = _submit_tool_call(
             self._rows[slot], self._prompts[slot], self._pool, self._rng,
             self.sim_latency)
         self._pending_t0[slot] = time.monotonic()
+
+    def _park(self, slot: int):
+        """Env-stage path: vacate the slot the moment the row samples CALL.
+        The generated prefix already lives host-side (the same snapshot
+        preemption relies on), so parking is free of device copies — the
+        slot is immediately refillable from the scheduler queue while an
+        EnvWorker runs the tool call."""
+        row = self._rows[slot]
+        row.ensure_session()
+        query = list(self._prompts[slot]) + row.gen
+        latency = row.req.env.sample_env_latency(
+            _RandomShim(self._rng)) if not self.sim_latency else 0.0
+        self._rows[slot] = None
+        self._prompts[slot] = None
+        self.stats.parks += 1
+        self._env.submit(row, query, row.req.task_id, latency)
+
+    def _pump_env_stage(self):
+        """Resolve the env stage's response queue: expire timed-out jobs
+        (their rows finish with tool_timeout — they hold no slot), and turn
+        each response into a resume job — the row re-enters the scheduler
+        queue with its force-feed queue pre-loaded; the (fused or
+        disaggregated) prefill path replays prompt+prefix and installs the
+        forced RESP opener."""
+        now = time.monotonic()
+        for job in self._env.expire(now, self.tool_timeout_s):
+            row = job.row
+            row.status, row.finish_reason = "done", "tool_timeout"
+            self._complete_parked(row)
+        # drain_resolved() pops the WHOLE resolved batch: process every job
+        # before surfacing an error, else the siblings' rows would vanish
+        # from all engine accounting (no slot, no queue, no completion)
+        first_error: Optional[BaseException] = None
+        for job in self._env.drain_resolved():
+            row = job.row
+            if job.error is not None:
+                row.status, row.finish_reason = "done", "tool_error"
+                self._complete_parked(row)
+                first_error = first_error or job.error
+                continue
+            tid = row.req.task_id
+            self.stats.add_env_wait(tid, job.resolved_at - job.submitted_at)
+            if self.on_stage is not None:
+                self.on_stage("env", tid, job.submitted_at, job.resolved_at)
+            row.forced_q = [tok.RESP] + list(job.response) + [tok.ENDRESP]
+            row.status = "active"
+            self.stats.resumes += 1
+            with self._stage_lock:
+                self._sched.push(row, self.stats.refills)
+        if first_error is not None:      # surface like fut.result() does
+            raise first_error
 
     # -- scheduler interface ---------------------------------------------
     def step(self) -> bool:
@@ -1005,13 +1207,21 @@ class ContinuousRolloutEngine:
         any device work happened (refill/splice or decode)."""
         now = time.monotonic()
         progressed = False
-        # resolve / time out pending tool calls
+        # env-interaction stage: expire + resume parked rows (env_stage
+        # mode); the baseline freeze-in-slot path resolves futures below
+        if self._env is not None:
+            self._pump_env_stage()
+        # resolve / time out pending tool calls (freeze-in-slot baseline)
         for slot in list(self._pending):
             fut = self._pending[slot]
             row = self._rows[slot]
             if fut.done():
                 resp = fut.result()
-                self.stats.env_wait_seconds += now - self._pending_t0[slot]
+                t0w = self._pending_t0[slot]
+                tid = row.req.task_id
+                self.stats.add_env_wait(tid, now - t0w)
+                if self.on_stage is not None:
+                    self.on_stage("env", tid, t0w, now)
                 row.forced_q = [tok.RESP] + list(resp) + [tok.ENDRESP]
                 row.status = "active"
                 del self._pending[slot], self._pending_t0[slot]
@@ -1035,6 +1245,12 @@ class ContinuousRolloutEngine:
                     progressed = True
         elif self._refill_free_slots():
             progressed = True
+        if self._env is not None:
+            # the engine invariant of the disaggregated env stage: a
+            # tool-waiting row NEVER occupies a decode slot (it parks)
+            assert all(r is None or r.status != "calling"
+                       for r in self._rows), \
+                "env-stage invariant violated: tool-waiting row resident"
         advance = np.array(
             [1 if (r is not None and r.status == "active") else 0
              for r in self._rows], np.int32)
@@ -1066,6 +1282,11 @@ class ContinuousRolloutEngine:
         self.stats.decode_steps += 1
         self.stats.occupied_row_steps += int(advance.sum())
         self.stats.capacity_row_steps += self.max_slots
+        # slot dead weight of the freeze-in-slot baseline: resident rows
+        # that spent this decode step waiting on a tool (0 by construction
+        # under env_stage — the invariant above)
+        self.stats.tool_wait_slot_steps += sum(
+            1 for r in self._rows if r is not None and r.status == "calling")
         for slot, r in enumerate(self._rows):
             if r is None or r.status != "active" or advance[slot] == 0:
                 continue
@@ -1078,7 +1299,7 @@ class ContinuousRolloutEngine:
             if not was_forced:
                 self.stats.sampled_tokens += 1
             if action == "call":
-                self._dispatch_tool(slot)
+                self._on_call(slot)
             elif action == "done":
                 self._evict(slot)
         return True
@@ -1113,6 +1334,18 @@ class ContinuousRolloutEngine:
                 for row in self._stage_inflight:
                     self._sched.push(row, self.stats.refills)
                 self._stage_inflight.clear()
+        if self._env is not None and self._env.count() > 0:
+            # parked episodes abort like queued ones; late worker results
+            # are dropped by the cancelled flag. cancel_all also returns
+            # already-cancelled executing jobs whose rows expire() finished
+            # earlier — those must not complete twice.
+            for job in self._env.cancel_all():
+                row = job.row
+                if row.status == "done":
+                    continue
+                row.status = "done"
+                row.finish_reason = row.finish_reason or "aborted"
+                self._complete_parked(row)
         for slot, r in enumerate(self._rows):
             if r is not None:
                 r.status = "done"
@@ -1121,20 +1354,9 @@ class ContinuousRolloutEngine:
         with self._stage_lock:
             leftovers = self._sched.pop_all()
         for row in leftovers:
+            # a preempted/resumed-then-aborted row keeps its generated prefix
             row.status, row.finish_reason = "done", "aborted"
-            # a preempted-then-aborted row keeps its generated prefix
-            self._completed.append(RolloutCompletion(
-                task_id=row.req.task_id, prompt_len=row.prompt_len,
-                tokens=list(row.req.prompt) + row.gen,
-                gen_logprobs=list(row.lps),
-                gen_loss_mask=list(row.lmask), truth=row.req.truth,
-                env=row.req.env, finish_reason="aborted", slot=-1,
-                sampled_tokens=row.sampled, forced_tokens=row.forced,
-                submit_index=row.submit_index,
-                submitted_at=row.submitted_at, started_at=row.started_at,
-                finished_at=time.monotonic(),
-                finished_step=self.stats.decode_steps, meta=row.meta))
-            self.stats.completions += 1
+            self._complete_parked(row)
         out.extend(self.drain_completions())
         return out
 
@@ -1162,6 +1384,8 @@ class ContinuousRolloutEngine:
     def shutdown(self):
         if self._workers:
             self._halt_stage()
+        if self._env is not None:
+            self._env.halt()
         if self._own_pool:
             self._pool.shutdown(wait=False)
 

@@ -1,0 +1,287 @@
+"""Disaggregated environment-interaction stage (ISSUE 4 tentpole).
+
+The paper's architecture disaggregates THREE stages — rollout generation,
+environment interaction, and policy training. PR 1–3 disaggregated the
+first; this module is the second: before it, a row that emitted a tool
+call FROZE in its decode slot (``advance=0``) for the entire env latency,
+turning decode slots into dead weight exactly when external tool/judge
+latency dominates (the idle time Fig 5 is about).
+
+``EnvStage`` — an event-driven request/response pipeline between the
+decode stream and a pool of ``EnvWorker`` threads:
+
+  decode stream ──park──> request queue ──pop──> EnvWorker pool
+       ▲                  (FIFO, per-tenant        latency sleep +
+       │                   in-flight caps)         session.call()
+       └──resume job <── response queue <──emit────────┘
+
+When a resident row samples ``tok.CALL`` under ``env_stage=True`` the
+engine PARKS it: the generated prefix already lives host-side (the same
+snapshot the preemption machinery relies on), so the slot is simply
+vacated and instantly refilled from the scheduler queue. The parked row
+becomes an ``EnvJob``; an ``EnvWorker`` applies the sampled env latency,
+runs the episode's stateful ``ToolSession`` call, and pushes the response
+back. The engine's pump turns each response into a *resume job*: the row
+re-enters the scheduler queue with its force-feed queue pre-loaded
+(``RESP … ENDRESP``) and flows through the ordinary (fused or
+disaggregated) prefill path — prefix replay plus a FORCED first token —
+then splices back into a slot. Decode slots are therefore never occupied
+by I/O-waiting rows, and the token stream is bit-identical to the
+freeze-in-slot baseline given the same tool responses (same forward math,
+same per-row (key, counter) sampling, same forced tokens).
+
+Per-episode state machine (host-side, one ``_Row`` per episode):
+
+  active ──CALL (turn < budget)──> parked ──response──> resuming(queued)
+    ▲                                │                        │
+    └────────── splice-back ─────────┼────────────────────────┘
+  done  <──CALL (budget spent) / EOS / token budget / timeout / abort
+
+Fairness: ``max_inflight_per_tenant`` caps how many of one tenant's tool
+calls may execute concurrently — a tenant with pathologically slow tools
+cannot monopolize the worker pool (queued jobs from other tenants are
+popped around it). Timeouts are engine-driven: ``expire()`` cancels
+queued jobs outright and flags executing ones so their late responses are
+discarded — a late tool response can never be force-fed into a row that
+already timed out (or into the slot's next occupant; parked rows hold no
+slot at all).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+
+@dataclass
+class EnvJob:
+    """One parked episode's in-flight environment interaction."""
+    row: object                  # engine _Row (host-side episode state)
+    query: List[int]             # prompt + generated prefix (ends in CALL)
+    task_id: str
+    latency: float               # sampled env-interaction latency (seconds)
+    submitted_at: float
+    started_at: float = 0.0      # worker pickup time
+    resolved_at: float = 0.0
+    response: Optional[List[int]] = None
+    error: Optional[BaseException] = None
+    cancelled: bool = False      # timeout/abort: late result is discarded
+    state: str = "queued"        # queued | executing | done
+
+
+class EnvWorker(threading.Thread):
+    """Env-interaction worker: pops eligible jobs (FIFO within the
+    per-tenant cap), applies the sampled external latency, runs the
+    episode's stateful session call, and emits the response."""
+
+    def __init__(self, stage: "EnvStage", worker_id: int = 0):
+        super().__init__(daemon=True, name=f"env-worker-{worker_id}")
+        self.stage = stage
+        self.worker_id = worker_id
+
+    def run(self):
+        stage = self.stage
+        while True:
+            job = stage._pop_eligible()
+            if job is None:
+                if stage._stop.is_set():
+                    return
+                continue
+            if job.latency > 0 and not stage.sim_latency:
+                time.sleep(job.latency)
+            resp: List[int] = []
+            try:
+                resp = list(job.row.session.call(job.query))
+            except BaseException as e:      # surfaced on the engine thread
+                job.error = e
+            stage._finish(job, resp)
+
+
+class EnvStage:
+    """Event-driven env-interaction stage shared by one engine.
+
+    Thread contract: ``submit`` / ``drain_resolved`` / ``expire`` /
+    ``cancel_all`` are called from the engine (decode) thread; workers only
+    touch the queues under the stage condition. All host state — no device
+    work happens here, which is the point: env I/O never rides the decode
+    stream."""
+
+    def __init__(self, n_workers: int = 2, *,
+                 max_inflight_per_tenant: int = 0,
+                 sim_latency: bool = False):
+        if n_workers < 1:
+            raise ValueError("env stage needs at least one worker")
+        self.n_workers = n_workers
+        self.max_inflight_per_tenant = max_inflight_per_tenant  # 0 = off
+        self.sim_latency = sim_latency
+        self._cond = threading.Condition()
+        self._queue: Deque[EnvJob] = deque()      # FIFO request queue
+        self._executing: Dict[int, EnvJob] = {}   # id(job) -> job
+        self._done: Deque[EnvJob] = deque()       # response queue
+        self._inflight: Dict[str, int] = {}       # tenant -> executing count
+        self._stop = threading.Event()
+        self._workers: List[EnvWorker] = []
+        self.calls = 0                            # jobs handed to workers
+        self.timeouts = 0
+
+    # -- lifecycle --------------------------------------------------------
+    def _ensure_workers(self):
+        alive = [w for w in self._workers if w.is_alive()]
+        if len(alive) >= self.n_workers:
+            return
+        self._stop.clear()
+        fresh = [EnvWorker(self, i)
+                 for i in range(len(alive), self.n_workers)]
+        self._workers = alive + fresh
+        for w in fresh:
+            w.start()
+
+    def halt(self):
+        """Stop the workers. Queued jobs are cancelled outright — without
+        this, workers would drain the whole backlog (latency sleeps
+        included) for discarded results before noticing the stop flag,
+        stalling the caller's join for the queue's worth of env latency."""
+        self._stop.set()
+        with self._cond:
+            for job in self._queue:
+                job.cancelled = True
+            self._queue.clear()
+            self._cond.notify_all()
+        for w in self._workers:
+            w.join(timeout=30)
+        self._workers = []
+
+    # -- engine side ------------------------------------------------------
+    def submit(self, row, query: List[int], task_id: str,
+               latency: float) -> EnvJob:
+        """Park one episode: enqueue its tool call for the worker pool."""
+        job = EnvJob(row=row, query=query, task_id=task_id, latency=latency,
+                     submitted_at=time.monotonic())
+        self._ensure_workers()
+        with self._cond:
+            self._queue.append(job)
+            self._cond.notify()
+        return job
+
+    def drain_resolved(self) -> List[EnvJob]:
+        """Pop every completed (non-cancelled) response."""
+        out: List[EnvJob] = []
+        with self._cond:
+            while self._done:
+                out.append(self._done.popleft())
+        return out
+
+    def expire(self, now: float, timeout_s: float) -> List[EnvJob]:
+        """Time out jobs older than `timeout_s`: queued jobs are cancelled
+        outright (they never burn a worker); executing jobs are flagged so
+        the worker's late result is discarded. Returns the expired jobs —
+        the engine evicts their rows with finish_reason tool_timeout."""
+        expired: List[EnvJob] = []
+        with self._cond:
+            keep: Deque[EnvJob] = deque()
+            for job in self._queue:
+                if now - job.submitted_at > timeout_s:
+                    job.cancelled = True
+                    expired.append(job)
+                else:
+                    keep.append(job)
+            self._queue = keep
+            for job in self._executing.values():
+                if not job.cancelled and now - job.submitted_at > timeout_s:
+                    job.cancelled = True
+                    expired.append(job)
+        self.timeouts += len(expired)
+        return expired
+
+    def cancel_all(self) -> List[EnvJob]:
+        """Abort path (engine drain deadline / shutdown): cancel every
+        queued and executing job; returns them for abort accounting."""
+        with self._cond:
+            out = [j for j in self._queue]
+            out += list(self._executing.values())
+            for j in out:
+                j.cancelled = True
+            self._queue.clear()
+            # late worker results are dropped by the cancelled flag;
+            # already-resolved-but-undrained responses abort too
+            while self._done:
+                j = self._done.popleft()
+                j.cancelled = True
+                out.append(j)
+        return out
+
+    # -- worker side ------------------------------------------------------
+    def _pop_eligible(self) -> Optional[EnvJob]:
+        """Oldest queued job whose tenant is under the in-flight cap (and
+        not cancelled). Blocks on the stage condition until work or stop."""
+        with self._cond:
+            while True:
+                if self._stop.is_set():
+                    return None
+                cap = self.max_inflight_per_tenant
+                for i, job in enumerate(self._queue):
+                    if cap and self._inflight.get(job.task_id, 0) >= cap:
+                        continue
+                    del self._queue[i]
+                    job.state = "executing"
+                    job.started_at = time.monotonic()
+                    self._executing[id(job)] = job
+                    self._inflight[job.task_id] = (
+                        self._inflight.get(job.task_id, 0) + 1)
+                    self.calls += 1
+                    return job
+                if self._stop.is_set():
+                    return None
+                self._cond.wait(timeout=0.05)
+
+    def _finish(self, job: EnvJob, response: List[int]):
+        with self._cond:
+            self._executing.pop(id(job), None)
+            n = self._inflight.get(job.task_id, 0) - 1
+            if n > 0:
+                self._inflight[job.task_id] = n
+            else:
+                self._inflight.pop(job.task_id, None)
+            job.state = "done"
+            job.resolved_at = time.monotonic()
+            job.response = response
+            if not job.cancelled:
+                self._done.append(job)
+            # a freed tenant cap slot may unblock a queued sibling
+            self._cond.notify_all()
+
+    # -- introspection ----------------------------------------------------
+    def _live_executing(self) -> List[EnvJob]:
+        """Executing jobs whose row is still in flight. A cancelled job's
+        row already completed (tool_timeout/abort) — the worker is merely
+        riding out an uninterruptible call whose result will be discarded,
+        so it must not keep the engine non-idle or pin the tenant."""
+        return [j for j in self._executing.values() if not j.cancelled]
+
+    def depths(self) -> Tuple[int, int]:
+        """(queued, executing) — the env stage's two queue depths."""
+        with self._cond:
+            return len(self._queue), len(self._live_executing())
+
+    def count(self) -> int:
+        """Rows anywhere in the stage (queued + executing + resolved but
+        not yet drained) — feeds the engine's queued()/idle() accounting."""
+        with self._cond:
+            return (len(self._queue) + len(self._live_executing())
+                    + len(self._done))
+
+    def tenants(self) -> frozenset:
+        with self._cond:
+            return (frozenset(j.task_id for j in self._queue)
+                    | frozenset(j.task_id for j in self._live_executing())
+                    | frozenset(j.task_id for j in self._done))
+
+    def rows_for(self, task_id: str) -> List[object]:
+        with self._cond:
+            jobs = ([j for j in self._queue if j.task_id == task_id]
+                    + [j for j in self._live_executing()
+                       if j.task_id == task_id]
+                    + [j for j in self._done if j.task_id == task_id])
+        return [j.row for j in jobs]

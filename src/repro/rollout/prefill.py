@@ -32,6 +32,14 @@ logits with ``fold_in(row key, init_counter)`` — counter 0 for fresh rows,
 ``len(gen)`` for preemption-replayed rows — the identical rule the fused
 refill applies, so disaggregated output is token-for-token equal to the
 fused path (and to one-shot ``generate()``).
+
+Env-stage resume jobs (rollout/env_stage.py) ride the same path with ONE
+difference: their first token is FORCED (the tool response's ``RESP``
+opener) instead of sampled — ``forced``/``forced_mask`` select it, and its
+logprob is read off the same final-position logits, exactly what the
+freeze-in-slot baseline records when it feeds ``CALL`` through a decode
+step. Everything downstream (force-feed of the rest of the response,
+budget exemption) is the ordinary decode path.
 """
 from __future__ import annotations
 
@@ -104,7 +112,7 @@ class PrefillKernels:
         enc = 8 if cfg.family == "encdec" else 0
 
         def whole(params, adapters, row_ids, tokens, seq_lens, init_counters,
-                  keys, temps):
+                  keys, temps, forced, forced_mask):
             pcache = init_cache(cfg, tokens.shape[0], max_len, enc_len=enc)
             lora = batched_ctx(adapters, row_ids, cfg, use_kernel)
             h, pcache, _ = forward_seq(params, tokens, cfg, lora, pcache,
@@ -113,8 +121,9 @@ class PrefillKernels:
                 h, (seq_lens - 1)[:, None, None].astype(jnp.int32),
                 axis=1)[:, 0]
             logits = lm_logits(last, params, cfg)
-            first = _sample_rows(logits, keys, init_counters, temps)
-            first = first.astype(jnp.int32)
+            sampled = _sample_rows(logits, keys, init_counters, temps)
+            first = jnp.where(forced_mask > 0, forced,
+                              sampled).astype(jnp.int32)
             lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
                                      first[:, None], axis=-1)[:, 0]
             return first, lp, pcache
@@ -124,12 +133,14 @@ class PrefillKernels:
             return forward_prefill_chunk(params, tokens, cfg, lora, pcache,
                                          start=start, seq_lens=seq_lens)
 
-        def finish(params, h, last_idx, keys, init_counters, temps):
+        def finish(params, h, last_idx, keys, init_counters, temps, forced,
+                   forced_mask):
             last = jnp.take_along_axis(
                 h, last_idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
             logits = lm_logits(last, params, cfg)
-            first = _sample_rows(logits, keys, init_counters, temps)
-            first = first.astype(jnp.int32)
+            sampled = _sample_rows(logits, keys, init_counters, temps)
+            first = jnp.where(forced_mask > 0, forced,
+                              sampled).astype(jnp.int32)
             lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
                                      first[:, None], axis=-1)[:, 0]
             return first, lp
@@ -154,6 +165,8 @@ class ReadyRow:
     init_counter: int        # len(gen) at prefill time (0 for fresh rows)
     pcache: dict             # width-1 device cache to splice
     ready_at: float          # queue timestamp: splice latency = now - this
+    forced_first: bool = False   # env-stage resume: `first` is the forced
+                                 # RESP opener (loss_mask 0), not a sample
 
 
 class _Job:
@@ -208,7 +221,8 @@ class PrefillWorker(threading.Thread):
         eng = self.eng
         ready = ReadyRow(row=job.row, seq_len=job.L, first=first, lp=lp,
                          init_counter=len(job.row.gen), pcache=job.pcache,
-                         ready_at=time.monotonic())
+                         ready_at=time.monotonic(),
+                         forced_first=bool(job.row.forced_q))
         with eng._stage_lock:
             if job.row not in eng._stage_inflight:
                 return    # aborted by drain() while we were prefilling
@@ -233,6 +247,11 @@ class PrefillWorker(threading.Thread):
         key = jnp.asarray(row.key[None], jnp.uint32)
         temp = jnp.asarray([row.req.temperature], jnp.float32)
         counter = jnp.asarray([len(row.gen)], jnp.int32)
+        # env-stage resume: the first spliced token is the forced RESP
+        # opener (the response follows via the ordinary force-feed path)
+        forced = jnp.asarray([row.forced_q[0] if row.forced_q else 0],
+                             jnp.int32)
+        fmask = jnp.asarray([1 if row.forced_q else 0], jnp.int32)
         C = eng._prefill_chunk_eff
         t0 = time.monotonic()
 
@@ -248,7 +267,8 @@ class PrefillWorker(threading.Thread):
             toks[0, :job.L] = job.seq
             first, lp, job.pcache = ker.whole(
                 params, stacked, row_id, jnp.asarray(toks),
-                jnp.asarray([job.L], jnp.int32), counter, key, temp)
+                jnp.asarray([job.L], jnp.int32), counter, key, temp,
+                forced, fmask)
             job.chunks += 1
             first = int(np.asarray(first)[0])
             lp = float(np.asarray(lp)[0])
@@ -271,7 +291,7 @@ class PrefillWorker(threading.Thread):
             return booked(False)
         first, lp = ker.finish(params, h,
                                jnp.asarray([job.L - 1 - start], jnp.int32),
-                               key, counter, temp)
+                               key, counter, temp, forced, fmask)
         first = int(np.asarray(first)[0])
         lp = float(np.asarray(lp)[0])
         booked(True)

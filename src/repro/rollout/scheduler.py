@@ -17,9 +17,14 @@ and converge as rows complete.
      guaranteed progress within K refills no matter how many short rows
      keep arriving;
   2. priority tier: higher ``RolloutRequest.priority`` first;
-  3. shortest-predicted-remaining-budget first (predicted length minus
+  3. resume tier: env-stage resume jobs (rows re-queued with a pre-loaded
+     force-feed queue, see rollout/env_stage.py) pop before fresh rows of
+     the same priority — they carry live episode/session state and their
+     force-fed response tokens are budget-exempt, so finishing them first
+     drains in-flight episodes instead of opening new ones;
+  4. shortest-predicted-remaining-budget first (predicted length minus
      tokens already sampled — replayed rows get credit for their prefix);
-  4. deterministic tie-break on ``submit_index`` (unique per row).
+  5. deterministic tie-break on ``submit_index`` (unique per row).
 
 Policy ``"fifo"`` preserves PR-1 arrival order (the benchmark baseline).
 Token streams are unaffected by pop order: sampling is per-row
@@ -108,11 +113,12 @@ class SlotScheduler:
         starved = (refill_count - e.enq_refill) >= self.starvation_k
         if starved:
             # starvation tier wins outright; FIFO among the starved
-            return (0, e.seq, 0, 0.0, 0)
+            return (0, e.seq, 0, 0, 0.0, 0)
         req = e.row.req
         rem = self.predictor.remaining(req.task_id, req.max_new_tokens,
                                        e.row.sampled)
-        return (1, 0, -req.priority, rem, e.row.submit_index)
+        resume = 0 if getattr(e.row, "forced_q", None) else 1
+        return (1, 0, -req.priority, resume, rem, e.row.submit_index)
 
     def pop(self, refill_count: int = 0):
         """Remove and return the highest-ranked row, or None if empty."""

@@ -1,0 +1,824 @@
+"""Disaggregated environment-interaction stage (ISSUE 4): parity, the
+no-slot-held-while-waiting invariant, multi-turn episode protocol, and the
+tool-call Future lifecycle bugfixes.
+
+1. With ``env_stage=True`` a row that samples CALL is PARKED (slot vacated
+   and refilled) and later resumes through the prefill path — output is
+   token-for-token identical to the freeze-in-slot baseline and to
+   one-shot generate() across attention / SSM / hybrid, both fill paths,
+   including preempt-at-any-turn (hypothesis).
+2. No decode slot is ever occupied by a tool-waiting row:
+   ``tool_wait_slot_steps == 0`` (asserted per-step inside the engine);
+   the frozen baseline books the dead weight.
+3. Multi-turn episodes: per-episode stateful ToolSessions, turn budgets
+   (finish_reason "turn_limit"), budget-exempt forced tokens across turns.
+4. Futures of timed-out/evicted tool calls are cancelled (they no longer
+   burn the shared pool), and a late tool response is never force-fed into
+   a row that timed out or into the slot's next occupant.
+
+Agentic rows here emit CALL deterministically: the per-row sampler is
+biased at fixed token counters (module-scoped patch), which applies
+identically to every engine — so whatever episodes arise, all engines
+replay the same ones.
+"""
+import random
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_lm
+from repro.data import tokenizer as tok
+from repro.envs.base import Env, ToolSession
+from repro.envs.tasks import make_env
+from repro.lora.adapters import init_lora
+from repro.models import init_params
+import repro.rollout.engine as eng_mod
+import repro.rollout.prefill as pf_mod
+from repro.rollout.engine import (ContinuousRolloutEngine, RolloutEngine,
+                                  RolloutRequest)
+from repro.rollout.env_stage import EnvStage
+
+CALL_AT = (2, 9)          # sampled-token counters that emit CALL
+FAMILIES = {"attention": "granite-3-2b", "ssm": "mamba2-780m",
+            "hybrid": "zamba2-1.2b"}
+_CACHE = {}
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _biased_sampling():
+    """Deterministic CALL emission: every engine's sampler returns CALL at
+    the CALL_AT counters (EOS remapped so rows run their full budget).
+    Applied before any kernel in this module traces; undone afterwards."""
+    mp = pytest.MonkeyPatch()
+    orig = pf_mod._sample_rows
+
+    def biased(logits, keys, counters, temps):
+        s = orig(logits, keys, counters, temps)
+        s = jnp.where(s == tok.EOS, 10, s)
+        hit = jnp.zeros(counters.shape, bool)
+        for c in CALL_AT:
+            hit = hit | (counters == c)
+        return jnp.where(hit, tok.CALL, s)
+
+    mp.setattr(pf_mod, "_sample_rows", biased)
+    mp.setattr(eng_mod, "_sample_rows", biased)
+    yield
+    mp.undo()
+
+
+def _requests(n=6):
+    """Mixed multi-turn agentic (hopsearch) + plain rows, explicit seeds."""
+    agentic = make_env("hopsearch", kb_size=8, hops=2, seed=0)
+    agentic.env_latency_mean = 0.0      # parity tests: timing-free
+    plain = make_env("gsm8k")
+    rng = random.Random(7)
+    reqs = []
+    for i in range(n):
+        env = agentic if i % 2 == 0 else plain
+        prompt, truth = env.sample_prompt(rng)
+        reqs.append(RolloutRequest(f"t{i % 2}", i % 2, prompt, truth, env,
+                                   max_new_tokens=6, seed=i))
+    return reqs
+
+
+def _family(fam: str):
+    """(cfg, params, trees, requests, one-shot reference) per family."""
+    if fam not in _CACHE:
+        cfg = tiny_lm(FAMILIES[fam])
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        trees = [init_lora(jax.random.PRNGKey(1), cfg),
+                 init_lora(jax.random.PRNGKey(2), cfg)]
+        reqs = _requests()
+        ref_eng = RolloutEngine(cfg, params, max_len=96, seed=0)
+        ref, _ = ref_eng.generate(reqs, trees)   # freeze-in-slot oracle
+        _CACHE[fam] = (cfg, params, trees, reqs, ref)
+    return _CACHE[fam]
+
+
+_ENGINES = {}
+
+
+def _engine(fam: str, **kw):
+    """Reusable continuous engine per (family, mode) — requests carry
+    explicit seeds, so repeated drives produce identical tokens."""
+    key = (fam, tuple(sorted(kw.items())))
+    if key not in _ENGINES:
+        cfg, params, trees, _, _ = _family(fam)
+        eng = ContinuousRolloutEngine(cfg, params, max_slots=2,
+                                      max_adapters=2, max_len=96, seed=0,
+                                      **kw)
+        for i, tree in enumerate(trees):
+            eng.set_adapters(i, tree)
+        _ENGINES[key] = eng
+    return _ENGINES[key]
+
+
+def _drive(eng, reqs, preempt_step=0, victims=(), max_iters=5000):
+    pos_of = {eng.submit(r): i for i, r in enumerate(reqs)}
+    comps, preempted, iters = {}, 0, 0
+    deadline = time.monotonic() + 120
+    while not eng.idle() and iters < max_iters:
+        progressed = eng.step()
+        iters += 1
+        if iters == preempt_step:
+            for v in victims:
+                preempted += eng.preempt_tenant(v)
+        for c in eng.drain_completions():
+            comps[pos_of[c.submit_index]] = c
+        if not progressed:
+            if time.monotonic() > deadline:
+                break
+            time.sleep(0.0005)
+    assert len(comps) == len(reqs), (
+        f"engine failed to drain: {len(comps)}/{len(reqs)}")
+    return comps, preempted
+
+
+def _assert_matches_ref(comps, ref, ctx=""):
+    for i, r in enumerate(ref):
+        c = comps[i]
+        assert list(c.tokens) == r["tokens"], f"{ctx}: token mismatch @{i}"
+        assert list(c.gen_loss_mask) == r["gen_loss_mask"], ctx
+        np.testing.assert_allclose(c.gen_logprobs, r["gen_logprobs"],
+                                   atol=1e-5)
+
+
+# -- parity ---------------------------------------------------------------
+@pytest.mark.parametrize("fam", sorted(FAMILIES))
+def test_env_stage_matches_frozen_baseline_token_for_token(fam):
+    """Parking + prefill-path resume must reproduce the freeze-in-slot
+    output bit-for-bit: same forward math, same (key, counter) sampling,
+    same forced tool tokens (incl. the forced RESP opener installed at the
+    splice, whose logprob comes off the prefill logits)."""
+    _, _, _, reqs, ref = _family(fam)
+    eng = _engine(fam, env_stage=True, disagg_prefill=True)
+    comps, _ = _drive(eng, reqs)
+    _assert_matches_ref(comps, ref, f"{fam}/disagg")
+    assert eng.stats.parks > 0 and eng.stats.resumes > 0
+    assert eng.stats.tool_wait_slot_steps == 0
+    # multi-turn episodes actually ran: 2 tool turns per agentic row
+    # (force-fed RESP openers carry mask 0; a sampled RESP carries mask 1)
+    for i in range(0, len(reqs), 2):
+        c = comps[i]
+        gen = list(c.tokens)[c.prompt_len:]
+        mask = list(c.gen_loss_mask)
+        assert sum(1 for j, t in enumerate(gen)
+                   if t == tok.RESP and mask[j] == 0.0) == 2
+
+
+def test_env_stage_parity_fused_fill_path():
+    """The resume path also works under the fused refill baseline (the
+    forced first token rides the one-call batched refill)."""
+    _, _, _, reqs, ref = _family("attention")
+    eng = _engine("attention", env_stage=True, disagg_prefill=False)
+    comps, _ = _drive(eng, reqs)
+    _assert_matches_ref(comps, ref, "attention/fused")
+    assert eng.stats.parks > 0 and eng.stats.resumes > 0
+    assert eng.stats.tool_wait_slot_steps == 0
+
+
+def test_frozen_baseline_unchanged_and_books_dead_weight():
+    """The retained freeze-in-slot baseline still matches one-shot output;
+    with real env latency it books tool_wait_slot_steps > 0 — the slot
+    dead weight the env stage eliminates on the same workload."""
+    _, _, _, reqs, ref = _family("attention")
+    frozen = _engine("attention")
+    comps, _ = _drive(frozen, reqs)
+    _assert_matches_ref(comps, ref, "frozen")
+    # now with latency: frozen slots span decode steps; env-stage does not
+    agentic = make_env("hopsearch", kb_size=8, hops=2, seed=0)
+    agentic.env_latency_mean, agentic.env_latency_std = 0.05, 0.0
+    plain = make_env("gsm8k")
+    rng = random.Random(3)
+    reqs2 = []
+    for i in range(6):
+        env = agentic if i % 2 == 0 else plain
+        prompt, truth = env.sample_prompt(rng)
+        reqs2.append(RolloutRequest(f"t{i % 2}", i % 2, prompt, truth, env,
+                                    max_new_tokens=6, seed=100 + i))
+    f2 = _engine("attention", scheduler="fifo")
+    comps_f, _ = _drive(f2, reqs2)
+    e2 = _engine("attention", env_stage=True, disagg_prefill=True,
+                 scheduler="fifo")
+    comps_e, _ = _drive(e2, reqs2)
+    for i in range(len(reqs2)):
+        assert list(comps_f[i].tokens) == list(comps_e[i].tokens)
+    assert f2.stats.tool_wait_slot_steps > 0     # frozen slots spun
+    assert e2.stats.tool_wait_slot_steps == 0    # parked rows never did
+    assert e2.stats.env_wait_by_task.get("t0", 0.0) > 0.0
+    assert "t1" not in e2.stats.env_wait_by_task  # plain tenant never waits
+
+
+@pytest.mark.parametrize("fam", sorted(FAMILIES))
+def test_preempt_at_any_turn_replay_parity(fam):
+    """Hypothesis: preempting tenants at ANY engine iteration — before,
+    between, and after tool turns, including while rows are parked in the
+    env stage — yields bit-identical output (parked rows hold no slot, so
+    preemption never touches them; resumed rows replay prompt+prefix with
+    their original counters)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    _, _, _, reqs, ref = _family(fam)
+    eng = _engine(fam, env_stage=True, disagg_prefill=True)
+    observed = {"n": 0}
+
+    @given(preempt_step=st.integers(1, 25),
+           victims=st.sampled_from([("t0",), ("t1",), ("t0", "t1")]))
+    @settings(max_examples=5, deadline=None)
+    def check(preempt_step, victims):
+        comps, preempted = _drive(eng, reqs, preempt_step, victims)
+        observed["n"] += preempted
+        _assert_matches_ref(comps, ref, f"{fam} preempt@{preempt_step}")
+
+    check()
+    assert observed["n"] > 0               # preemption+replay exercised
+    assert eng.stats.replays > 0
+    assert eng.stats.tool_wait_slot_steps == 0
+
+
+# -- multi-turn episode protocol ------------------------------------------
+def test_turn_budget_enforced():
+    """A CALL sampled with the turn budget spent ends the episode
+    (finish_reason turn_limit) instead of dispatching another tool call —
+    request-level max_turns overrides the env default."""
+    cfg, params, trees, _, _ = _family("attention")
+    agentic = make_env("hopsearch", kb_size=8, hops=2, seed=0)
+    agentic.env_latency_mean = 0.0
+    rng = random.Random(1)
+    prompt, truth = agentic.sample_prompt(rng)
+    # CALL_AT = (2, 9): with max_turns=1 the second CALL hits the limit
+    reqs = [RolloutRequest("a", 0, prompt, truth, agentic,
+                           max_new_tokens=12, seed=0, max_turns=1)]
+    eng = _engine("attention", env_stage=True, disagg_prefill=True)
+    comps, _ = _drive(eng, reqs)
+    c = comps[0]
+    assert c.finish_reason == "turn_limit"
+    gen = list(c.tokens)[c.prompt_len:]
+    mask = list(c.gen_loss_mask)
+    assert sum(1 for j, t in enumerate(gen)          # exactly one turn ran
+               if t == tok.RESP and mask[j] == 0.0) == 1
+    # the terminating CALL is recorded (it was sampled) but not dispatched
+    assert list(c.tokens)[-1] == tok.CALL
+    # frozen baseline enforces the identical rule
+    one = RolloutEngine(cfg, params, max_len=96, seed=0)
+    ref, _ = one.generate(reqs, trees)
+    assert ref[0]["finish_reason"] == "turn_limit"
+    assert list(c.tokens) == ref[0]["tokens"]
+
+
+def test_forced_tokens_budget_exempt_across_turns():
+    """Multi-turn force-feeds are budget-exempt: a row doing 2 tool turns
+    still samples its full max_new_tokens budget, with every RESP…ENDRESP
+    block carrying loss_mask 0."""
+    _, _, _, reqs, _ = _family("attention")
+    eng = _engine("attention", env_stage=True, disagg_prefill=True)
+    comps, _ = _drive(eng, reqs)
+    for i in range(0, len(reqs), 2):              # agentic rows
+        c = comps[i]
+        assert c.finish_reason == "budget"
+        assert c.sampled_tokens == reqs[i].max_new_tokens
+        assert c.forced_tokens > 0
+        toks = list(c.tokens)[c.prompt_len:]
+        mask = list(c.gen_loss_mask)
+        # two force-fed RESP…ENDRESP blocks (mask 0), one per turn
+        forced_resp = sum(1 for j, t in enumerate(toks)
+                          if t == tok.RESP and mask[j] == 0.0)
+        forced_end = sum(1 for j, t in enumerate(toks)
+                         if t == tok.ENDRESP and mask[j] == 0.0)
+        assert forced_resp == forced_end == 2
+        assert sum(1 for m in mask if m == 1.0) == reqs[i].max_new_tokens
+
+
+def test_stateful_sessions_survive_preemption():
+    """The REPL accumulator session lives on the row, not the slot: a
+    preempted-and-replayed episode keeps its register (responses already in
+    the prefix are never re-executed), so multi-turn results match the
+    uninterrupted oracle."""
+    cfg, params, trees, _, _ = _family("attention")
+    env = make_env("calcrepl", n_terms=2)
+    env.env_latency_mean = 0.0
+    rng = random.Random(5)
+    reqs = []
+    for i in range(4):
+        prompt, truth = env.sample_prompt(rng)
+        # budget 8: both CALL_AT counters fire before the budget trips
+        reqs.append(RolloutRequest("c", 0, prompt, truth, env,
+                                   max_new_tokens=8, seed=50 + i))
+    one = RolloutEngine(cfg, params, max_len=96, seed=0)
+    ref, _ = one.generate(reqs, trees)
+    eng = _engine("attention", env_stage=True, disagg_prefill=True)
+    comps, preempted = _drive(eng, reqs, preempt_step=4, victims=("c",))
+    for i, r in enumerate(ref):
+        assert list(comps[i].tokens) == r["tokens"]
+    # both tool turns ran (two force-fed RESP openers; a RESP sampled by
+    # the toy model carries mask 1 and doesn't count)
+    for i in range(4):
+        c = comps[i]
+        gen = list(c.tokens)[c.prompt_len:]
+        mask = list(c.gen_loss_mask)
+        forced_resp = [j for j, t in enumerate(gen)
+                       if t == tok.RESP and mask[j] == 0.0]
+        assert len(forced_resp) == 2
+
+
+# -- env-stage scheduling machinery ---------------------------------------
+def test_env_worker_pool_per_tenant_inflight_cap():
+    """EnvWorker pool fairness: with max_inflight_per_tenant=1, one
+    tenant's queued calls execute serially while another tenant's call
+    proceeds in parallel (a slow-tool tenant cannot monopolize the pool)."""
+    peak = {"a": 0, "b": 0}
+    lock = threading.Lock()
+    cur = {"a": 0, "b": 0}
+
+    class SlowEnv(Env):
+        is_agentic = True
+
+        def sample_prompt(self, rng):
+            return [tok.BOS], "x"
+
+        def verify(self, truth, completion_ids):
+            return 0.0
+
+        def tool_call(self, query_ids, truth=None):
+            return [10]
+
+    class CountingSession(ToolSession):
+        def __init__(self, env, truth, tid):
+            super().__init__(env, truth)
+            self.tid = tid
+
+        def call(self, query_ids):
+            with lock:
+                cur[self.tid] += 1
+                peak[self.tid] = max(peak[self.tid], cur[self.tid])
+            time.sleep(0.05)
+            with lock:
+                cur[self.tid] -= 1
+            return [10]
+
+    class FakeRow:
+        def __init__(self, tid):
+            self.session = CountingSession(SlowEnv(), "x", tid)
+
+    stage = EnvStage(n_workers=3, max_inflight_per_tenant=1)
+    try:
+        jobs = [stage.submit(FakeRow("a"), [1], "a", 0.0) for _ in range(3)]
+        jobs.append(stage.submit(FakeRow("b"), [1], "b", 0.0))
+        deadline = time.monotonic() + 10
+        done = []
+        while len(done) < 4 and time.monotonic() < deadline:
+            done += stage.drain_resolved()
+            time.sleep(0.005)
+        assert len(done) == 4
+        assert peak["a"] == 1          # tenant a: serialized by the cap
+        assert peak["b"] == 1
+        assert stage.count() == 0
+    finally:
+        stage.halt()
+
+
+def test_halt_cancels_queued_backlog():
+    """halt() must cancel the queued backlog instead of letting workers
+    drain it (latency sleeps included) for discarded results — otherwise
+    runtime shutdown blocks for the queue's worth of env latency."""
+    class SlowSession:
+        def call(self, query_ids):
+            return [10]
+
+    class FakeRow:
+        session = SlowSession()
+
+    stage = EnvStage(n_workers=1)
+    jobs = [stage.submit(FakeRow(), [1], "a", 0.5) for _ in range(10)]
+    t0 = time.monotonic()
+    stage.halt()
+    assert time.monotonic() - t0 < 2.0, "halt drained the backlog"
+    # everything queued was cancelled, not executed
+    assert sum(1 for j in jobs if j.cancelled) >= 8
+    assert stage.depths() == (0, 0)
+
+
+def test_resume_jobs_pop_before_fresh_rows():
+    """Scheduler resume tier: a re-queued resume job (forced_q pre-loaded)
+    pops before a fresh row of the same priority."""
+    from repro.rollout.scheduler import SlotScheduler
+
+    class Req:
+        task_id, priority, max_new_tokens = "t", 0, 8
+
+    class Row:
+        def __init__(self, idx, forced):
+            self.req = Req()
+            self.sampled = 0
+            self.submit_index = idx
+            self.forced_q = [tok.RESP] if forced else []
+
+    s = SlotScheduler(policy="srpt")
+    fresh, resume = Row(0, False), Row(1, True)
+    s.push(fresh, 0)
+    s.push(resume, 0)
+    assert s.pop(0) is resume
+    assert s.pop(0) is fresh
+
+
+# -- tool-call Future lifecycle (satellite bugfixes) ----------------------
+def test_timed_out_tool_futures_are_cancelled():
+    """Regression (satellite): a timed-out tool call's Future must be
+    cancel()ed at eviction — abandoned env work left queued would keep
+    burning the shared pool and starve other tenants' tool calls."""
+    from concurrent.futures import ThreadPoolExecutor
+    cfg, params, trees, _, _ = _family("attention")
+    calls = {"n": 0}
+
+    class CountingEnv(Env):
+        is_agentic = True
+        env_latency_mean = 0.5          # the latency sleep blocks the pool
+        env_latency_std = 0.0
+
+        def sample_prompt(self, rng):
+            return [tok.BOS] + tok.encode("q?"), "42"
+
+        def verify(self, truth, completion_ids):
+            return 0.0
+
+        def tool_call(self, query_ids, truth=None):
+            calls["n"] += 1
+            return tok.encode("42")
+
+    env = CountingEnv()
+    pool = ThreadPoolExecutor(max_workers=1)    # one shared env worker
+    eng = ContinuousRolloutEngine(cfg, params, max_slots=3, max_adapters=1,
+                                  max_len=96, seed=0, tool_executor=pool,
+                                  tool_timeout_s=0.08)
+    eng.set_adapters(0, trees[0])
+    reqs = [RolloutRequest("x", 0, [tok.BOS] + tok.encode("q?"), "42", env,
+                           max_new_tokens=6, seed=i) for i in range(3)]
+    pos = {eng.submit(r): i for i, r in enumerate(reqs)}
+    comps = {}
+    deadline = time.monotonic() + 30
+    while len(comps) < 3 and time.monotonic() < deadline:
+        eng.step()
+        for c in eng.drain_completions():
+            comps[pos[c.submit_index]] = c
+        time.sleep(0.001)
+    assert len(comps) == 3
+    assert all(c.finish_reason == "tool_timeout" for c in comps.values())
+    # the two queued futures were cancelled before their run_tool started:
+    # only the first (already running) call can ever execute
+    pool.shutdown(wait=True)
+    assert calls["n"] <= 1, "cancelled tool futures still ran"
+    eng.shutdown()
+
+
+def test_late_response_never_reaches_next_occupant():
+    """Regression (satellite): after a tool-waiting row times out and its
+    slot is refilled, the late-arriving response must never be force-fed
+    into the next occupant (frozen baseline `_pending` lifecycle)."""
+    cfg, params, trees, _, _ = _family("attention")
+
+    class SlowEnv(Env):
+        is_agentic = True
+        env_latency_mean = 0.3
+        env_latency_std = 0.0
+
+        def sample_prompt(self, rng):
+            return [tok.BOS] + tok.encode("s?"), "7"
+
+        def verify(self, truth, completion_ids):
+            return 0.0
+
+        def tool_call(self, query_ids, truth=None):
+            return tok.encode("7777")
+
+    env = SlowEnv()
+    plain = make_env("gsm8k")
+    rng = random.Random(2)
+    p_prompt, p_truth = plain.sample_prompt(rng)
+    slow_req = RolloutRequest("slow", 0, [tok.BOS] + tok.encode("s?"), "7",
+                              env, max_new_tokens=6, seed=0)
+    plain_req = RolloutRequest("fast", 0, p_prompt, p_truth, plain,
+                               max_new_tokens=24, seed=1)
+    # reference: the plain row alone (its stream must be unaffected)
+    one = RolloutEngine(cfg, params, max_len=96, seed=0)
+    ref, _ = one.generate([plain_req], trees)
+    eng = ContinuousRolloutEngine(cfg, params, max_slots=1, max_adapters=1,
+                                  max_len=96, seed=0, tool_timeout_s=0.06)
+    eng.set_adapters(0, trees[0])
+    pos = {eng.submit(slow_req): 0, eng.submit(plain_req): 1}
+    comps = {}
+    deadline = time.monotonic() + 30
+    while len(comps) < 2 and time.monotonic() < deadline:
+        eng.step()
+        for c in eng.drain_completions():
+            comps[pos[c.submit_index]] = c
+        time.sleep(0.001)
+    assert comps[0].finish_reason == "tool_timeout"
+    assert not eng._pending                     # no orphaned future refs
+    # wait past the tool latency, keep stepping: nothing may arrive
+    time.sleep(0.35)
+    eng.step()
+    fast = comps[1]
+    assert all(m == 1.0 for m in fast.gen_loss_mask)   # nothing force-fed
+    assert list(fast.tokens) == ref[0]["tokens"], \
+        "late tool response leaked into the slot's next occupant"
+    eng.shutdown()
+
+
+def test_env_stage_timeout_discards_late_response():
+    """Env-stage flavour of the late-response hazard: a parked row that
+    times out completes with tool_timeout; the worker's late result is
+    discarded by the cancelled flag (never becomes a resume job)."""
+    cfg, params, trees, _, _ = _family("attention")
+
+    class SlowEnv(Env):
+        is_agentic = True
+        env_latency_mean = 0.4
+        env_latency_std = 0.0
+
+        def sample_prompt(self, rng):
+            return [tok.BOS] + tok.encode("s?"), "7"
+
+        def verify(self, truth, completion_ids):
+            return 0.0
+
+        def tool_call(self, query_ids, truth=None):
+            return tok.encode("7777")
+
+    env = SlowEnv()
+    eng = ContinuousRolloutEngine(cfg, params, max_slots=2, max_adapters=1,
+                                  max_len=96, seed=0, tool_timeout_s=0.05,
+                                  env_stage=True, env_workers=1)
+    eng.set_adapters(0, trees[0])
+    req = RolloutRequest("slow", 0, [tok.BOS] + tok.encode("s?"), "7", env,
+                         max_new_tokens=6, seed=0)
+    pos = {eng.submit(req): 0}
+    comps = {}
+    deadline = time.monotonic() + 30
+    while len(comps) < 1 and time.monotonic() < deadline:
+        eng.step()
+        for c in eng.drain_completions():
+            comps[pos[c.submit_index]] = c
+        time.sleep(0.001)
+    assert comps[0].finish_reason == "tool_timeout"
+    assert comps[0].slot == -1          # it held NO slot while waiting
+    time.sleep(0.45)                    # let the worker's late call land
+    eng.step()
+    assert eng.stats.resumes == 0       # discarded, not resumed
+    assert eng.idle()
+    eng.shutdown()
+
+
+def test_generate_cancels_pending_futures_at_deadline():
+    """The round-fused engine cancels pending tool futures when its wall
+    deadline aborts the round (same starvation bugfix, legacy path)."""
+    cfg, params, trees, _, _ = _family("attention")
+    calls = {"n": 0}
+
+    class NeverEnv(Env):
+        is_agentic = True
+        env_latency_mean = 0.0
+
+        def sample_prompt(self, rng):
+            return [tok.BOS] + tok.encode("q?"), "1"
+
+        def verify(self, truth, completion_ids):
+            return 0.0
+
+        def tool_call(self, query_ids, truth=None):
+            calls["n"] += 1
+            return [10]
+
+    env = NeverEnv()
+    from concurrent.futures import ThreadPoolExecutor
+    pool = ThreadPoolExecutor(max_workers=1)
+    eng = RolloutEngine(cfg, params, max_len=96, seed=0)
+    # warm the kernels first so the deadline below measures scheduling,
+    # not compile time
+    plain = make_env("gsm8k")
+    rng = random.Random(0)
+    warm = []
+    for i in range(2):
+        p, t = plain.sample_prompt(rng)
+        warm.append(RolloutRequest("w", 0, p, t, plain, max_new_tokens=3,
+                                   seed=900 + i))
+    eng.generate(warm, trees)
+    # block the single pool worker: BOTH rows' tool calls stay queued and
+    # must be cancelled when the deadline aborts the round
+    blocker = pool.submit(time.sleep, 2.0)
+    reqs = [RolloutRequest("n", 0, [tok.BOS] + tok.encode("q?"), "1", env,
+                           max_new_tokens=4, seed=i) for i in range(2)]
+    res, _ = eng.generate(reqs, trees, tool_executor=pool, deadline_s=1.0)
+    assert all(r["finish_reason"] == "tool_timeout" for r in res)
+    pool.shutdown(wait=True)
+    blocker.result()
+    assert calls["n"] == 0, "cancelled tool futures still ran"
+
+
+def test_timeout_then_drain_yields_exactly_one_completion():
+    """A parked row whose executing tool call times out completes ONCE with
+    tool_timeout; the cancelled job must neither keep the engine non-idle
+    for the tool's remaining latency nor produce a second (aborted)
+    completion when drain() sweeps the stage."""
+    cfg, params, trees, _, _ = _family("attention")
+
+    class StuckEnv(Env):
+        is_agentic = True
+        env_latency_mean = 1.5         # far beyond the timeout
+        env_latency_std = 0.0
+
+        def sample_prompt(self, rng):
+            return [tok.BOS] + tok.encode("s?"), "7"
+
+        def verify(self, truth, completion_ids):
+            return 0.0
+
+        def tool_call(self, query_ids, truth=None):
+            return tok.encode("7")
+
+    eng = ContinuousRolloutEngine(cfg, params, max_slots=2, max_adapters=1,
+                                  max_len=96, seed=0, tool_timeout_s=0.05,
+                                  env_stage=True, env_workers=1)
+    eng.set_adapters(0, trees[0])
+    # warm the jit kernels with a plain row so the wall bound below
+    # measures stage scheduling, not compile time
+    plain = make_env("gsm8k")
+    p, t = plain.sample_prompt(random.Random(0))
+    eng.submit(RolloutRequest("w", 0, p, t, plain, max_new_tokens=3,
+                              seed=77))
+    assert len(eng.drain(60.0)) == 1
+    eng.stats.completions = 0
+    eng.submit(RolloutRequest("st", 0, [tok.BOS] + tok.encode("s?"), "7",
+                              StuckEnv(), max_new_tokens=6, seed=0))
+    t0 = time.monotonic()
+    comps = eng.drain(deadline_s=30.0)
+    wall = time.monotonic() - t0
+    assert len(comps) == 1                       # exactly one completion
+    assert comps[0].finish_reason == "tool_timeout"
+    assert eng.stats.completions == 1
+    # idle the moment the row timed out — NOT after the 1.5s tool latency
+    assert wall < 1.0, f"drain spun on a cancelled executing job ({wall:.2f}s)"
+    assert eng.idle()
+    eng.shutdown()
+
+
+def test_tool_error_does_not_strand_sibling_responses():
+    """A ToolSession that raises surfaces its error on the engine thread
+    (like fut.result() in the baseline) — but only AFTER the rest of the
+    resolved batch is processed: the errored row completes with
+    finish_reason tool_error and sibling responses still resume."""
+    cfg, params, trees, _, _ = _family("attention")
+
+    class FlakyEnv(Env):
+        is_agentic = True
+        env_latency_mean = 0.0
+
+        def sample_prompt(self, rng):
+            return [tok.BOS] + tok.encode("f?"), "1"
+
+        def verify(self, truth, completion_ids):
+            return 0.0
+
+        def tool_call(self, query_ids, truth=None):
+            raise RuntimeError("tool exploded")
+
+    good = make_env("hopsearch", kb_size=8, hops=1, seed=0)
+    good.env_latency_mean = 0.0
+    rng = random.Random(4)
+    g_prompt, g_truth = good.sample_prompt(rng)
+    reqs = [RolloutRequest("bad", 0, [tok.BOS] + tok.encode("f?"), "1",
+                           FlakyEnv(), max_new_tokens=6, seed=0),
+            RolloutRequest("ok", 0, g_prompt, g_truth, good,
+                           max_new_tokens=6, seed=1)]
+    eng = ContinuousRolloutEngine(cfg, params, max_slots=2, max_adapters=1,
+                                  max_len=96, seed=0, env_stage=True,
+                                  env_workers=2)
+    eng.set_adapters(0, trees[0])
+    pos = {eng.submit(r): i for i, r in enumerate(reqs)}
+    comps, raised = {}, 0
+    deadline = time.monotonic() + 60
+    while len(comps) < 2 and time.monotonic() < deadline:
+        try:
+            eng.step()
+        except RuntimeError as e:
+            assert "tool exploded" in str(e)
+            raised += 1
+        for c in eng.drain_completions():
+            comps[pos[c.submit_index]] = c
+        time.sleep(0.001)
+    assert raised >= 1                      # the error did surface
+    assert comps[0].finish_reason == "tool_error"
+    # sibling episode unharmed: resumed, force-fed, finished naturally
+    assert comps[1].finish_reason in ("budget", "turn_limit", "eos")
+    gen = list(comps[1].tokens)[comps[1].prompt_len:]
+    mask = list(comps[1].gen_loss_mask)
+    assert any(t == tok.RESP and mask[j] == 0.0 for j, t in enumerate(gen))
+    assert eng.idle()                       # nothing stranded in the stage
+    eng.shutdown()
+
+
+# -- accounting -----------------------------------------------------------
+def test_engine_pipeline_accounting_with_env_stage():
+    """queued()/idle()/active_tenants()/queued_progress() see parked rows:
+    the LRU adapter residency must keep a tenant pinned while its rows sit
+    in the env stage."""
+    cfg, params, trees, _, _ = _family("attention")
+
+    class SlowEnv(Env):
+        is_agentic = True
+        env_latency_mean = 0.2
+        env_latency_std = 0.0
+
+        def sample_prompt(self, rng):
+            return [tok.BOS] + tok.encode("s?"), "7"
+
+        def verify(self, truth, completion_ids):
+            return 0.0
+
+        def tool_call(self, query_ids, truth=None):
+            return tok.encode("7")
+
+    env = SlowEnv()
+    eng = ContinuousRolloutEngine(cfg, params, max_slots=1, max_adapters=1,
+                                  max_len=96, seed=0, env_stage=True,
+                                  env_workers=1)
+    eng.set_adapters(0, trees[0])
+    req = RolloutRequest("sl", 0, [tok.BOS] + tok.encode("s?"), "7", env,
+                         max_new_tokens=6, seed=0)
+    idx = eng.submit(req)
+    # step until the row parks (CALL at counter 2)
+    deadline = time.monotonic() + 30
+    while eng.stats.parks == 0 and time.monotonic() < deadline:
+        eng.step()
+    assert eng.stats.parks == 1
+    assert not eng.idle()
+    assert eng.queued() == 1                    # the parked row
+    assert "sl" in eng.active_tenants()
+    rows, sampled = eng.queued_progress("sl")
+    assert rows == 1 and sampled > 0
+    q, ex = eng.env_depths()
+    assert q + ex == 1
+    comps = eng.drain(30.0)
+    assert len(comps) == 1 and comps[0].submit_index == idx
+    assert eng.active_tenants() == frozenset()
+    assert eng.env_depths() == (0, 0)
+    eng.shutdown()
+
+
+def test_metrics_env_intervals_and_summary():
+    """Per-task env intervals land in the recorder and summarize() surfaces
+    env busy/wait alongside prefill/decode/splice (satellite: the global
+    RolloutStats aggregate hid per-tenant tool latency)."""
+    from repro.core.manager import MultiTaskManager
+    from repro.core.metrics import MetricsRecorder, summarize
+    rec = MetricsRecorder({"rollout": 1})
+    rec.record("rollout", "decode", "a", 0.0, 1.0)
+    rec.record("rollout", "env", "a", 0.0, 0.4)
+    rec.record("rollout", "env", "a", 0.2, 0.6)     # overlaps the first
+    rec.record("rollout", "env", "b", 1.0, 1.5)
+    assert rec.env_wait_seconds() == pytest.approx(1.3)
+    assert rec.env_wait_by_task() == pytest.approx({"a": 0.8, "b": 0.5})
+    assert rec.env_busy_seconds() == pytest.approx(1.1)  # merged union
+    # env time is NOT device-busy time
+    assert rec.busy_device_seconds(pool="rollout") == pytest.approx(1.0)
+    rec.record_env_sample(0.0, 2, 1)
+    rec.record_env_sample(1.0, 0, 0)
+    out = summarize(MultiTaskManager(), rec)
+    assert out["env_wait_s"] == pytest.approx(1.3)
+    assert out["env_busy_s"] == pytest.approx(1.1)
+    assert out["env_q_mean"] == pytest.approx(2.0)
+    assert out["env_exec_max"] == 1.0
+    assert out["decode_busy_s"] == pytest.approx(1.0)
+
+
+@pytest.mark.slow
+def test_runtime_env_stage_end_to_end():
+    """MARLaaSRuntime with all three stages disaggregated: agentic +
+    plain tenants train to completion; env intervals and env queue depths
+    land in the recorder; no slot ever froze on a tool."""
+    from repro.core.manager import TaskSpec
+    from repro.core.metrics import summarize
+    from repro.core.runtime import MARLaaSRuntime, RuntimeConfig
+    cfg = tiny_lm("granite-3-2b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rt = MARLaaSRuntime(cfg, params,
+                        RuntimeConfig(policy="marlaas", max_len=64, seed=3,
+                                      max_slots=4, disagg_prefill=True,
+                                      prefill_workers=1, env_stage=True,
+                                      env_workers=2, max_turns=2))
+    rt.submit_task(TaskSpec("hop", "hopsearch", group_size=2, num_groups=1,
+                            max_new_tokens=6, target_steps=2))
+    rt.submit_task(TaskSpec("gsm", "gsm8k", group_size=2, num_groups=1,
+                            max_new_tokens=4, target_steps=2))
+    rt.run(timeout_s=300.0)
+    assert all(st.done for st in rt.mgr.tasks.values())
+    assert rt.cengine.stats.parks > 0
+    assert rt.cengine.stats.tool_wait_slot_steps == 0
+    out = summarize(rt.mgr, rt.rec)
+    assert out["env_wait_s"] > 0.0
+    assert rt.rec.env_wait_by_task().get("hop", 0.0) > 0.0
+    assert "gsm" not in rt.rec.env_wait_by_task()
+    assert rt.rec.env_samples                   # depth timeline sampled
