@@ -216,6 +216,11 @@ def main(argv):
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2)
         print(f"wrote {json_path}")
+    from benchmarks.common import bench_record, write_bench_json
+    write_bench_json("BENCH_disagg_prefill.json", bench_record(
+        "disagg_prefill", GATE, out["disagg"]["p95_s"],
+        out["fused"]["p95_s"], higher_is_better=False,
+        extra={"pass": out["pass"]}))
     return 0 if out["pass"] else 1
 
 

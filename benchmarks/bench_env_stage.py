@@ -218,6 +218,10 @@ def main(argv):
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2)
         print(f"wrote {json_path}")
+    from benchmarks.common import bench_record, write_bench_json
+    write_bench_json("BENCH_env_stage.json", bench_record(
+        "env_stage", GATE, out["envstage"]["tokens_per_sec"],
+        out["frozen"]["tokens_per_sec"], extra={"pass": out["pass"]}))
     return 0 if out["pass"] else 1
 
 

@@ -256,6 +256,11 @@ def main(argv):
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2)
         print(f"wrote {json_path}")
+    from benchmarks.common import bench_record, write_bench_json
+    write_bench_json("BENCH_preemption.json", bench_record(
+        "preemption", GATE, out["preemptive"]["p95_steps"],
+        out["fifo"]["p95_steps"], higher_is_better=False,
+        extra={"pass": out["pass"]}))
     return 0 if out["pass"] else 1
 
 

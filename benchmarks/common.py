@@ -75,3 +75,32 @@ class Timer:
 def emit(name: str, us_per_call: float, derived: str):
     """The harness-wide CSV line: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def bench_record(name: str, gate: float, measured: float, baseline: float,
+                 *, higher_is_better: bool = True, extra: dict = None
+                 ) -> dict:
+    """Uniform cross-PR benchmark schema (CI artifact contract): every
+    engine benchmark emits ``{name, gate, measured, baseline, ratio,
+    pass}`` plus free-form `extra`, so the perf trajectory is
+    machine-readable across PRs regardless of what each bench measures.
+    `measured`/`baseline` are in the bench's native unit; `ratio` is
+    oriented so that >= `gate` passes (inverted when lower is better)."""
+    if higher_is_better:
+        ratio = measured / baseline if baseline else 0.0
+    else:
+        ratio = baseline / measured if measured else 0.0
+    rec = {"name": name, "gate": float(gate), "measured": float(measured),
+           "baseline": float(baseline), "ratio": float(ratio),
+           "pass": bool(ratio >= gate)}
+    if extra:
+        rec.update(extra)
+    return rec
+
+
+def write_bench_json(path: str, record: dict):
+    """Write one bench record (the ``BENCH_<name>.json`` artifact)."""
+    import json
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {path}")

@@ -75,6 +75,21 @@ def main():
                          "stage (0 = uncapped)")
     ap.add_argument("--max-turns", type=int, default=0,
                     help="per-episode tool-turn budget (0 = env default)")
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="paged KV-cache block pool: shared fixed-size "
+                         "pages + block tables instead of a dense "
+                         "[slots, max_len] cache; park/preempt resume "
+                         "restores saved pages instead of replaying")
+    ap.add_argument("--kv-page-size", type=int, default=16,
+                    help="tokens per KV page (max_len must divide)")
+    ap.add_argument("--kv-pool-pages", type=int, default=0,
+                    help="page-pool size (0 = dense-equivalent auto)")
+    ap.add_argument("--no-resume-restore", action="store_true",
+                    help="paged mode: disable snapshot/restore resume "
+                         "(always token-replay — the parity baseline)")
+    ap.add_argument("--snapshot-budget-bytes", type=int, default=0,
+                    help="host arena for parked KV snapshots (0 = "
+                         "unlimited; overflow falls back to replay)")
     ap.add_argument("--mix", default="classic", choices=sorted(MIXES),
                     help="tenant env rotation; 'agentic' is the multi-turn "
                          "tool-heavy mix the env stage targets")
@@ -96,7 +111,12 @@ def main():
         env_stage=args.env_stage,
         env_workers=args.env_workers,
         env_inflight_per_tenant=args.env_inflight_per_tenant,
-        max_turns=args.max_turns))
+        max_turns=args.max_turns,
+        paged_kv=args.paged_kv,
+        kv_page_size=args.kv_page_size,
+        kv_pool_pages=args.kv_pool_pages,
+        resume_restore=not args.no_resume_restore,
+        snapshot_budget_bytes=args.snapshot_budget_bytes))
     envs = MIXES[args.mix]
     for i in range(args.tasks):
         env = envs[i % len(envs)]
@@ -113,6 +133,14 @@ def main():
     print("\nsystem metrics:")
     print(json.dumps({k: round(v, 3) for k, v in
                       summarize(rt.mgr, rt.rec).items()}, indent=2))
+    if args.paged_kv:
+        st = rt.cengine.stats
+        print(f"\npaged KV: restores={st.restores} replays={st.replays} "
+              f"replay_tokens={st.replay_tokens} "
+              f"replay_tokens_saved={st.replay_tokens_saved} "
+              f"snapshot_drops={st.snapshot_drops} "
+              f"pool_exhausted={st.pool_exhausted} "
+              f"pool={rt.cengine.page_stats()}")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,10 @@ class AdmissionConfig:
     memory_budget_bytes: float = 8e9     # rollout-pool HBM left for KV
     kv_dtype_bytes: int = 2
     strict: bool = True
+    paged: bool = False                  # paged KV engine (ISSUE 5): charge
+                                         # page-granular estimates instead of
+                                         # worst-case max_len reservations
+    page_size: int = 16                  # engine kv_page_size (paged only)
 
 
 def task_state_bytes(cfg: ModelConfig, spec: TaskSpec,
@@ -59,6 +63,32 @@ def task_state_bytes_remaining(cfg: ModelConfig, spec: TaskSpec,
     return int(rows * (rem_len * per_tok + fixed))
 
 
+def task_state_bytes_paged(cfg: ModelConfig, spec: TaskSpec,
+                           prompt_len: int = 64, dtype_bytes: int = 2,
+                           page_size: int = 16,
+                           expected_new_tokens: Optional[float] = None
+                           ) -> int:
+    """Page-granular estimate for the PAGED KV engine (ISSUE 5): rows ×
+    (pages(prompt + expected generation) × page tokens + fixed state).
+
+    The dense estimator had no choice but to charge ``max_len`` per row —
+    the engine physically reserved it. The page pool only ever holds
+    ``ceil(len/page)`` pages per row, so the controller can charge what
+    rows are EXPECTED to use: ``expected_new_tokens`` defaults to the full
+    ``spec.max_new_tokens`` (cold tenant, pessimistic), and callers with a
+    length predictor (the engine's per-tenant EMA) pass the expected
+    completion length — mixed-length tenant sets then pack substantially
+    more resident rows into the same HBM budget (the bench gate)."""
+    rows = spec.rows_per_batch
+    gen = (spec.max_new_tokens if expected_new_tokens is None
+           else min(float(expected_new_tokens), float(spec.max_new_tokens)))
+    total = int(prompt_len + gen + 0.999)
+    pages = -(-total // page_size)
+    per_tok = cfg.state_bytes_per_token(dtype_bytes)
+    fixed = cfg.state_bytes_fixed(dtype_bytes)
+    return int(rows * (pages * page_size * per_tok + fixed))
+
+
 class AdmissionController:
     """Byte-budget admission with preemption accounting.
 
@@ -88,9 +118,18 @@ class AdmissionController:
     def used_bytes(self) -> int:
         return sum(self._admitted.values())
 
-    def try_admit(self, spec: TaskSpec, prompt_len: int = 64) -> bool:
-        need = task_state_bytes(self.cfg, spec, prompt_len,
-                                self.acfg.kv_dtype_bytes)
+    def try_admit(self, spec: TaskSpec, prompt_len: int = 64,
+                  expected_new_tokens: Optional[float] = None) -> bool:
+        if self.acfg.paged:
+            # page-granular charge (actual pool consumption), optionally
+            # tightened by the caller's expected completion length
+            need = task_state_bytes_paged(self.cfg, spec, prompt_len,
+                                          self.acfg.kv_dtype_bytes,
+                                          self.acfg.page_size,
+                                          expected_new_tokens)
+        else:
+            need = task_state_bytes(self.cfg, spec, prompt_len,
+                                    self.acfg.kv_dtype_bytes)
         return self.try_admit_bytes(spec.task_id, need)
 
     def try_admit_bytes(self, task_id: str, need: int) -> bool:
@@ -138,6 +177,18 @@ class AdmissionController:
                                          self.acfg.kv_dtype_bytes,
                                          sampled_mean)
         self._preempted[task_id] = min(old, new)
+        return self._preempted[task_id]
+
+    def reestimate_preempted_bytes(self, task_id: str,
+                                   need: int) -> Optional[int]:
+        """Tighten a preempted task's parked reservation to an ACTUAL byte
+        count (paged engine: snapshot page counts + page-rounded replay
+        prefixes reported by ``engine.queued_state_bytes``) instead of a
+        model-derived estimate. Never raises the charge."""
+        old = self._preempted.get(task_id)
+        if old is None:
+            return None
+        self._preempted[task_id] = min(old, int(need))
         return self._preempted[task_id]
 
     def try_readmit(self, task_id: str) -> bool:

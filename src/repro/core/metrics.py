@@ -76,6 +76,8 @@ class MetricsRecorder:
         self.slot_samples: List[Tuple[float, int, int]] = []  # (t, occ, cap)
         self.queue_samples: List[Tuple[float, int, int]] = []  # (t, pq, rq)
         self.env_samples: List[Tuple[float, int, int]] = []  # (t, wait, exec)
+        # (t, used pages, total pages, fragmentation) of the paged KV pool
+        self.page_samples: List[Tuple[float, int, int, float]] = []
         self.counters: Dict[str, int] = {}    # preemption/eviction/replay...
         self.t0: Optional[float] = None
         self.t1: Optional[float] = None
@@ -115,6 +117,34 @@ class MetricsRecorder:
         """Point sample of the env-interaction stage's queue depths
         (requests waiting for a worker, tool calls executing)."""
         self.env_samples.append((t, waiting, executing))
+
+    def record_page_sample(self, t: float, used: int, total: int,
+                           frag: float):
+        """Point sample of the paged KV block pool: pages in use, pool
+        size, and internal fragmentation (allocated page slack beyond the
+        live cache entries); step-function timeline like the others."""
+        if total <= 0:
+            return
+        self.page_samples.append((t, used, total, frag))
+
+    def page_pool_stats(self) -> Dict[str, float]:
+        """Time-weighted occupancy (used/total) and fragmentation of the
+        paged KV pool over the run (empty dict in dense-cache mode)."""
+        ps = self.page_samples
+        if len(ps) < 2:
+            return {}
+        occ_w = frag_w = total = 0.0
+        for (t0, u, cap, fr), (t1, _, _, _) in zip(ps, ps[1:]):
+            dt = max(0.0, t1 - t0)
+            occ_w += dt * u / cap
+            frag_w += dt * fr
+            total += dt
+        if total <= 0:
+            return {}
+        return {"kv_page_occupancy_mean": occ_w / total,
+                "kv_page_occupancy_max": max(u / cap
+                                             for _, u, cap, _ in ps),
+                "kv_page_frag_mean": frag_w / total}
 
     @staticmethod
     def _depth_stats(samples, names) -> Dict[str, float]:
@@ -273,6 +303,10 @@ def summarize(manager, rec: MetricsRecorder) -> Dict[str, float]:
         out["env_wait_s"] = env_wait
         out["env_busy_s"] = rec.env_busy_seconds()
     out.update(rec.queue_depth_stats())
+    # paged KV pool occupancy/fragmentation gauges (ISSUE 5): absent under
+    # the dense cache; restore-vs-replay counts ride the counters below
+    # (n_restores / n_replays / n_replay_tokens_saved / n_snapshot_drops)
+    out.update(rec.page_pool_stats())
     # scheduler event counters (zero-valued keys omitted: absent == 0)
     for name, n in sorted(rec.counters.items()):
         out[f"n_{name}"] = float(n)

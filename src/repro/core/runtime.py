@@ -2,20 +2,35 @@
 executing actual JAX rollout + GRPO training on this host.
 
 Stage layout (`rollout_mode="continuous"`, `disagg_prefill=True`,
-`env_stage=True` — all three paper stages disaggregated):
+`env_stage=True` — all three paper stages disaggregated; `paged_kv=True`
+replaces the dense per-slot cache with the shared page pool):
 
     submit ──> SlotScheduler queue ──> PrefillWorker thread(s)
                 (SRPT/priority/         chunked prefill on own caches
                  starvation order)             │ ReadyRow (KV/SSM state +
                       ▲                        ▼  first token + logprob)
       resume job      │        RolloutWorker thread <── ready queue
-      (prefix +       │          decode stream: scatter-only splice + one
-       forced RESP)   │          fused decode step over the slot pool —
-                      │          NEVER runs a prefill graph
+      (restore snap   │          decode stream: scatter-only splice + one
+       OR replay +    │          fused decode step over the slot pool —
+       forced RESP)   │          NEVER runs a prefill graph
     EnvStage ─────────┘               │ park on tok.CALL (slot vacated,
-      EnvWorker pool: latency +       ▼  instantly refilled)
-      stateful ToolSession.call  <────┘
+      EnvWorker pool: latency +       ▼  instantly refilled; paged_kv:
+      stateful ToolSession.call  <────┘  KV pages+SSM state snapshot to
+      (cancellable: a timed-out          host, pages freed for the next
+       call frees its worker NOW)        occupant)
                Trainer thread — pops FIFO, runs PolicyUpdate, commits v+1
+
+Paged KV block pool (`paged_kv=True`, ISSUE 5): attention K/V lives in a
+shared pool of `kv_pool_pages` pages of `kv_page_size` tokens
+(rollout/kvcache.py + kernels/paged_decode.py) instead of a dense
+[slots, max_len] reservation — a 10-token row holds one page, not
+max_len. Park/preempt snapshots the row's live pages + SSM state to host
+(`resume_restore`), and resume SPLICES them back instead of replaying
+prompt+prefix through prefill — `RolloutStats.replay_tokens_saved` counts
+the recomputation killed; a snapshot dropped under `snapshot_budget_bytes`
+pressure falls back to the retained token-replay path (identical output).
+Admission switches to page-granular byte charges (`AdmissionConfig.paged`)
+so mixed-length tenant sets pack more resident rows per HBM byte.
 
   RolloutWorker thread — streaming (default): feeds per-task requests into
     the engine's cross-task queue the moment each task's `next_policy`
@@ -108,6 +123,26 @@ class RuntimeConfig:
                                       # the worker pool
     max_turns: int = 0                # per-episode tool-turn budget applied
                                       # to every request (0 = env default)
+    paged_kv: bool = False            # paged KV-cache block pool (ISSUE 5):
+                                      # attention K/V in shared fixed-size
+                                      # pages + per-slot block tables instead
+                                      # of a dense [slots, max_len] cache;
+                                      # False = dense baseline
+    kv_page_size: int = 16            # tokens per KV page (max_len must be
+                                      # a multiple of it)
+    kv_pool_pages: int = 0            # pool size in pages (0 = auto: the
+                                      # dense-equivalent max_slots ×
+                                      # max_len/page; size DOWN to realize
+                                      # the HBM saving — rows the pool can't
+                                      # serve finish via cache-capacity
+                                      # eviction, never a crash)
+    resume_restore: bool = True       # paged only: park/preempt snapshots
+                                      # KV pages + SSM state to host and
+                                      # resume SPLICES them back (no prefill
+                                      # replay); False = always token-replay
+    snapshot_budget_bytes: int = 0    # host bytes for parked snapshots
+                                      # (0 = unlimited); overflow drops the
+                                      # snapshot -> that row replays
     max_len: int = 96
     use_kernel: bool = False
     seed: int = 0
@@ -141,6 +176,12 @@ class MARLaaSRuntime:
         self.rcfg = rcfg
         self.acfg = acfg or AdmissionConfig(memory_budget_bytes=1e9,
                                             strict=False)
+        if rcfg.paged_kv:
+            # page-granular admission accounting rides the paged engine
+            # (copy, never mutate a caller-shared config object)
+            import dataclasses as _dc
+            self.acfg = _dc.replace(self.acfg, paged=True,
+                                    page_size=rcfg.kv_page_size)
         self.mgr = MultiTaskManager()
         self.admission = AdmissionController(cfg, self.acfg)
         self.rec = MetricsRecorder({"rollout": rcfg.rollout_pool_devices,
@@ -164,6 +205,11 @@ class MARLaaSRuntime:
             env_stage=rcfg.env_stage,
             env_workers=rcfg.env_workers,
             env_inflight_per_tenant=rcfg.env_inflight_per_tenant,
+            paged_kv=rcfg.paged_kv,
+            kv_page_size=rcfg.kv_page_size,
+            kv_pool_pages=rcfg.kv_pool_pages,
+            resume_restore=rcfg.resume_restore,
+            snapshot_budget_bytes=rcfg.snapshot_budget_bytes,
             on_stage=self._on_stage)
         # LRU tenant -> stacked-LoRA slot map (rollout thread only). The
         # device write happens in _feed_continuous once the consumable
@@ -364,6 +410,7 @@ class MARLaaSRuntime:
         last_slot_sample = None
         last_queue_sample = None
         last_env_sample = None
+        last_page_sample = None
         while not self._stop.is_set():
             self._execute_preemptions()
             fed = self._feed_continuous()
@@ -384,6 +431,14 @@ class MARLaaSRuntime:
                 if ed != last_env_sample:
                     self.rec.record_env_sample(now, *ed)
                     last_env_sample = ed
+            if self.rcfg.paged_kv:
+                ps = eng.page_stats()
+                key = (ps["kv_pages_used"], round(ps["kv_page_frag"], 3))
+                if key != last_page_sample:
+                    self.rec.record_page_sample(
+                        now, int(ps["kv_pages_used"]),
+                        int(ps["kv_pages_total"]), ps["kv_page_frag"])
+                    last_page_sample = key
             # decode timeline: one interval per contiguous occupant-set run,
             # task_id joined with "+" (fused multi-tenant decode)
             tasks_now = eng.occupant_tasks()
@@ -416,6 +471,21 @@ class MARLaaSRuntime:
         occ, cap = eng.occupancy()
         self.rec.record_slot_sample(now, occ, cap)   # close the timeline
         self.rec.record_queue_sample(now, *eng.queue_depths())
+        if self.rcfg.paged_kv:
+            ps = eng.page_stats()
+            self.rec.record_page_sample(now, int(ps["kv_pages_used"]),
+                                        int(ps["kv_pages_total"]),
+                                        ps["kv_page_frag"])
+            # restore-vs-replay counts land in summarize() as n_* counters
+            for name, n in (("restores", eng.stats.restores),
+                            ("replays", eng.stats.replays),
+                            ("replay_tokens_saved",
+                             eng.stats.replay_tokens_saved),
+                            ("snapshots", eng.stats.snapshots),
+                            ("snapshot_drops", eng.stats.snapshot_drops),
+                            ("pool_exhausted", eng.stats.pool_exhausted)):
+                if n:
+                    self.rec.incr(name, n)
         if self.rcfg.env_stage:
             self.rec.record_env_sample(now, *eng.env_depths())
             if eng._env is not None:
@@ -474,6 +544,16 @@ class MARLaaSRuntime:
         pending.sort(key=lambda t: -self.mgr.tasks[t].spec.priority)
         return pending
 
+    def _expected_gen(self, tid: str) -> Optional[float]:
+        """Expected completion length for page-granular admission charges
+        (paged engine only): the engine's per-tenant length EMA — cold
+        tenants charge their full budget, warm tenants what they actually
+        generate, so admission packs tighter as history accrues."""
+        if not self.rcfg.paged_kv:
+            return None
+        spec = self.mgr.tasks[tid].spec
+        return self.cengine.predictor.predict(tid, spec.max_new_tokens)
+
     def _try_admit_with_preemption(self, tid: str) -> bool:
         """Admit `tid`, preempting strictly-lower-priority admitted tasks
         (lowest first) until its byte estimate fits. A preempted victim's
@@ -481,7 +561,7 @@ class MARLaaSRuntime:
         its bytes move to the admission controller's preempted set for
         re-admission once capacity frees."""
         st = self.mgr.tasks[tid]
-        if self.admission.try_admit(st.spec, 32):
+        if self.admission.try_admit(st.spec, 32, self._expected_gen(tid)):
             return True
         if not (self.rcfg.preemption
                 and self.rcfg.rollout_mode == "continuous"):
@@ -504,7 +584,8 @@ class MARLaaSRuntime:
             self.admission.preempt(victim)
             self.mgr.preempt(victim)
             self._preempt_q.append(victim)     # engine evicts on its thread
-            if self.admission.try_admit(st.spec, 32):
+            if self.admission.try_admit(st.spec, 32,
+                                        self._expected_gen(tid)):
                 return True
         return False
 
@@ -522,7 +603,15 @@ class MARLaaSRuntime:
             # already partially decoded shrink the reservation re-charged at
             # readmission, so preempted tenants pack back in tighter
             progress = self._preempt_progress.pop(tid, None)
-            if progress is not None:
+            if self.rcfg.paged_kv:
+                # ACTUAL page counts (snapshot pages + page-rounded replay
+                # prefixes) replace the model-derived estimate entirely —
+                # the paged engine knows exactly what restore will allocate
+                actual = self.cengine.queued_state_bytes(
+                    tid, self.acfg.kv_dtype_bytes)
+                if actual:
+                    self.admission.reestimate_preempted_bytes(tid, actual)
+            elif progress is not None:
                 self.admission.reestimate_preempted(
                     tid, self.mgr.tasks[tid].spec, progress, 32)
             if self.admission.try_readmit(tid):
@@ -539,7 +628,8 @@ class MARLaaSRuntime:
             st = self.mgr.tasks[tid]
             wl_prompt = 32
             if (self.rcfg.policy == "marlaas"
-                    and not self.admission.try_admit(st.spec, wl_prompt)
+                    and not self.admission.try_admit(st.spec, wl_prompt,
+                                                     self._expected_gen(tid))
                     and self.acfg.strict):
                 continue                      # stays pending until release
             self.mgr.admit(tid)

@@ -25,10 +25,56 @@ have variance from step one; exact-match is reported separately.
 from __future__ import annotations
 
 import abc
+import inspect
 import random
+import threading
 from typing import List, Optional, Sequence, Tuple
 
 from repro.data import tokenizer as tok
+
+
+class CancelToken:
+    """Cooperative cancellation for in-flight tool calls (ISSUE 5
+    satellite, ROADMAP PR-4 follow-on).
+
+    A timed-out/evicted call used to run to completion with its result
+    discarded — the worker (EnvWorker or shared-pool thread) stayed busy
+    for the full env latency. The engine now hands every dispatched call a
+    token: cancelling it (a) interrupts the latency sleep immediately
+    (``wait`` returns True) and (b) lets long-running sessions bail out
+    mid-call by checking ``cancelled`` between steps. Thread-safe; cancel
+    is idempotent."""
+
+    def __init__(self):
+        self._ev = threading.Event()
+
+    def cancel(self):
+        self._ev.set()
+
+    @property
+    def cancelled(self) -> bool:
+        return self._ev.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Interruptible sleep: returns True the moment the token is
+        cancelled, False after the full timeout elapsed uncancelled."""
+        return self._ev.wait(timeout)
+
+
+def call_session(session: "ToolSession", query_ids: Sequence[int],
+                 cancel: Optional[CancelToken] = None) -> List[int]:
+    """Invoke a session's ``call``, forwarding the cancellation token when
+    the session accepts one (user-defined sessions predating the token
+    keep working unchanged)."""
+    if cancel is not None:
+        try:
+            params = inspect.signature(session.call).parameters
+        except (TypeError, ValueError):
+            params = {}
+        if "cancel" in params or any(p.kind == p.VAR_KEYWORD
+                                     for p in params.values()):
+            return session.call(query_ids, cancel=cancel)
+    return session.call(query_ids)
 
 
 class ToolSession:
@@ -37,15 +83,21 @@ class ToolSession:
     The default session is a stateless adapter over ``env.tool_call`` —
     every call re-derives the response from the full query. Stateful envs
     subclass and keep per-episode state across ``call``s (`self.turns`
-    counts completed calls)."""
+    counts completed calls). ``cancel`` (when provided) is a cooperative
+    ``CancelToken``: long-running sessions should poll ``cancel.cancelled``
+    between expensive steps and return early — the result of a cancelled
+    call is discarded by the engine."""
 
     def __init__(self, env: "Env", truth):
         self.env = env
         self.truth = truth
         self.turns = 0
 
-    def call(self, query_ids: Sequence[int]) -> List[int]:
+    def call(self, query_ids: Sequence[int],
+             cancel: Optional[CancelToken] = None) -> List[int]:
         self.turns += 1
+        if cancel is not None and cancel.cancelled:
+            return []
         return self.env.tool_call(query_ids, self.truth)
 
 

@@ -133,7 +133,8 @@ class _HopSession(ToolSession):
     entity. Which lookup happens depends on per-episode state (the hop
     counter), not on the query alone."""
 
-    def call(self, query_ids: Sequence[int]) -> List[int]:
+    def call(self, query_ids: Sequence[int],
+             cancel=None) -> List[int]:
         self.turns += 1
         env: "MultiHopSearchEnv" = self.env
         e = _rightmost_entity(tok.decode(query_ids), env.entities)
@@ -203,7 +204,8 @@ class _ReplSession(ToolSession):
         self.register = 0
         self.idx = 0
 
-    def call(self, query_ids: Sequence[int]) -> List[int]:
+    def call(self, query_ids: Sequence[int],
+             cancel=None) -> List[int]:
         self.turns += 1
         nums = self.truth[0]
         if self.idx < len(nums):
@@ -250,7 +252,8 @@ class _RevealSession(ToolSession):
     """Guess-and-refine oracle: call k reveals the first k digits of the
     hidden answer (monotone refinement, stateful reveal counter)."""
 
-    def call(self, query_ids: Sequence[int]) -> List[int]:
+    def call(self, query_ids: Sequence[int],
+             cancel=None) -> List[int]:
         self.turns += 1
         secret = self.truth
         return tok.encode(secret[:min(self.turns, len(secret))])

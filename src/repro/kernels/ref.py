@@ -36,6 +36,17 @@ def gqa_decode_ref(q, cache_k, cache_v, pos, *, softcap=0.0, window=0):
     return jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_gqa_decode_ref(q, kp, vp, tbl, pos, *, softcap=0.0, window=0):
+    """Gather the block-pool pages back into a contiguous per-row cache,
+    then run the contiguous oracle — the paged kernel must match this."""
+    B = q.shape[0]
+    page, KVH, hd = kp.shape[1], kp.shape[2], kp.shape[3]
+    n_pg = tbl.shape[1]
+    ck = jnp.take(kp, tbl, axis=0).reshape(B, n_pg * page, KVH, hd)
+    cv = jnp.take(vp, tbl, axis=0).reshape(B, n_pg * page, KVH, hd)
+    return gqa_decode_ref(q, ck, cv, pos, softcap=softcap, window=window)
+
+
 def token_logprob_ref(hidden, vocab_w, targets, softcap: float = 0.0):
     """hidden: [B, S, d] (or [R, d]); returns fp32 (logprob, entropy)."""
     squeeze = hidden.ndim == 2

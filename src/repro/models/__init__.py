@@ -1,7 +1,9 @@
 from .common import LoraCtx, OFF, proj, rmsnorm, softcap, dtype_of
 from .model import (decode_step, forward_prefill_chunk, forward_seq,
-                    forward_train, init_cache, init_params, lm_logits)
+                    forward_train, init_cache, init_paged_cache, init_params,
+                    lm_logits)
 
 __all__ = ["LoraCtx", "OFF", "proj", "rmsnorm", "softcap", "dtype_of",
            "decode_step", "forward_prefill_chunk", "forward_seq",
-           "forward_train", "init_cache", "init_params", "lm_logits"]
+           "forward_train", "init_cache", "init_paged_cache", "init_params",
+           "lm_logits"]

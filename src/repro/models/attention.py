@@ -169,16 +169,34 @@ def attention_prefill_chunk(q, k, v, cfg: ModelConfig, *, q_start: int,
     return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(q.dtype))
 
 
-def attention_decode(q, cache_k, cache_v, pos, cfg: ModelConfig, *, window=0):
+def _static_window(window) -> bool:
+    """True when `window` is a python int (the Pallas decode kernels take
+    it as a static arg; gemma2's per-layer window array is TRACED through
+    the layer scan and falls back to the einsum path)."""
+    return isinstance(window, int)
+
+
+def attention_decode(q, cache_k, cache_v, pos, cfg: ModelConfig, *, window=0,
+                     use_kernel: bool = False):
     """Single-token decode. q: [B, H, hd]; cache: [B, Smax, KVH, hd];
     pos: [B] number of valid cache entries (incl. the just-written token).
 
     GQA is computed in grouped-einsum form — materializing repeat_kv'd
     caches costs rep× the decode step's HBM traffic (measured 10GB/step at
-    granite decode_32k — EXPERIMENTS.md §Perf iter A2). The Pallas
-    gqa_decode kernel is the TPU-native equivalent of this shape."""
+    granite decode_32k — EXPERIMENTS.md §Perf iter A2). Under
+    ``use_kernel=True`` the Pallas ``gqa_decode`` flash-decode kernel runs
+    instead (when the window is static and the cache length tiles evenly);
+    the einsum path is retained as the oracle it is parity-tested against.
+    """
     B, H, hd = q.shape
-    Smax, KVH = cache_k.shape[1], cache_k.shape[2]
+    Smax = cache_k.shape[1]
+    if (use_kernel and _static_window(window)
+            and (Smax <= 512 or Smax % 512 == 0)):
+        from repro.kernels.gqa_decode import gqa_decode
+        return gqa_decode(q, cache_k, cache_v, pos,
+                          softcap=float(cfg.attn_softcap or 0.0),
+                          window=int(window))
+    KVH = cache_k.shape[2]
     rep = H // KVH
     qg = q.reshape(B, KVH, rep, hd)
     scale = 1.0 / jnp.sqrt(jnp.float32(hd))
@@ -191,3 +209,34 @@ def attention_decode(q, cache_k, cache_v, pos, cfg: ModelConfig, *, window=0):
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     o = jnp.einsum("bgrk,bkgd->bgrd", p, cache_v)
     return o.reshape(B, H, hd)
+
+
+def attention_decode_paged(q, kp, vp, tbl, pos, cfg: ModelConfig, *,
+                           window=0, use_kernel: bool = False):
+    """Single-token decode over the block-pool (paged) KV cache.
+
+    q: [B, H, hd]; kp/vp: [n_pages+1, page, KVH, hd] — the shared page
+    pool (physical page ``n_pages`` is the scratch page that sentinel
+    block-table entries point at); tbl: [B, max_pages] int32 physical page
+    ids; pos: [B] valid entries.
+
+    Oracle path: gather each row's pages into a contiguous
+    [B, max_pages·page, KVH, hd] view and reuse ``attention_decode`` — the
+    gathered values are bit-identical to what a dense cache would hold at
+    the same positions, and every position ≥ pos (incl. anything a
+    sentinel entry dragged in from the scratch page) is masked, so paged
+    output == dense output exactly. Under ``use_kernel=True`` the Pallas
+    ``paged_gqa_decode`` kernel reads the pages in place via a
+    scalar-prefetched block table instead (no contiguous gather ever
+    materializes)."""
+    if use_kernel and _static_window(window):
+        from repro.kernels.paged_decode import paged_gqa_decode
+        return paged_gqa_decode(q, kp, vp, tbl, pos,
+                                softcap=float(cfg.attn_softcap or 0.0),
+                                window=int(window))
+    B = q.shape[0]
+    page, KVH, hd = kp.shape[1], kp.shape[2], kp.shape[3]
+    n_pg = tbl.shape[1]
+    ck = jnp.take(kp, tbl, axis=0).reshape(B, n_pg * page, KVH, hd)
+    cv = jnp.take(vp, tbl, axis=0).reshape(B, n_pg * page, KVH, hd)
+    return attention_decode(q, ck, cv, pos, cfg, window=window)

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from repro.configs import ModelConfig
 from repro.train.sharding import constrain
 from .attention import (AttnParams, attention_chunked, attention_decode,
-                        attention_prefill_chunk, attn_init, qkv)
+                        attention_decode_paged, attention_prefill_chunk,
+                        attn_init, qkv)
 from .common import (LoraCtx, dense_init, dtype_of, embed_init, proj, rmsnorm,
                      rmsnorm_init, softcap)
 from .mamba2 import MambaParams, dims as ssm_dims, mamba_block, mamba_decode_step, mamba_init
@@ -130,6 +131,50 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     return c
 
 
+def _n_attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        return cfg.num_layers
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.hybrid_attn_every
+    return 0
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, *, pool_pages: int,
+                     page_size: int, max_pages_per_row: int,
+                     dtype=None) -> Params:
+    """Block-pool KV cache (ISSUE 5): instead of a dense
+    ``[L, B, max_len, KVH, hd]`` reservation per slot, attention K/V live
+    in a SHARED pool of ``pool_pages`` fixed-size pages
+    (``kp``/``vp``: [L_attn, pool_pages+1, page, KVH, hd]) and each slot
+    names its pages through a block table ``tbl: [B, max_pages_per_row]``.
+    Physical page ``pool_pages`` is the scratch page: sentinel table
+    entries (== pool_pages) route frozen/empty-lane writes and
+    masked-anyway reads there, so no kernel needs bounds handling. The
+    host-side allocator (rollout/kvcache.py) owns the free list; this
+    function only lays out device memory. Recurrent SSM/conv state is
+    per-row and fixed-size, so it stays dense exactly as in
+    ``init_cache``. ``encdec`` is not paged (cross-attention memory is
+    write-once; use the dense cache)."""
+    if cfg.family == "encdec":
+        raise ValueError("paged KV cache unsupported for encdec")
+    dt = dtype or dtype_of(cfg.dtype)
+    c: Params = {"pos": jnp.zeros((batch,), jnp.int32)}
+    n_attn = _n_attn_layers(cfg)
+    if n_attn:
+        c["tbl"] = jnp.full((batch, max_pages_per_row), pool_pages,
+                            jnp.int32)
+        c["kp"] = jnp.zeros((n_attn, pool_pages + 1, page_size,
+                             cfg.num_kv_heads, cfg.head_dim), dt)
+        c["vp"] = jnp.zeros_like(c["kp"])
+    if cfg.ssm is not None:
+        d_in, H, N, G, conv_dim = ssm_dims(cfg)
+        c["ssm"] = jnp.zeros((cfg.num_layers, batch, H, N, cfg.ssm.head_dim),
+                             jnp.float32)
+        c["conv"] = jnp.zeros((cfg.num_layers, batch, conv_dim,
+                               cfg.ssm.conv_width - 1), dt)
+    return c
+
+
 def _decode_write_mode() -> str:
     """"where" (mesh-agnostic merge) or "scatter" (in-place; requires the
     cache S dim unsharded — the serve mesh guarantees it)."""
@@ -195,13 +240,15 @@ def _dense_block_seq(x, lp, cfg, lora, window, positions, q_chunk, causal=True):
     return x + y, (k, v), aux
 
 
-def _dense_block_decode(x, lp, cfg, lora, window, ck, cv, pos):
+def _dense_block_decode(x, lp, cfg, lora, window, ck, cv, pos,
+                        use_kernel=False):
     """x: [B, d] one token; ck/cv: [B, Smax, KVH, hd]."""
     B = x.shape[0]
     h = rmsnorm(x, lp["ln1"], cfg.norm_eps)[:, None, :]      # [B,1,d]
     q, k, v = qkv(h, lp["attn"], cfg, pos[:, None], lora)
     ck, cv = _write_kv(ck, cv, k, v, pos)
-    o = attention_decode(q[:, 0], ck, cv, pos + 1, cfg, window=window)
+    o = attention_decode(q[:, 0], ck, cv, pos + 1, cfg, window=window,
+                         use_kernel=use_kernel)
     o = o.reshape(B, cfg.q_dim)
     x = x + proj(o, lp["attn"].wo, lora=lora, name="attn_o")
     h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
@@ -211,6 +258,34 @@ def _dense_block_decode(x, lp, cfg, lora, window, ck, cv, pos):
     else:
         y = mlp_apply(h, lp["mlp"], cfg.mlp_act, lora)
     return x + y, ck, cv
+
+
+def _paged_block_decode(x, lp, cfg, lora, window, kp, vp, tbl, pos,
+                        use_kernel=False):
+    """Paged twin of ``_dense_block_decode``: x: [B, d] one token; kp/vp:
+    [n_pages+1, page, KVH, hd] (this layer's slice of the shared pool);
+    tbl: [B, max_pages]. The token's K/V scatters into physical page
+    ``tbl[b, pos // page]`` at offset ``pos % page`` — frozen/empty lanes
+    whose table entry is the sentinel scatter into the scratch page, which
+    is never validly read."""
+    B = x.shape[0]
+    page = kp.shape[1]
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)[:, None, :]      # [B,1,d]
+    q, k, v = qkv(h, lp["attn"], cfg, pos[:, None], lora)
+    pidx = jnp.take_along_axis(tbl, (pos // page)[:, None], axis=1)[:, 0]
+    kp = kp.at[pidx, pos % page].set(k[:, 0].astype(kp.dtype))
+    vp = vp.at[pidx, pos % page].set(v[:, 0].astype(vp.dtype))
+    o = attention_decode_paged(q[:, 0], kp, vp, tbl, pos + 1, cfg,
+                               window=window, use_kernel=use_kernel)
+    o = o.reshape(B, cfg.q_dim)
+    x = x + proj(o, lp["attn"].wo, lora=lora, name="attn_o")
+    h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        y, _ = moe_apply(h[:, None, :], lp["moe"], cfg, lora)
+        y = y[:, 0]
+    else:
+        y = mlp_apply(h, lp["mlp"], cfg.mlp_act, lora)
+    return x + y, kp, vp
 
 
 # ===========================================================================
@@ -658,15 +733,25 @@ def forward_prefill_chunk(params: Params, tokens, cfg: ModelConfig,
 
 def decode_step(params: Params, new_tokens, cache: Params, cfg: ModelConfig,
                 lora: Optional[LoraCtx] = None,
-                advance=None) -> Tuple[jax.Array, Params]:
+                advance=None, use_kernel: bool = False
+                ) -> Tuple[jax.Array, Params]:
     """One token for every row. new_tokens: [B] int32.
 
     `advance` ([B] int32 0/1, default all-ones) freezes rows awaiting
     external tool responses: a frozen row's K/V slot is written (and
     overwritten on resume) but its `pos` does not move, so its cache never
-    accumulates garbage. Returns (logits [B, V], cache')."""
+    accumulates garbage. Returns (logits [B, V], cache').
+
+    The cache may be dense (``init_cache``) or paged
+    (``init_paged_cache`` — detected by its ``tbl`` block table): the
+    paged path scatters the token's K/V into the row's current page and
+    attends through the block table, bit-identical to the dense math.
+    ``use_kernel`` routes attention through the Pallas flash-decode
+    kernels (``gqa_decode`` / ``paged_gqa_decode``) where the window is
+    static; the einsum oracle runs otherwise."""
     B = new_tokens.shape[0]
     pos = cache["pos"]
+    paged = "tbl" in cache
     if advance is None:
         advance = jnp.ones((B,), jnp.int32)
     x = params["embed"][new_tokens]                          # [B, d]
@@ -674,16 +759,29 @@ def decode_step(params: Params, new_tokens, cache: Params, cfg: ModelConfig,
 
     if cfg.family in ("dense", "moe", "vlm", "encdec"):
         def body(x, xs):
-            lp, ck, cv, lora_i, win = (xs["lp"], xs["ck"], xs["cv"],
-                                       xs.get("lora"), xs.get("win"))
+            lp, lora_i, win = xs["lp"], xs.get("lora"), xs.get("win")
             lctx = lora.at_layer(lora_i) if (lora is not None and lora_i is not None) else None
             w = win if win is not None else 0
-            x, ck, cv = _dense_block_decode(x, lp, cfg, lctx, w, ck, cv, pos)
+            if paged:
+                x, kp, vp = _paged_block_decode(x, lp, cfg, lctx, w,
+                                                xs["kp"], xs["vp"],
+                                                cache["tbl"], pos,
+                                                use_kernel)
+                ys = (kp, vp)
+            else:
+                x, ck, cv = _dense_block_decode(x, lp, cfg, lctx, w,
+                                                xs["ck"], xs["cv"], pos,
+                                                use_kernel)
+                ys = (ck, cv)
             if cfg.family == "encdec":
                 x = _cross_attn_decode(x, lp, cfg, xs["xk"], xs["xv"])
-            return x, (ck, cv)
+            return x, ys
 
-        xs = {"lp": params["layers"], "ck": cache["k"], "cv": cache["v"]}
+        xs = {"lp": params["layers"]}
+        if paged:
+            xs["kp"], xs["vp"] = cache["kp"], cache["vp"]
+        else:
+            xs["ck"], xs["cv"] = cache["k"], cache["v"]
         if cfg.family == "encdec":
             xs["xk"], xs["xv"] = cache["xk"], cache["xv"]
         lt = _lora_layer_slice(lora)
@@ -700,7 +798,10 @@ def decode_step(params: Params, new_tokens, cache: Params, cfg: ModelConfig,
                 x, (ck, cv) = body(x, xi)
                 cks_l.append(ck); cvs_l.append(cv)
             cks, cvs = jnp.stack(cks_l), jnp.stack(cvs_l)
-        cache = dict(cache, k=cks, v=cvs, pos=pos + advance)
+        if paged:
+            cache = dict(cache, kp=cks, vp=cvs, pos=pos + advance)
+        else:
+            cache = dict(cache, k=cks, v=cvs, pos=pos + advance)
 
     elif cfg.family == "ssm":
         adv_f = advance.astype(jnp.float32)[:, None, None, None]
@@ -724,7 +825,8 @@ def decode_step(params: Params, new_tokens, cache: Params, cfg: ModelConfig,
     elif cfg.family == "hybrid":
         k_every = cfg.hybrid_attn_every
         sts_l, css_l = [], []
-        cks, cvs = cache.get("k"), cache.get("v")
+        cks = cache.get("kp") if paged else cache.get("k")
+        cvs = cache.get("vp") if paged else cache.get("v")
         inv = 0
         for i in range(cfg.num_layers):
             lp = jax.tree.map(lambda t: t[i], params["layers"])
@@ -740,15 +842,24 @@ def decode_step(params: Params, new_tokens, cache: Params, cfg: ModelConfig,
                 sp = params["shared"]
                 slt = _lora_layer_slice(lora, inv, sub="shared")
                 slctx = lora.at_layer(slt) if slt is not None else None
-                x, ck, cv = _dense_block_decode(x, sp, cfg, slctx, 0,
-                                                cks[inv], cvs[inv], pos)
+                if paged:
+                    x, ck, cv = _paged_block_decode(
+                        x, sp, cfg, slctx, 0, cks[inv], cvs[inv],
+                        cache["tbl"], pos, use_kernel)
+                else:
+                    x, ck, cv = _dense_block_decode(x, sp, cfg, slctx, 0,
+                                                    cks[inv], cvs[inv], pos,
+                                                    use_kernel)
                 cks = cks.at[inv].set(ck)
                 cvs = cvs.at[inv].set(cv)
                 inv += 1
         cache = dict(cache, ssm=jnp.stack(sts_l), conv=jnp.stack(css_l),
                      pos=pos + advance)
         if cks is not None:
-            cache["k"], cache["v"] = cks, cvs
+            if paged:
+                cache["kp"], cache["vp"] = cks, cvs
+            else:
+                cache["k"], cache["v"] = cks, cvs
     else:
         raise ValueError(cfg.family)
 

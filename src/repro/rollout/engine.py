@@ -53,6 +53,24 @@ budget (``request.max_turns``, default ``env.max_turns``; 0 = unlimited).
 A CALL sampled with the budget spent ends the episode
 (``finish_reason="turn_limit"``).
 
+Paged KV cache + snapshot/restore resume (``paged_kv=True``, ISSUE 5):
+attention K/V lives in a SHARED block pool of ``kv_pool_pages`` fixed-size
+pages (``kv_page_size`` tokens each; rollout/kvcache.py owns the free
+list, ``models.init_paged_cache`` lays out the device side, and decode
+reads pages through per-slot block tables — the Pallas
+``kernels/paged_decode.py`` kernel under ``use_kernel``). A slot holds
+``ceil(len/page)`` pages instead of a ``max_len`` reservation, growing
+one page at a time as it decodes; a row the pool cannot serve finishes
+via cache-capacity eviction (never a crash). Park (env stage) and
+preemption SNAPSHOT the row's live pages + SSM/conv state to host
+(``resume_restore``), and resume SPLICES them back — no prefill replay, so
+an N-turn agentic episode stops paying O(N·len) recomputation
+(``stats.replay_tokens_saved``; ``stats.restores`` vs ``stats.replays``).
+A snapshot dropped under ``snapshot_budget_bytes`` pressure falls back to
+the RETAINED token-replay path — output is token-for-token identical
+either way (property-tested across attention/SSM/hybrid, both fill
+paths, preempt-at-any-turn).
+
 Determinism: sampling is per-row — each request carries a base PRNG key
 (``fold_in(master, request.seed or submit-index)``) folded with the row's
 own generated-token count. A row's tokens therefore depend only on its own
@@ -95,11 +113,14 @@ import numpy as np
 
 from repro.configs import ModelConfig
 from repro.data import tokenizer as tok
-from repro.envs.base import Env
+from repro.envs.base import CancelToken, Env, call_session
 from repro.lora.adapters import batched_ctx, init_stacked_buffer, stack_adapters
-from repro.models import decode_step, forward_seq, init_cache, lm_logits
+from repro.models import (decode_step, forward_seq, init_cache,
+                          init_paged_cache, lm_logits)
 from repro.rl.types import RolloutCompletion, TrajectoryBatch
 from repro.rollout.env_stage import EnvStage
+from repro.rollout.kvcache import (KVSnapshot, PagePool, SnapshotStore,
+                                   pages_for)
 from repro.rollout.prefill import (PrefillKernels, PrefillWorker, ReadyRow,
                                    _bucket_len, _sample_rows, effective_chunk)
 from repro.rollout.scheduler import LengthPredictor, SlotScheduler
@@ -158,6 +179,16 @@ class RolloutStats:
     # environment-interaction stage extras
     parks: int = 0                 # rows vacated from their slot on CALL
     resumes: int = 0               # tool responses turned into resume jobs
+    # paged-KV / snapshot-restore extras (rollout/kvcache.py)
+    restores: int = 0              # rows resumed by splicing saved KV pages
+                                   # back (NO prefill replay ran)
+    replay_tokens_saved: int = 0   # prompt+prefix tokens a replay would
+                                   # have re-prefilled but restore skipped
+    snapshots: int = 0             # park/preempt snapshots taken to host
+    snapshot_drops: int = 0        # snapshots rejected under host memory
+                                   # pressure (row fell back to replay)
+    pool_exhausted: int = 0        # rows finished by cache-capacity
+                                   # eviction when the page pool ran dry
     tool_wait_slot_steps: int = 0  # Σ over decode steps of resident rows
                                    # frozen on a tool wait — the slot dead
                                    # weight env_stage drives to 0 by
@@ -184,7 +215,7 @@ def _decode_sample_core(cfg, use_kernel, params, adapters, row_ids,
     keeps continuous output token-for-token equal to one-shot output."""
     lora = batched_ctx(adapters, row_ids, cfg, use_kernel)
     logits, cache = decode_step(params, cur_tokens, cache, cfg, lora,
-                                advance=advance)
+                                advance=advance, use_kernel=use_kernel)
     logp_all = jax.nn.log_softmax(logits, axis=-1)
     sampled = _sample_rows(logits, keys, counters, temps)
     nxt = jnp.where(forced_mask > 0, forced, sampled).astype(jnp.int32)
@@ -322,13 +353,147 @@ def _build_splice_fn(cfg: ModelConfig):
     return jax.jit(splice, donate_argnums=(0, 9, 10, 11, 12, 13))
 
 
+def _paged_scatter(cfg: ModelConfig, cache, pcache_k, pcache_v, dest_pages,
+                   page: int):
+    """Scatter a dense prefill scratch cache's K/V ([L, W, S, KVH, hd],
+    S % page == 0) into the shared page pool at the physical pages named
+    by ``dest_pages`` [W, S//page] (sentinel entries land on the scratch
+    page and are effectively dropped). Returns (kp', vp')."""
+    L, W, S, KVH, hd = pcache_k.shape
+    n_chunks = S // page
+    src_k = pcache_k.reshape(L, W * n_chunks, page, KVH, hd)
+    src_v = pcache_v.reshape(L, W * n_chunks, page, KVH, hd)
+    dest = dest_pages.reshape(W * n_chunks)
+    return (cache["kp"].at[:, dest].set(src_k.astype(cache["kp"].dtype)),
+            cache["vp"].at[:, dest].set(src_v.astype(cache["vp"].dtype)))
+
+
+def _build_refill_fn_paged(cfg: ModelConfig, use_kernel: bool, max_len: int,
+                           page: int):
+    """Paged twin of ``_build_refill_fn``: the batched prefill still runs
+    on a dense width-k SCRATCH cache (prefill is contiguous by nature),
+    but the splice writes page-granular — each incoming row's K/V
+    scatters into the physical pages the host allocator handed it
+    (`dest_pages`), its block-table row is mirrored host-side by the
+    engine, and only ``ceil(seq_len/page)`` pages are consumed instead of
+    a ``max_len`` reservation. Recurrent SSM/conv state is per-row and
+    dense, spliced exactly as before."""
+
+    def refill(params, adapters, tokens, prompt_lens, init_counters, slots,
+               dest_pages, new_row_ids, new_keys, new_temps, forced,
+               forced_mask, cache, cur, counters, keys, temps, row_ids):
+        pcache = init_cache(cfg, tokens.shape[0], max_len)
+        lora = batched_ctx(adapters, new_row_ids, cfg, use_kernel)
+        h, pcache, _ = forward_seq(params, tokens, cfg, lora, pcache,
+                                   seq_lens=prompt_lens)
+        last = jnp.take_along_axis(
+            h, (prompt_lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        logits = lm_logits(last, params, cfg)
+        sampled = _sample_rows(logits, new_keys, init_counters, new_temps)
+        first = jnp.where(forced_mask > 0, forced, sampled).astype(jnp.int32)
+        lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                 first[:, None], axis=-1)[:, 0]
+        out = dict(cache)
+        if "kp" in cache:
+            out["kp"], out["vp"] = _paged_scatter(
+                cfg, cache, pcache["k"], pcache["v"], dest_pages, page)
+        if "ssm" in cache:
+            out["ssm"] = cache["ssm"].at[:, slots].set(pcache["ssm"])
+            out["conv"] = cache["conv"].at[:, slots].set(pcache["conv"])
+        out["pos"] = cache["pos"].at[slots].set(prompt_lens)
+        state = (cur.at[slots].set(first),
+                 counters.at[slots].set(init_counters + 1),
+                 keys.at[slots].set(new_keys),
+                 temps.at[slots].set(new_temps),
+                 row_ids.at[slots].set(new_row_ids))
+        return first, lp, out, state
+
+    return jax.jit(refill, donate_argnums=(12, 13, 14, 15, 16, 17))
+
+
+def _build_splice_fn_paged(cfg: ModelConfig, page: int):
+    """Paged twin of ``_build_splice_fn``: installs one async-prefilled
+    row (width-1 dense worker cache) by scattering its K/V into the pool
+    pages the allocator assigned the row. Still scatter-only — no prefill
+    graph touches the decode stream."""
+
+    def splice(cache, pcache, slot, dest_pages, seq_len, first, init_counter,
+               key, temp, row_id, cur, counters, keys, temps, row_ids):
+        out = dict(cache)
+        if "kp" in cache:
+            out["kp"], out["vp"] = _paged_scatter(
+                cfg, cache, pcache["k"], pcache["v"], dest_pages[None], page)
+        if "ssm" in cache:
+            out["ssm"] = cache["ssm"].at[:, slot].set(pcache["ssm"][:, 0])
+            out["conv"] = cache["conv"].at[:, slot].set(pcache["conv"][:, 0])
+        out["pos"] = cache["pos"].at[slot].set(seq_len)
+        state = (cur.at[slot].set(first),
+                 counters.at[slot].set(init_counter + 1),
+                 keys.at[slot].set(key),
+                 temps.at[slot].set(temp),
+                 row_ids.at[slot].set(row_id))
+        return out, state
+
+    return jax.jit(splice, donate_argnums=(0, 10, 11, 12, 13, 14))
+
+
+def _build_snap_fn(cfg: ModelConfig):
+    """Gather one resident row's cache state for a host snapshot: its live
+    KV pages (padded page list — sentinel entries gather the scratch page
+    and are trimmed host-side) and its SSM/conv rows. Read-only: nothing
+    is donated."""
+
+    def snap(cache, pages, slot):
+        out = {}
+        if "kp" in cache:
+            out["kp"] = jnp.take(cache["kp"], pages, axis=1)
+            out["vp"] = jnp.take(cache["vp"], pages, axis=1)
+        if "ssm" in cache:
+            out["ssm"] = cache["ssm"][:, slot]
+            out["conv"] = cache["conv"][:, slot]
+        return out
+
+    return jax.jit(snap)
+
+
+def _build_restore_fn(cfg: ModelConfig):
+    """Splice a host snapshot back into the pool: KV pages into freshly
+    allocated physical pages, SSM/conv rows into the slot, `pos` to the
+    snapshot position, and the device row state to (pending token,
+    counter) — the next ordinary decode step then continues the row with
+    the exact logits/sample an uninterrupted run would produce. NO
+    prefill graph runs: this is the call that kills O(prefix) replay."""
+
+    def restore(cache, kpages, vpages, dest_pages, slot, pos_val, ssm_row,
+                conv_row, cur_tok, counter, key, temp, row_id, cur,
+                counters, keys, temps, row_ids):
+        out = dict(cache)
+        if "kp" in cache:
+            out["kp"] = cache["kp"].at[:, dest_pages].set(
+                kpages.astype(cache["kp"].dtype))
+            out["vp"] = cache["vp"].at[:, dest_pages].set(
+                vpages.astype(cache["vp"].dtype))
+        if "ssm" in cache:
+            out["ssm"] = cache["ssm"].at[:, slot].set(ssm_row)
+            out["conv"] = cache["conv"].at[:, slot].set(conv_row)
+        out["pos"] = cache["pos"].at[slot].set(pos_val)
+        state = (cur.at[slot].set(cur_tok),
+                 counters.at[slot].set(counter),
+                 keys.at[slot].set(key),
+                 temps.at[slot].set(temp),
+                 row_ids.at[slot].set(row_id))
+        return out, state
+
+    return jax.jit(restore, donate_argnums=(0, 13, 14, 15, 16, 17))
+
+
 class _Row:
     """Host-side per-episode state machine (one slot / one batch lane when
     resident; parked rows hold no slot at all)."""
     __slots__ = ("req", "prompt_len", "gen", "lps", "lmask", "sampled",
                  "forced", "status", "forced_q", "finish_reason", "key",
                  "submit_index", "meta", "submitted_at", "started_at",
-                 "replays", "session", "turns")
+                 "replays", "session", "turns", "snap")
 
     def __init__(self, req: RolloutRequest, key, submit_index: int,
                  meta=None, submitted_at: float = 0.0):
@@ -351,6 +516,9 @@ class _Row:
         self.session = None           # per-episode ToolSession (lazy; kept
                                       # across park/preempt/replay)
         self.turns = 0                # tool calls dispatched this episode
+        self.snap = None              # host KVSnapshot while parked/queued
+                                      # (paged engine, resume_restore mode);
+                                      # None -> the row replays from tokens
 
     def turn_limit(self) -> int:
         """Effective tool-turn budget (0 = unlimited)."""
@@ -411,21 +579,31 @@ class _Row:
 
 
 def _submit_tool_call(row: "_Row", prompt_tokens, pool, rng,
-                      sim_latency: bool) -> Future:
+                      sim_latency: bool) -> Tuple[Future, CancelToken]:
     """Dispatch a row's agentic tool call on the shared pool (freeze-in-slot
     path of both engines): sample the env-interaction latency, then run the
-    episode's stateful session call while the rest of the batch decodes."""
+    episode's stateful session call while the rest of the batch decodes.
+
+    Returns (future, cancel token). Cancelling the token makes an
+    already-RUNNING call return early — ``Future.cancel()`` alone only
+    helps before the pool picks the job up; the token interrupts the
+    latency sleep and is passed into ``ToolSession.call`` for cooperative
+    mid-call checks, so a timed-out/evicted call frees its pool thread
+    immediately instead of running to completion discarded."""
     query = list(prompt_tokens) + row.gen
     latency = row.req.env.sample_env_latency(
         _RandomShim(rng)) if not sim_latency else 0.0
     session = row.ensure_session()
+    token = CancelToken()
 
     def run_tool(q=query, sess=session, lat=latency):
-        if lat > 0:
-            time.sleep(lat)
-        return sess.call(q)
+        if lat > 0 and token.wait(lat):
+            return []                    # cancelled during the latency sleep
+        if token.cancelled:
+            return []
+        return call_session(sess, q, token)
 
-    return pool.submit(run_tool)
+    return pool.submit(run_tool), token
 
 
 class RolloutEngine:
@@ -502,6 +680,7 @@ class RolloutEngine:
         rows = [_Row(r, keys[i], i) for i, r in enumerate(requests)]
         pending: Dict[int, Future] = {}
         pending_t0: Dict[int, float] = {}
+        pending_tok: Dict[int, CancelToken] = {}
         own_pool = tool_executor is None
         pool = tool_executor or ThreadPoolExecutor(max_workers=4)
         rng = np.random.RandomState(
@@ -521,7 +700,8 @@ class RolloutEngine:
             stats.sampled_tokens += 1
             if action == "call":
                 self._dispatch_tool(i, rows[i], tokens[i], pending,
-                                    pending_t0, pool, rng, sim_latency)
+                                    pending_t0, pending_tok, pool, rng,
+                                    sim_latency)
             cur[i] = int(first[i])
 
         # forced feeds are budget-exempt, so the step bound must cover
@@ -548,7 +728,7 @@ class RolloutEngine:
                                        time.monotonic() - pending_t0[i])
                     rows[i].forced_q = [tok.RESP] + list(resp) + [tok.ENDRESP]
                     rows[i].status = "active"
-                    del pending[i], pending_t0[i]
+                    del pending[i], pending_t0[i], pending_tok[i]
             advance = np.array([1 if rows[i].status == "active" else 0
                                 for i in range(B)], np.int32)
             if advance.sum() == 0:
@@ -584,17 +764,20 @@ class RolloutEngine:
                                         self.max_len)
                 if action == "call":
                     self._dispatch_tool(i, rows[i], tokens[i], pending,
-                                        pending_t0, pool, rng, sim_latency)
+                                        pending_t0, pending_tok, pool, rng,
+                                        sim_latency)
                 cur[i] = int(nxt[i])
                 stats.tokens_generated += 1
                 if not was_forced:
                     stats.sampled_tokens += 1
 
-        # timed-out tool calls: cancel the Future too — an abandoned
-        # env.tool_call left queued would keep burning the SHARED pool and
-        # starve other tenants' tool calls (satellite bugfix, ISSUE 4)
+        # timed-out tool calls: cancel the Future (drops jobs still queued
+        # on the SHARED pool) AND the cooperative token (makes an
+        # already-executing call return early instead of running to
+        # completion discarded — satellite, ISSUE 5)
         for i in pending:
             pending[i].cancel()
+            pending_tok[i].cancel()
             rows[i].status = "done"
             rows[i].finish_reason = rows[i].finish_reason or "tool_timeout"
         for row in rows:
@@ -613,9 +796,9 @@ class RolloutEngine:
 
     # ------------------------------------------------------------------
     def _dispatch_tool(self, i, row: _Row, token_row, pending, pending_t0,
-                       pool, rng, sim_latency):
-        pending[i] = _submit_tool_call(row, token_row[:row.prompt_len],
-                                       pool, rng, sim_latency)
+                       pending_tok, pool, rng, sim_latency):
+        pending[i], pending_tok[i] = _submit_tool_call(
+            row, token_row[:row.prompt_len], pool, rng, sim_latency)
         pending_t0[i] = time.monotonic()
 
 
@@ -658,6 +841,9 @@ class ContinuousRolloutEngine:
                  disagg_prefill: bool = False, prefill_chunk: int = 0,
                  prefill_workers: int = 1, env_stage: bool = False,
                  env_workers: int = 2, env_inflight_per_tenant: int = 0,
+                 paged_kv: bool = False, kv_page_size: int = 16,
+                 kv_pool_pages: int = 0, resume_restore: bool = True,
+                 snapshot_budget_bytes: int = 0,
                  on_stage=None):
         self.cfg = cfg
         self.base_params = base_params
@@ -666,6 +852,34 @@ class ContinuousRolloutEngine:
         self.max_len = max_len
         self.use_kernel = use_kernel
         self.tool_timeout_s = tool_timeout_s
+        # -- paged KV-cache block pool (ISSUE 5) ---------------------------
+        self.paged_kv = paged_kv
+        self.kv_page_size = kv_page_size
+        self.resume_restore = paged_kv and resume_restore
+        if paged_kv:
+            if cfg.family == "encdec":
+                raise ValueError("paged_kv unsupported for encdec")
+            if max_len % kv_page_size != 0:
+                raise ValueError(f"max_len {max_len} must be a multiple of "
+                                 f"kv_page_size {kv_page_size}")
+            self._max_pg = max_len // kv_page_size
+            # default pool: dense-equivalent capacity (every slot could run
+            # to max_len); size it DOWN to realize the HBM saving, at the
+            # cost of cache-capacity evictions if every row runs long
+            self.kv_pool_pages = kv_pool_pages or max_slots * self._max_pg
+            self._pages = PagePool(self.kv_pool_pages, kv_page_size)
+            self._slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
+            self._slot_pos = [0] * max_slots      # device cache["pos"] mirror
+            self._tbl_host = np.full((max_slots, self._max_pg),
+                                     self._pages.sentinel, np.int32)
+            self._tbl_dirty = False
+            self._snap_store = SnapshotStore(snapshot_budget_bytes)
+        else:
+            self.kv_pool_pages = 0
+            self._pages = None
+            self._snap_store = None
+        self._snap_fn = None
+        self._restore_fn = None
         self.sim_latency = sim_latency
         self.disagg_prefill = disagg_prefill
         self.prefill_workers = max(1, prefill_workers)
@@ -703,6 +917,7 @@ class ContinuousRolloutEngine:
         self._d_masks = None
         self._pending: Dict[int, Future] = {}
         self._pending_t0: Dict[int, float] = {}
+        self._pending_tok: Dict[int, CancelToken] = {}
         self.predictor = predictor or LengthPredictor()
         self._sched = SlotScheduler(policy=scheduler,
                                     predictor=self.predictor,
@@ -726,8 +941,15 @@ class ContinuousRolloutEngine:
     def _ensure_built(self):
         if self._step_fn is None:
             self._step_fn = _build_cont_step_fn(self.cfg, self.use_kernel)
-            self._refill_fn = _build_refill_fn(self.cfg, self.use_kernel,
-                                               self.max_len)
+            if self.paged_kv:
+                self._refill_fn = _build_refill_fn_paged(
+                    self.cfg, self.use_kernel, self.max_len,
+                    self.kv_page_size)
+                self._snap_fn = _build_snap_fn(self.cfg)
+                self._restore_fn = _build_restore_fn(self.cfg)
+            else:
+                self._refill_fn = _build_refill_fn(self.cfg, self.use_kernel,
+                                                   self.max_len)
             # disaggregated mode: the write must NOT donate the old buffer —
             # a prefill worker's in-flight call may still be reading it (the
             # old immutable tree stays valid until its last reader drops it)
@@ -736,14 +958,23 @@ class ContinuousRolloutEngine:
                     lambda b, l: b.at[:, i].set(l), buf, tree),
                 donate_argnums=() if self.disagg_prefill else (0,))
             if self.disagg_prefill:
-                self._splice_fn = _build_splice_fn(self.cfg)
+                self._splice_fn = (_build_splice_fn_paged(self.cfg,
+                                                          self.kv_page_size)
+                                   if self.paged_kv else
+                                   _build_splice_fn(self.cfg))
                 self._pkernels = PrefillKernels(self.cfg, self.use_kernel,
                                                 self.max_len)
         if self._cache is None:
             N = self.max_slots
-            self._cache = init_cache(
-                self.cfg, N, self.max_len,
-                enc_len=8 if self.cfg.family == "encdec" else 0)
+            if self.paged_kv:
+                self._cache = init_paged_cache(
+                    self.cfg, N, pool_pages=self.kv_pool_pages,
+                    page_size=self.kv_page_size,
+                    max_pages_per_row=self._max_pg)
+            else:
+                self._cache = init_cache(
+                    self.cfg, N, self.max_len,
+                    enc_len=8 if self.cfg.family == "encdec" else 0)
             self._d_cur = jnp.zeros((N,), jnp.int32)
             self._d_counters = jnp.zeros((N,), jnp.int32)
             self._d_keys = jnp.zeros((N, 2), jnp.uint32)
@@ -903,20 +1134,259 @@ class ContinuousRolloutEngine:
             self.predictor.observe(row.req.task_id, row.sampled)
         self._rows[slot] = None
         self._prompts[slot] = None
+        if self.paged_kv:
+            self._free_slot_pages(slot)
         # cancel, don't just drop, a pending tool Future: abandoned
         # env.tool_call work left queued would keep burning the shared
         # thread-pool and starve other tenants' tool calls — and a late
-        # response must never reach the slot's next occupant
+        # response must never reach the slot's next occupant. The token
+        # additionally makes an already-RUNNING call return early, freeing
+        # its pool thread immediately (cooperative cancellation).
         fut = self._pending.pop(slot, None)
         if fut is not None:
             fut.cancel()
+        tok_ = self._pending_tok.pop(slot, None)
+        if tok_ is not None:
+            tok_.cancel()
         self._pending_t0.pop(slot, None)
 
     def _complete_parked(self, row: _Row):
         """Finish an episode that holds NO slot (parked in the env stage:
         tool timeout or abort)."""
+        self._drop_snap(row)          # a dead row's snapshot frees its arena
         self._completed.append(self._completion(row, row.req.prompt, -1))
         self.stats.completions += 1
+
+    # -- paged KV page + snapshot lifecycle (rollout/kvcache.py) ----------
+    def _row_pages_needed(self, tokens: int) -> int:
+        """Pool pages holding `tokens` cache entries for one row (0 for
+        pure-SSM models: recurrent state is fixed-size and never paged)."""
+        if self.cfg.family == "ssm":
+            return 0
+        return pages_for(tokens, self.kv_page_size)
+
+    def _assign_slot_pages(self, slot: int, pages: List[int], pos: int):
+        """Install a slot's host-side page list + block-table mirror."""
+        self._slot_pages[slot] = list(pages)
+        self._slot_pos[slot] = pos
+        self._tbl_host[slot, :] = self._pages.sentinel
+        self._tbl_host[slot, :len(pages)] = pages
+        self._tbl_dirty = True
+
+    def _free_slot_pages(self, slot: int):
+        """Vacating a slot returns its pages to the pool and neutralizes
+        its block-table row — stale entries would let the empty lane's
+        (garbage) decode writes corrupt pages re-allocated to other rows."""
+        if self._slot_pages[slot]:
+            self._pages.release(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self._tbl_host[slot, :] = self._pages.sentinel
+        self._tbl_dirty = True
+
+    def _padded_pages(self, pages: List[int]) -> np.ndarray:
+        out = np.full((self._max_pg,), self._pages.sentinel, np.int32)
+        out[:len(pages)] = pages
+        return out
+
+    def _snapshot_row(self, slot: int, row: _Row):
+        """Copy a row's cache state to HOST before vacating its slot (park
+        or preemption): only the ``ceil(pos/page)`` live pages plus the
+        fixed SSM/conv rows — never the max_len worst case. Under host
+        memory pressure the snapshot is dropped and the row replays from
+        tokens instead (identical output, recomputed)."""
+        if not self.resume_restore:
+            return
+        pos = self._slot_pos[slot]
+        n_pg = self._row_pages_needed(pos)
+        # the slot may hold one extra pre-allocated page for the pending
+        # write (pos % page == 0); it contains no valid entries — skip it
+        outs = self._snap_fn(self._cache,
+                             jnp.asarray(self._padded_pages(
+                                 self._slot_pages[slot][:n_pg])),
+                             jnp.int32(slot))
+        # device-side slice BEFORE the host transfer: the jitted gather is
+        # shape-stable at _max_pg pages, but only the n_pg live ones cross
+        # the host boundary — the snapshot copy is O(live), not O(max_len)
+        snap = KVSnapshot(
+            pos=pos, cur=row.gen[-1],
+            kpages=(np.asarray(outs["kp"][:, :n_pg])
+                    if "kp" in outs else None),
+            vpages=(np.asarray(outs["vp"][:, :n_pg])
+                    if "vp" in outs else None),
+            ssm=np.asarray(outs["ssm"]).copy() if "ssm" in outs else None,
+            conv=np.asarray(outs["conv"]).copy() if "conv" in outs else None)
+        if self._snap_store.try_add(snap):
+            row.snap = snap
+            self.stats.snapshots += 1
+        else:
+            row.snap = None
+            self.stats.snapshot_drops += 1
+
+    def _drop_snap(self, row: _Row):
+        if getattr(row, "snap", None) is not None:
+            self._snap_store.remove(row.snap)
+            row.snap = None
+
+    def _finish_capacity(self, row: _Row):
+        """Cache-capacity eviction: the page pool cannot serve this row
+        even when otherwise idle, so the episode finishes with what it has
+        instead of deadlocking the queue."""
+        self._drop_snap(row)
+        row.status, row.finish_reason = "done", "capacity"
+        self.stats.pool_exhausted += 1
+        self._complete_parked(row)
+
+    def _restore_rows(self) -> bool:
+        """Decode-thread install of snapshot-carrying queued rows (the
+        resume path that kills O(prefix) replay): splice the saved KV
+        pages into freshly allocated pool pages, the SSM/conv rows into
+        the slot, and resume with the pending token — the next decode step
+        produces the exact logits an uninterrupted run would have. No
+        token is accepted at install (the pending one was accepted before
+        the park/preempt), so bookkeeping differs from refill: only the
+        device state moves."""
+        if not self.resume_restore or self._cache is None:
+            return False
+        free = [s for s in range(self.max_slots) if self._rows[s] is None]
+        did = False
+        while free:
+            with self._stage_lock:
+                # pop_if, not pop(where=): a snapshot row restores only
+                # when it is genuinely next in scheduler order — it must
+                # not jump a higher-priority tenant's fresh rows (e.g. the
+                # newcomer its own preemption just made room for)
+                row = self._sched.pop_if(self.stats.refills,
+                                         lambda r: r.snap is not None)
+            if row is None:
+                break
+            snap = row.snap
+            pages = self._pages.alloc(snap.n_pages)
+            if pages is None:
+                if (self._pages.used_pages == 0
+                        and snap.n_pages > self._pages.n_pages):
+                    self._finish_capacity(row)      # can never fit
+                    continue
+                with self._stage_lock:              # pool pressure: retry
+                    self._sched.push(row, self.stats.refills)
+                break
+            slot = free.pop(0)
+            t0 = time.monotonic()
+            L_attn = 1 if snap.kpages is None else snap.kpages.shape[0]
+            pad = self._max_pg - snap.n_pages
+            kpages = vpages = jnp.zeros(
+                (L_attn, self._max_pg, self.kv_page_size,
+                 self.cfg.num_kv_heads, self.cfg.head_dim), jnp.float32)
+            if snap.kpages is not None:
+                kpages = jnp.asarray(np.pad(
+                    snap.kpages, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0))))
+                vpages = jnp.asarray(np.pad(
+                    snap.vpages, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0))))
+            zssm = self._cache.get("ssm")
+            ssm_row = (jnp.asarray(snap.ssm) if snap.ssm is not None
+                       else (zssm[:, 0] if zssm is not None else jnp.zeros((1,))))
+            zconv = self._cache.get("conv")
+            conv_row = (jnp.asarray(snap.conv) if snap.conv is not None
+                        else (zconv[:, 0] if zconv is not None else jnp.zeros((1,))))
+            self._cache, state = self._restore_fn(
+                self._cache, kpages, vpages,
+                jnp.asarray(self._padded_pages(pages)), jnp.int32(slot),
+                jnp.int32(snap.pos), ssm_row, conv_row,
+                jnp.int32(snap.cur), jnp.int32(len(row.gen)),
+                jnp.asarray(row.key, jnp.uint32),
+                jnp.float32(row.req.temperature),
+                jnp.int32(row.req.adapter_index), self._d_cur,
+                self._d_counters, self._d_keys, self._d_temps,
+                self._d_row_ids)
+            (self._d_cur, self._d_counters, self._d_keys, self._d_temps,
+             self._d_row_ids) = state
+            self._mask_sig = None
+            now = time.monotonic()
+            self._rows[slot] = row
+            self._prompts[slot] = list(row.req.prompt)
+            self._assign_slot_pages(slot, pages, snap.pos)
+            self._drop_snap(row)
+            self.stats.restores += 1
+            self.stats.replay_tokens_saved += row.prompt_len + len(row.gen)
+            self.stats.splice_seconds += now - t0
+            if self.on_stage is not None:
+                self.on_stage("splice", row.req.task_id, t0, now)
+            did = True
+        if did:
+            self.stats.refills += 1     # one refill event (starvation aging)
+        return did
+
+    def _ensure_decode_pages(self):
+        """Pre-step growth: every resident ACTIVE row is about to write
+        its K/V at cache position ``_slot_pos`` — allocate the covering
+        page when the row crosses a page boundary. A row the pool cannot
+        serve finishes via cache-capacity eviction (pool exhaustion is a
+        scheduling condition, not a crash)."""
+        for slot, r in enumerate(self._rows):
+            if r is None or r.status != "active":
+                continue
+            if self.cfg.family == "ssm":
+                continue
+            need_idx = self._slot_pos[slot] // self.kv_page_size
+            if need_idx >= self._max_pg:
+                continue            # accept() finishes the row at max_len
+            if need_idx < len(self._slot_pages[slot]):
+                continue
+            pg = self._pages.alloc(1)
+            if pg is None:
+                r.status, r.finish_reason = "done", "capacity"
+                self.stats.pool_exhausted += 1
+                self._evict(slot)
+                continue
+            self._slot_pages[slot].extend(pg)
+            self._tbl_host[slot, need_idx] = pg[0]
+            self._tbl_dirty = True
+
+    def page_stats(self) -> Dict[str, float]:
+        """Pool occupancy/fragmentation gauges: used/total pages, the
+        high-water mark, and internal fragmentation (allocated page slack
+        beyond the live cache entries)."""
+        if self._pages is None:
+            return {}
+        used = self._pages.used_pages
+        cap_tokens = used * self.kv_page_size
+        live = sum(min(self._slot_pos[s],
+                       len(self._slot_pages[s]) * self.kv_page_size)
+                   for s in range(self.max_slots)
+                   if self._rows[s] is not None)
+        frag = 1.0 - live / cap_tokens if cap_tokens else 0.0
+        return {"kv_pages_used": float(used),
+                "kv_pages_total": float(self._pages.n_pages),
+                "kv_pages_peak": float(self._pages.peak_used),
+                "kv_page_frag": float(frag),
+                "snapshot_bytes": float(
+                    self._snap_store.bytes_used if self._snap_store else 0)}
+
+    def queued_state_bytes(self, task_id: str,
+                           dtype_bytes: int = 2) -> Optional[int]:
+        """ACTUAL byte need of a tenant's queued/parked rows (paged mode):
+        snapshot page counts for restore rows (exact — what restore will
+        allocate), page-rounded prompt+prefix for replay rows, plus the
+        fixed recurrent state. Feeds the admission controller's
+        readmission re-estimate, replacing the worst-case ``max_len``
+        charge. None in dense mode (caller falls back to the estimator)."""
+        if not self.paged_kv:
+            return None
+        with self._stage_lock:
+            rows = self._sched.rows_for(task_id)
+            rows += [r for r in self._stage_inflight
+                     if r.req.task_id == task_id]
+            rows += [rr.row for rr in self._ready
+                     if rr.row.req.task_id == task_id]
+        if self._env is not None:
+            rows += self._env.rows_for(task_id)
+        per_tok = self.cfg.state_bytes_per_token(dtype_bytes)
+        fixed = self.cfg.state_bytes_fixed(dtype_bytes)
+        total = 0
+        for r in rows:
+            n_pg = (r.snap.n_pages if getattr(r, "snap", None) is not None
+                    else self._row_pages_needed(r.prompt_len + len(r.gen)))
+            total += n_pg * self.kv_page_size * per_tok + fixed
+        return int(total)
 
     # -- preemption -------------------------------------------------------
     def _preemptible(self, slot: int, protect=()) -> bool:
@@ -931,9 +1401,18 @@ class ContinuousRolloutEngine:
         re-queued row flows through the SAME path as a fresh one — in
         disaggregated mode a prefill worker replays prompt+prefix
         asynchronously and the row splices back with its original per-row
-        counter, preserving token-for-token replay parity."""
+        counter, preserving token-for-token replay parity.
+
+        Paged engine with ``resume_restore``: the row's KV pages + SSM
+        state snapshot to host first, so the later resume SPLICES state
+        back instead of re-prefilling — unless the snapshot was dropped
+        under memory pressure, in which case the retained replay path
+        runs (identical output either way)."""
         row = self._rows[slot]
         row.replays += 1
+        if self.paged_kv:
+            self._snapshot_row(slot, row)
+            self._free_slot_pages(slot)
         self._rows[slot] = None
         self._prompts[slot] = None
         self.stats.preemptions += 1
@@ -992,10 +1471,28 @@ class ContinuousRolloutEngine:
             raise RuntimeError("no adapters installed — call set_adapters()")
         t0 = time.monotonic()
         incoming: List[Tuple[int, _Row]] = []
+        pages_of: List[List[int]] = []
+        # snapshot-carrying rows restore on the decode thread (no prefill
+        # at all) — the replay/fresh refill must not pop them
+        where = (lambda r: r.snap is None) if self.resume_restore else None
         with self._stage_lock:
             while free and self._sched:
-                incoming.append((free.pop(0),
-                                 self._sched.pop(self.stats.refills)))
+                row = self._sched.pop(self.stats.refills, where=where)
+                if row is None:
+                    break
+                if self.paged_kv:
+                    n_pg = self._row_pages_needed(
+                        len(row.req.prompt) + len(row.gen))
+                    pages = self._pages.alloc(n_pg)
+                    if pages is None:
+                        if self._pages.used_pages == 0:
+                            self._finish_capacity(row)   # can never fit
+                            continue
+                        # pool pressure: resident rows will free pages
+                        self._sched.push(row, self.stats.refills)
+                        break
+                    pages_of.append(pages)
+                incoming.append((free.pop(0), row))
         if not incoming:
             return False
         k = len(incoming)
@@ -1024,13 +1521,29 @@ class ContinuousRolloutEngine:
             if row.forced_q:
                 forced[j] = row.forced_q[0]
                 fmask[j] = 1
-        first, lp, self._cache, state = self._refill_fn(
-            self.base_params, self._stacked, jnp.asarray(tokens),
-            jnp.asarray(prompt_lens), jnp.asarray(init_counters),
-            jnp.asarray(slots), jnp.asarray(row_ids), jnp.asarray(keys),
-            jnp.asarray(temps), jnp.asarray(forced), jnp.asarray(fmask),
-            self._cache, self._d_cur, self._d_counters,
-            self._d_keys, self._d_temps, self._d_row_ids)
+        if self.paged_kv:
+            # physical destination pages per (row, chunk); ghost rows and
+            # chunks past a row's page count point at the scratch page
+            n_chunks = self.max_len // self.kv_page_size
+            dest = np.full((W, n_chunks), self._pages.sentinel, np.int32)
+            for j, pages in enumerate(pages_of):
+                dest[j, :len(pages)] = pages
+            first, lp, self._cache, state = self._refill_fn(
+                self.base_params, self._stacked, jnp.asarray(tokens),
+                jnp.asarray(prompt_lens), jnp.asarray(init_counters),
+                jnp.asarray(slots), jnp.asarray(dest), jnp.asarray(row_ids),
+                jnp.asarray(keys), jnp.asarray(temps), jnp.asarray(forced),
+                jnp.asarray(fmask), self._cache, self._d_cur,
+                self._d_counters, self._d_keys, self._d_temps,
+                self._d_row_ids)
+        else:
+            first, lp, self._cache, state = self._refill_fn(
+                self.base_params, self._stacked, jnp.asarray(tokens),
+                jnp.asarray(prompt_lens), jnp.asarray(init_counters),
+                jnp.asarray(slots), jnp.asarray(row_ids), jnp.asarray(keys),
+                jnp.asarray(temps), jnp.asarray(forced), jnp.asarray(fmask),
+                self._cache, self._d_cur, self._d_counters,
+                self._d_keys, self._d_temps, self._d_row_ids)
         (self._d_cur, self._d_counters, self._d_keys, self._d_temps,
          self._d_row_ids) = state
         first = np.asarray(first)
@@ -1050,9 +1563,14 @@ class ContinuousRolloutEngine:
         for j, (slot, row) in enumerate(incoming):
             self._rows[slot] = row
             self._prompts[slot] = list(row.req.prompt)
+            if self.paged_kv:
+                self._assign_slot_pages(slot, pages_of[j], len(seqs[j]))
             was_forced = fmask[j] == 1
             if was_forced:                        # env-stage resume splice
                 row.forced_q.pop(0)
+                if row.gen:   # the resume re-prefilled prompt+prefix: the
+                    self.stats.replays += 1       # per-turn recomputation
+                    self.stats.replay_tokens += len(seqs[j])  # restore kills
             elif row.gen:                         # preemption replay
                 self.stats.replays += 1
                 self.stats.replay_tokens += len(seqs[j])
@@ -1088,25 +1606,57 @@ class ContinuousRolloutEngine:
             return False
         free = [s for s in range(self.max_slots) if self._rows[s] is None]
         t0 = time.monotonic()
-        for rr in ready:
-            slot = free.pop(0)
+        installed = 0
+        for i_rr, rr in enumerate(ready):
             row = rr.row
-            self._cache, state = self._splice_fn(
-                self._cache, rr.pcache, jnp.int32(slot),
-                jnp.int32(rr.seq_len), jnp.int32(rr.first),
-                jnp.int32(rr.init_counter), jnp.asarray(row.key, jnp.uint32),
-                jnp.float32(row.req.temperature),
-                jnp.int32(row.req.adapter_index), self._d_cur,
-                self._d_counters, self._d_keys, self._d_temps,
-                self._d_row_ids)
+            pages: List[int] = []
+            if self.paged_kv:
+                alloc = self._pages.alloc(self._row_pages_needed(rr.seq_len))
+                if alloc is None:
+                    if self._pages.used_pages == 0:
+                        self._finish_capacity(row)      # can never fit
+                        continue
+                    with self._stage_lock:    # pool pressure: retry later
+                        for back in reversed(ready[i_rr:]):
+                            self._ready.appendleft(back)
+                    break
+                pages = alloc
+            slot = free.pop(0)
+            if self.paged_kv:
+                self._cache, state = self._splice_fn(
+                    self._cache, rr.pcache, jnp.int32(slot),
+                    jnp.asarray(self._padded_pages(pages)),
+                    jnp.int32(rr.seq_len), jnp.int32(rr.first),
+                    jnp.int32(rr.init_counter),
+                    jnp.asarray(row.key, jnp.uint32),
+                    jnp.float32(row.req.temperature),
+                    jnp.int32(row.req.adapter_index), self._d_cur,
+                    self._d_counters, self._d_keys, self._d_temps,
+                    self._d_row_ids)
+            else:
+                self._cache, state = self._splice_fn(
+                    self._cache, rr.pcache, jnp.int32(slot),
+                    jnp.int32(rr.seq_len), jnp.int32(rr.first),
+                    jnp.int32(rr.init_counter),
+                    jnp.asarray(row.key, jnp.uint32),
+                    jnp.float32(row.req.temperature),
+                    jnp.int32(row.req.adapter_index), self._d_cur,
+                    self._d_counters, self._d_keys, self._d_temps,
+                    self._d_row_ids)
             (self._d_cur, self._d_counters, self._d_keys, self._d_temps,
              self._d_row_ids) = state
             self._mask_sig = None      # slot contents changed
             now = time.monotonic()
+            installed += 1
             self._rows[slot] = row
             self._prompts[slot] = list(row.req.prompt)
+            if self.paged_kv:
+                self._assign_slot_pages(slot, pages, rr.seq_len)
             if rr.forced_first:                   # env-stage resume splice
                 row.forced_q.pop(0)
+                if row.gen:                       # resume re-prefilled the
+                    self.stats.replays += 1       # whole prefix async
+                    self.stats.replay_tokens += rr.seq_len
             elif row.gen:                         # preemption replay
                 self.stats.replays += 1
                 self.stats.replay_tokens += rr.seq_len
@@ -1125,6 +1675,8 @@ class ContinuousRolloutEngine:
                 self._on_call(slot)
             elif action == "done":
                 self._evict(slot)
+        if installed == 0:
+            return False
         now = time.monotonic()
         self.stats.refills += 1        # one refill event (starvation aging)
         self.stats.splice_seconds += now - t0
@@ -1143,7 +1695,7 @@ class ContinuousRolloutEngine:
             self._dispatch_tool(slot)
 
     def _dispatch_tool(self, slot: int):
-        self._pending[slot] = _submit_tool_call(
+        self._pending[slot], self._pending_tok[slot] = _submit_tool_call(
             self._rows[slot], self._prompts[slot], self._pool, self._rng,
             self.sim_latency)
         self._pending_t0[slot] = time.monotonic()
@@ -1159,6 +1711,13 @@ class ContinuousRolloutEngine:
         query = list(self._prompts[slot]) + row.gen
         latency = row.req.env.sample_env_latency(
             _RandomShim(self._rng)) if not self.sim_latency else 0.0
+        if self.paged_kv:
+            # resume_restore: the row's KV pages + recurrent state go to
+            # host so the tool-response resume splices them back instead
+            # of replaying prompt+prefix (the per-turn recomputation this
+            # PR kills); the freed pages immediately serve the refill
+            self._snapshot_row(slot, row)
+            self._free_slot_pages(slot)
         self._rows[slot] = None
         self._prompts[slot] = None
         self.stats.parks += 1
@@ -1228,6 +1787,11 @@ class ContinuousRolloutEngine:
             elif now - self._pending_t0[slot] > self.tool_timeout_s:
                 row.status, row.finish_reason = "done", "tool_timeout"
                 self._evict(slot)
+        # snapshot-restore resume (paged engine): queued rows carrying a
+        # host snapshot splice their saved pages back on the decode thread
+        # — no prefill graph, no replay — before the fill paths run
+        if self.resume_restore and self._restore_rows():
+            progressed = True
         # fill freed slots from the cross-task queue: disaggregated mode
         # splices asynchronously-prefilled rows (decode never runs a prefill
         # graph); fused mode runs the baseline one-call refill
@@ -1251,6 +1815,15 @@ class ContinuousRolloutEngine:
             assert all(r is None or r.status != "calling"
                        for r in self._rows), \
                 "env-stage invariant violated: tool-waiting row resident"
+        if self.paged_kv:
+            # pre-step growth: allocate the page each active row's next
+            # K/V write lands in (cache-capacity eviction on exhaustion),
+            # then upload the block table if the topology changed
+            self._ensure_decode_pages()
+            if self._tbl_dirty and "tbl" in self._cache:
+                self._cache = dict(self._cache,
+                                   tbl=jnp.asarray(self._tbl_host))
+                self._tbl_dirty = False
         advance = np.array(
             [1 if (r is not None and r.status == "active") else 0
              for r in self._rows], np.int32)
@@ -1290,6 +1863,8 @@ class ContinuousRolloutEngine:
         for slot, r in enumerate(self._rows):
             if r is None or r.status != "active" or advance[slot] == 0:
                 continue
+            if self.paged_kv:
+                self._slot_pos[slot] += 1     # device cache["pos"] mirror
             was_forced = fmask[slot] == 1
             if was_forced:
                 r.forced_q.pop(0)

@@ -54,6 +54,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
+from repro.envs.base import CancelToken, call_session
+
 
 @dataclass
 class EnvJob:
@@ -67,8 +69,16 @@ class EnvJob:
     resolved_at: float = 0.0
     response: Optional[List[int]] = None
     error: Optional[BaseException] = None
-    cancelled: bool = False      # timeout/abort: late result is discarded
+    # timeout/abort: the late result is discarded AND the token wakes the
+    # executing worker immediately (interruptible latency sleep +
+    # cooperative mid-call checks) instead of letting the call run to
+    # completion for nothing (ISSUE 5 satellite)
+    cancel: CancelToken = field(default_factory=CancelToken)
     state: str = "queued"        # queued | executing | done
+
+    @property
+    def cancelled(self) -> bool:
+        return self.cancel.cancelled
 
 
 class EnvWorker(threading.Thread):
@@ -90,10 +100,13 @@ class EnvWorker(threading.Thread):
                     return
                 continue
             if job.latency > 0 and not stage.sim_latency:
-                time.sleep(job.latency)
+                # interruptible: a timeout/abort wakes the worker NOW
+                job.cancel.wait(job.latency)
             resp: List[int] = []
             try:
-                resp = list(job.row.session.call(job.query))
+                if not job.cancelled:
+                    resp = list(call_session(job.row.session, job.query,
+                                             job.cancel))
             except BaseException as e:      # surfaced on the engine thread
                 job.error = e
             stage._finish(job, resp)
@@ -146,8 +159,12 @@ class EnvStage:
         self._stop.set()
         with self._cond:
             for job in self._queue:
-                job.cancelled = True
+                job.cancel.cancel()
             self._queue.clear()
+            # wake executing workers out of their latency sleeps too —
+            # their results were going to be discarded anyway
+            for job in self._executing.values():
+                job.cancel.cancel()
             self._cond.notify_all()
         for w in self._workers:
             w.join(timeout=30)
@@ -183,14 +200,14 @@ class EnvStage:
             keep: Deque[EnvJob] = deque()
             for job in self._queue:
                 if now - job.submitted_at > timeout_s:
-                    job.cancelled = True
+                    job.cancel.cancel()
                     expired.append(job)
                 else:
                     keep.append(job)
             self._queue = keep
             for job in self._executing.values():
                 if not job.cancelled and now - job.submitted_at > timeout_s:
-                    job.cancelled = True
+                    job.cancel.cancel()
                     expired.append(job)
         self.timeouts += len(expired)
         return expired
@@ -202,13 +219,13 @@ class EnvStage:
             out = [j for j in self._queue]
             out += list(self._executing.values())
             for j in out:
-                j.cancelled = True
+                j.cancel.cancel()
             self._queue.clear()
             # late worker results are dropped by the cancelled flag;
             # already-resolved-but-undrained responses abort too
             while self._done:
                 j = self._done.popleft()
-                j.cancelled = True
+                j.cancel.cancel()
                 out.append(j)
         return out
 

@@ -212,7 +212,11 @@ class PrefillWorker(threading.Thread):
                 return None
             if not eng._sched:
                 return None
-            row = eng._sched.pop(eng.stats.refills)
+            # snapshot-carrying rows (paged engine, resume_restore) never
+            # prefill: the decode thread splices their saved pages back
+            where = ((lambda r: r.snap is None)
+                     if getattr(eng, "resume_restore", False) else None)
+            row = eng._sched.pop(eng.stats.refills, where=where)
             if row is not None:
                 eng._stage_inflight.append(row)
             return row

@@ -120,12 +120,37 @@ class SlotScheduler:
         resume = 0 if getattr(e.row, "forced_q", None) else 1
         return (1, 0, -req.priority, resume, rem, e.row.submit_index)
 
-    def pop(self, refill_count: int = 0):
-        """Remove and return the highest-ranked row, or None if empty."""
+    def pop(self, refill_count: int = 0, where=None):
+        """Remove and return the highest-ranked row, or None if empty.
+
+        `where` (optional row predicate) restricts the pop to matching
+        rows — the paged engine uses it to keep snapshot-carrying rows out
+        of the prefill/replay path (they restore on the decode thread) and
+        vice versa; scheduling order among eligible rows is unchanged."""
+        if not self._entries:
+            return None
+        idxs = (range(len(self._entries)) if where is None else
+                [i for i in range(len(self._entries))
+                 if where(self._entries[i].row)])
+        if not idxs:
+            return None
+        best = min(idxs,
+                   key=lambda i: self._key(self._entries[i], refill_count))
+        return self._entries.pop(best).row
+
+    def pop_if(self, refill_count: int = 0, pred=None):
+        """Pop the highest-ranked row ONLY if it satisfies `pred`; returns
+        None otherwise (queue untouched). Unlike ``pop(where=)`` this never
+        jumps a matching row over better-ranked non-matching ones — the
+        paged engine's restore path uses it so a snapshot-carrying row
+        resumes when (and only when) it is genuinely next in line, never
+        ahead of a higher-priority tenant's fresh rows."""
         if not self._entries:
             return None
         best = min(range(len(self._entries)),
                    key=lambda i: self._key(self._entries[i], refill_count))
+        if pred is not None and not pred(self._entries[best].row):
+            return None
         return self._entries.pop(best).row
 
     def pop_all(self) -> List:
