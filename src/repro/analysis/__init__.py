@@ -1,0 +1,29 @@
+"""Project-specific static analysis for the MARLaaS repro (ISSUE 6).
+
+Three AST-based checker families over ``src/``:
+
+  RA1xx  lock discipline   (``analysis/locks.py``)
+  RA2xx  JAX trace hygiene (``analysis/tracing.py``)
+  RA3xx  Pallas kernels    (``analysis/pallas_rules.py``)
+
+plus a runtime validator (``analysis/runtime_validator.py``) that records
+actual lock-acquisition order during tests and counts jit cache misses.
+
+Run ``python -m repro.analysis --check src/`` (the CI gate) or see
+``analysis/README.md`` for rule ids, the ``# guards:`` / ``# held:``
+annotation conventions, ``# noqa: RA###`` suppression and baseline
+regeneration.
+"""
+from .core import (  # noqa: F401
+    Finding,
+    RULES,
+    analyze_paths,
+    default_baseline_path,
+    diff_against_baseline,
+    load_baseline,
+    write_baseline,
+)
+from .runtime_validator import (  # noqa: F401
+    LockOrderRecorder,
+    RecompileSentinel,
+)

@@ -1,0 +1,305 @@
+"""RA3xx — Pallas kernel structural checks.
+
+Parses every ``pl.pallas_call(...)`` site (``grid_spec`` /
+``PrefetchScalarGridSpec`` constructed in a local variable is resolved
+through the enclosing function's assignments) and validates the arity
+contracts that otherwise only fail at trace time — or worse, silently
+read the wrong block:
+
+  RA301  ``index_map`` lambda arity != len(grid) + num_scalar_prefetch
+  RA302  ``index_map`` returns a tuple whose length != block rank, or a
+         kernel body indexes a ref with a literal out of range for its
+         (literal) block shape (``None`` dims are squeezed)
+  RA303  kernel positional-param count != num_scalar_prefetch +
+         len(in_specs) + n_outs + len(scratch_shapes); the immediate
+         invocation passes a different arg count than
+         num_scalar_prefetch + len(in_specs); or an int32-cast scalar
+         operand appears AFTER a non-scalar one (scalar-prefetch operands
+         must come first — the ``paged_decode.py`` block-table pattern)
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .core import Finding, SourceFile
+
+
+def _callee_name(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+@dataclass
+class _Spec:
+    """One BlockSpec: literal block shape (None entries for non-literal
+    dims, ``"squeeze"`` markers dropped) and its index_map lambda."""
+    rank: Optional[int] = None
+    dims: Optional[List[Optional[int]]] = None   # squeezed literal dims
+    index_map: Optional[ast.Lambda] = None
+    line: int = 0
+
+
+def _parse_blockspec(node: ast.expr) -> Optional[_Spec]:
+    if not (isinstance(node, ast.Call)
+            and _callee_name(node.func) == "BlockSpec"):
+        return None
+    spec = _Spec(line=node.lineno)
+    exprs = list(node.args) + [k.value for k in node.keywords]
+    for e in exprs:
+        if isinstance(e, ast.Tuple):
+            spec.rank = len(e.elts)
+            dims = []
+            for elt in e.elts:
+                if isinstance(elt, ast.Constant):
+                    if elt.value is None:
+                        continue            # squeezed dim
+                    dims.append(elt.value
+                                if isinstance(elt.value, int) else None)
+                else:
+                    dims.append(None)
+            spec.dims = dims
+        elif isinstance(e, ast.Lambda):
+            spec.index_map = e
+    return spec
+
+
+@dataclass
+class _CallInfo:
+    node: ast.Call
+    line: int
+    nsp: int = 0
+    grid_len: Optional[int] = None
+    in_specs: Optional[List[_Spec]] = None
+    out_specs: Optional[List[_Spec]] = None
+    n_out: Optional[int] = None
+    n_scratch: Optional[int] = None
+    kernel: Optional[ast.FunctionDef] = None
+    kernel_name: str = "<kernel>"
+
+
+def _resolve(expr: ast.expr, env: Dict[str, ast.expr],
+             depth: int = 0) -> ast.expr:
+    while isinstance(expr, ast.Name) and expr.id in env and depth < 4:
+        expr = env[expr.id]
+        depth += 1
+    return expr
+
+
+def _spec_list(expr: ast.expr) -> Optional[List[_Spec]]:
+    if isinstance(expr, (ast.List, ast.Tuple)):
+        out = []
+        for e in expr.elts:
+            s = _parse_blockspec(e)
+            if s is None:
+                return None
+            out.append(s)
+        return out
+    s = _parse_blockspec(expr)
+    return [s] if s is not None else None
+
+
+def _parse_call(call: ast.Call, env: Dict[str, ast.expr],
+                module_defs: Dict[str, ast.FunctionDef]
+                ) -> Optional[_CallInfo]:
+    if _callee_name(call.func) != "pallas_call":
+        return None
+    info = _CallInfo(node=call, line=call.lineno)
+    kwargs = {k.arg: _resolve(k.value, env) for k in call.keywords if k.arg}
+    gs = kwargs.get("grid_spec")
+    if isinstance(gs, ast.Call) and _callee_name(gs.func) in (
+            "PrefetchScalarGridSpec", "GridSpec"):
+        for k in gs.keywords:
+            kwargs.setdefault(k.arg, _resolve(k.value, env))
+    nsp = kwargs.get("num_scalar_prefetch")
+    if isinstance(nsp, ast.Constant) and isinstance(nsp.value, int):
+        info.nsp = nsp.value
+    grid = kwargs.get("grid")
+    if isinstance(grid, ast.Tuple):
+        info.grid_len = len(grid.elts)
+    elif isinstance(grid, ast.Constant):
+        info.grid_len = 1
+    if "in_specs" in kwargs:
+        info.in_specs = _spec_list(kwargs["in_specs"])
+    if "out_specs" in kwargs:
+        info.out_specs = _spec_list(kwargs["out_specs"])
+        if info.out_specs is not None:
+            info.n_out = len(info.out_specs)
+    if info.n_out is None and "out_shape" in kwargs:
+        osh = kwargs["out_shape"]
+        info.n_out = len(osh.elts) if isinstance(osh, (ast.List, ast.Tuple)) \
+            else 1
+    scratch = kwargs.get("scratch_shapes")
+    if isinstance(scratch, (ast.List, ast.Tuple)):
+        info.n_scratch = len(scratch.elts)
+    elif "scratch_shapes" not in kwargs:
+        info.n_scratch = 0
+    # kernel: first positional arg, possibly partial(_kernel, ...)
+    if call.args:
+        k = call.args[0]
+        if isinstance(k, ast.Call) and _callee_name(k.func) == "partial" \
+                and k.args:
+            k = k.args[0]
+        name = _callee_name(k) if isinstance(k, (ast.Name,
+                                                 ast.Attribute)) else None
+        if name and name in module_defs:
+            info.kernel = module_defs[name]
+            info.kernel_name = name
+    return info
+
+
+def _kernel_positional_count(fn: ast.FunctionDef) -> Optional[int]:
+    a = fn.args
+    if a.vararg is not None:
+        return None
+    return len(a.posonlyargs) + len(a.args)
+
+
+_INT32_MARKERS = ("int32", "int16")
+
+
+def _is_scalar_marked(expr: ast.expr) -> bool:
+    for n in ast.walk(expr):
+        if isinstance(n, ast.Attribute) and n.attr in _INT32_MARKERS:
+            return True
+        if isinstance(n, ast.Name) and n.id in _INT32_MARKERS:
+            return True
+    return False
+
+
+class _FileChecker:
+    def __init__(self, src: SourceFile, findings: List[Finding]):
+        self.src = src
+        self.findings = findings
+        self.module_defs = {n.name: n for n in ast.walk(src.tree)
+                            if isinstance(n, ast.FunctionDef)}
+
+    def _emit(self, rule: str, line: int, msg: str):
+        self.findings.append(Finding(rule, self.src.rel, line, msg))
+
+    def run(self):
+        for fn in self.src.tree.body:
+            if isinstance(fn, ast.FunctionDef):
+                self._function(fn)
+
+    def _function(self, fn: ast.FunctionDef):
+        env: Dict[str, ast.expr] = {}
+        for s in ast.walk(fn):
+            if isinstance(s, ast.Assign) and len(s.targets) == 1 \
+                    and isinstance(s.targets[0], ast.Name):
+                env[s.targets[0].id] = s.value
+        calls = [n for n in ast.walk(fn) if isinstance(n, ast.Call)]
+        infos: Dict[ast.Call, _CallInfo] = {}
+        for c in calls:
+            info = _parse_call(c, env, self.module_defs)
+            if info is not None:
+                infos[c] = info
+                self._check_specs(info)
+                self._check_kernel(info)
+        # immediate invocation: pl.pallas_call(...)(operands...)
+        for c in calls:
+            if isinstance(c.func, ast.Call) and c.func in infos:
+                self._check_invocation(infos[c.func], c)
+
+    def _check_specs(self, info: _CallInfo):
+        if info.grid_len is None:
+            return
+        expect = info.grid_len + info.nsp
+        all_specs = (info.in_specs or []) + (info.out_specs or [])
+        for spec in all_specs:
+            lam = spec.index_map
+            if lam is None:
+                continue
+            arity = len(lam.args.posonlyargs) + len(lam.args.args)
+            if lam.args.vararg is None and arity != expect:
+                self._emit("RA301", spec.line,
+                           f"index_map takes {arity} args; grid "
+                           f"({info.grid_len}) + scalar prefetch "
+                           f"({info.nsp}) needs {expect}")
+            if spec.rank is not None and isinstance(lam.body, ast.Tuple) \
+                    and len(lam.body.elts) != spec.rank:
+                self._emit("RA302", spec.line,
+                           f"index_map returns {len(lam.body.elts)} "
+                           f"indices for a rank-{spec.rank} block shape")
+
+    def _check_kernel(self, info: _CallInfo):
+        if info.kernel is None or info.in_specs is None \
+                or info.n_out is None or info.n_scratch is None:
+            return
+        got = _kernel_positional_count(info.kernel)
+        if got is None:
+            return
+        expect = info.nsp + len(info.in_specs) + info.n_out + info.n_scratch
+        if got != expect:
+            self._emit("RA303", info.line,
+                       f"kernel `{info.kernel_name}` has {got} positional "
+                       f"params; expected {expect} (= {info.nsp} prefetch "
+                       f"+ {len(info.in_specs)} in + {info.n_out} out "
+                       f"+ {info.n_scratch} scratch)")
+            return
+        self._check_ref_bounds(info)
+
+    def _check_ref_bounds(self, info: _CallInfo):
+        """Literal subscripts on kernel refs vs literal block dims
+        (None dims squeezed)."""
+        kernel = info.kernel
+        a = kernel.args
+        params = [p.arg for p in (a.posonlyargs + a.args)]
+        specs: List[Optional[_Spec]] = \
+            [None] * info.nsp + list(info.in_specs) + \
+            list(info.out_specs or [None] * (info.n_out or 0))
+        by_param: Dict[str, _Spec] = {}
+        for name, spec in zip(params, specs):
+            if spec is not None and spec.dims:
+                by_param[name] = spec
+        for node in ast.walk(kernel):
+            if not (isinstance(node, ast.Subscript)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in by_param):
+                continue
+            dims = by_param[node.value.id].dims
+            idxs = node.slice.elts if isinstance(node.slice, ast.Tuple) \
+                else [node.slice]
+            for d, idx in enumerate(idxs):
+                if d >= len(dims) or dims[d] is None:
+                    continue
+                if isinstance(idx, ast.Constant) \
+                        and isinstance(idx.value, int) \
+                        and idx.value >= dims[d] >= 0:
+                    self._emit("RA302", node.lineno,
+                               f"ref `{node.value.id}` indexed at "
+                               f"{idx.value} but block dim {d} has size "
+                               f"{dims[d]}")
+
+    def _check_invocation(self, info: _CallInfo, call: ast.Call):
+        if info.in_specs is None:
+            return
+        expect = info.nsp + len(info.in_specs)
+        if call.keywords or any(isinstance(x, ast.Starred)
+                                for x in call.args):
+            return
+        if len(call.args) != expect:
+            self._emit("RA303", call.lineno,
+                       f"pallas_call invocation passes {len(call.args)} "
+                       f"operands; expected {expect} (= {info.nsp} "
+                       f"prefetch + {len(info.in_specs)} in)")
+            return
+        if info.nsp:
+            head = call.args[:info.nsp]
+            tail = call.args[info.nsp:]
+            if any(not _is_scalar_marked(h) for h in head) \
+                    and any(_is_scalar_marked(t) for t in tail):
+                self._emit("RA303", call.lineno,
+                           "scalar-prefetch operands (int32 scalars) "
+                           "must be the FIRST invocation args")
+
+
+def check(files: List[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in files:
+        _FileChecker(src, findings).run()
+    return findings

@@ -1,0 +1,274 @@
+"""Runtime validators that cross-check the static model (ISSUE 6).
+
+``LockOrderRecorder`` — patches the ``threading.Lock/RLock/Condition``
+factories so every lock CREATED FROM repo code (the immediate caller
+frame lives under ``src/repro``) is wrapped in a recording proxy. Each
+acquisition while other locks are held records an order edge keyed by
+the locks' creation sites (``file:line`` — exactly the lock ids of the
+static ``LockModel``). ``check_against(model)`` then verifies (a) every
+observed lock is statically known and (b) no observed edge reverses a
+path in the merged static+observed graph (an actual-vs-predicted
+lock-order inversion = latent deadlock).
+
+``RecompileSentinel`` — snapshots the jit executable-cache size
+(``PjitFunction._cache_size()``) of tracked callables; after a warmup
+``mark()``, ``new_compiles()`` must stay empty through steady-state
+decode (the zero-recompile acceptance criterion).
+
+Both are debug instruments used by the test suite; production code never
+imports them.
+"""
+from __future__ import annotations
+
+import threading
+import traceback
+from typing import Dict, List, Optional, Set, Tuple
+
+_FACTORIES = ("Lock", "RLock", "Condition")
+_REAL = {name: getattr(threading, name) for name in _FACTORIES}
+
+
+def _creation_site(root: str) -> Optional[Tuple[str, int]]:
+    """(normalized file, line) of the nearest stack frame under `root`,
+    or None when the lock is created by stdlib internals (Event, Queue,
+    ...) — those are not part of the static model and stay unproxied."""
+    stack = traceback.extract_stack()
+    # skip this helper + the factory wrapper frames at the top
+    for frame in reversed(stack[:-2]):
+        posix = frame.filename.replace("\\", "/")
+        idx = posix.find(root)
+        if idx >= 0 and "/analysis/" not in posix[idx:]:
+            return posix[idx:], frame.lineno
+        if "/threading.py" in posix or "/queue.py" in posix \
+                or "/concurrent/" in posix:
+            return None
+        # any non-repo frame between us and the factory means the lock
+        # belongs to that library, not to repo code
+        return None
+    return None
+
+
+class _LockProxy:
+    """Recording wrapper around a real Lock/RLock. Delegates the private
+    Condition protocol (`_is_owned`/`_release_save`/`_acquire_restore`)
+    so ``threading.Condition(proxy)`` works, including RLock recursion
+    save/restore around ``wait()``."""
+
+    def __init__(self, real, site: Tuple[str, int],
+                 recorder: "LockOrderRecorder"):
+        self._real = real
+        self.site = f"{site[0]}:{site[1]}"
+        self._recorder = recorder
+
+    def acquire(self, blocking=True, timeout=-1):
+        ok = self._real.acquire(blocking, timeout)
+        if ok:
+            self._recorder._note_acquire(self)
+        return ok
+
+    def release(self):
+        self._recorder._note_release(self)
+        self._real.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def locked(self):
+        return self._real.locked()
+
+    # Condition protocol -------------------------------------------------
+    def _is_owned(self):
+        if hasattr(self._real, "_is_owned"):
+            return self._real._is_owned()
+        if self._real.acquire(False):
+            self._real.release()
+            return False
+        return True
+
+    def _release_save(self):
+        self._recorder._note_release(self, full=True)
+        if hasattr(self._real, "_release_save"):
+            return self._real._release_save()
+        self._real.release()
+        return None
+
+    def _acquire_restore(self, state):
+        if hasattr(self._real, "_acquire_restore"):
+            self._real._acquire_restore(state)
+        else:
+            self._real.acquire()
+        self._recorder._note_acquire(self)
+
+
+class LockOrderRecorder:
+    """Context manager: record actual lock-acquisition order of every
+    lock created by repo code while active."""
+
+    def __init__(self, root: str = "src/repro"):
+        self.root = root
+        self.edges: Dict[Tuple[str, str], int] = {}   # (a, b) -> count
+        self.sites: Set[str] = set()
+        self._tls = threading.local()
+        self._elock = _REAL["Lock"]()
+
+    # -- factory patching ------------------------------------------------
+    def __enter__(self):
+        rec = self
+
+        def make(kind):
+            real_factory = _REAL[kind]
+
+            def factory(*args, **kwargs):
+                site = _creation_site(rec.root)
+                if site is None:
+                    return real_factory(*args, **kwargs)
+                if kind == "Condition":
+                    lock = args[0] if args else kwargs.get("lock")
+                    if lock is None:
+                        lock = _LockProxy(_REAL["RLock"](), site, rec)
+                        rec.sites.add(lock.site)
+                    return real_factory(lock)
+                proxy = _LockProxy(real_factory(), site, rec)
+                rec.sites.add(proxy.site)
+                return proxy
+
+            return factory
+
+        for name in _FACTORIES:
+            setattr(threading, name, make(name))
+        return self
+
+    def __exit__(self, *exc):
+        for name in _FACTORIES:
+            setattr(threading, name, _REAL[name])
+        return False
+
+    # -- recording -------------------------------------------------------
+    def _held(self) -> List[List]:
+        held = getattr(self._tls, "held", None)
+        if held is None:
+            held = self._tls.held = []
+        return held
+
+    def _note_acquire(self, proxy: _LockProxy):
+        held = self._held()
+        for entry in held:
+            if entry[0] is proxy:
+                entry[1] += 1          # reentrant re-acquire: no edge
+                return
+        if held:
+            with self._elock:
+                for entry in held:
+                    if entry[0].site != proxy.site:
+                        key = (entry[0].site, proxy.site)
+                        self.edges[key] = self.edges.get(key, 0) + 1
+        held.append([proxy, 1])
+
+    def _note_release(self, proxy: _LockProxy, full: bool = False):
+        held = self._held()
+        for i in range(len(held) - 1, -1, -1):
+            if held[i][0] is proxy:
+                held[i][1] = 0 if full else held[i][1] - 1
+                if held[i][1] <= 0:
+                    held.pop(i)
+                return
+
+    # -- cross-check -----------------------------------------------------
+    def check_against(self, model) -> List[str]:
+        """Violations of the static lock model: unknown lock sites and
+        observed edges that close a cycle with the static graph."""
+        problems: List[str] = []
+        observed = set(self.edges)
+        static_sites = model.sites()
+        for a, b in sorted(observed):
+            for site in (a, b):
+                if site not in static_sites:
+                    problems.append(
+                        f"runtime lock at {site} unknown to the static "
+                        f"model (missing threading.* assignment "
+                        f"discovery?)")
+        # merged graph must be acyclic: an observed edge b->a closing a
+        # static (or observed) path a->b is an ordering inversion
+        merged = observed | model.edge_pairs()
+
+        def has_path(graph, a, b):
+            seen, stack = set(), [a]
+            while stack:
+                n = stack.pop()
+                if n == b:
+                    return True
+                if n in seen:
+                    continue
+                seen.add(n)
+                stack.extend(y for (x, y) in graph if x == n)
+            return False
+
+        for a, b in sorted(observed):
+            if has_path(merged - {(a, b)}, b, a):
+                problems.append(
+                    f"lock-order inversion: observed {a} -> {b} but the "
+                    f"graph already orders {b} before {a}")
+        return sorted(set(problems))
+
+
+class RecompileSentinel:
+    """Jit cache-miss counter: track callables, ``mark()`` after warmup,
+    then ``new_compiles()`` reports any steady-state retrace."""
+
+    def __init__(self):
+        self._fns: Dict[str, object] = {}
+        self._base: Dict[str, int] = {}
+
+    @staticmethod
+    def _size(fn) -> Optional[int]:
+        for probe in ("_cache_size",):
+            f = getattr(fn, probe, None)
+            if callable(f):
+                try:
+                    return int(f())
+                except Exception:       # pragma: no cover
+                    pass
+        return None
+
+    def track(self, name: str, fn) -> bool:
+        if fn is None or self._size(fn) is None:
+            return False
+        self._fns[name] = fn
+        self._base[name] = self._size(fn)
+        return True
+
+    def track_engine(self, engine) -> List[str]:
+        """Track every jitted callable a continuous engine owns."""
+        tracked = []
+        for attr in ("_step_fn", "_refill_fn", "_splice_fn", "_snap_fn",
+                     "_restore_fn", "_write_adapter_fn", "_prefill_fn",
+                     "_first_fn"):
+            if self.track(attr, getattr(engine, attr, None)):
+                tracked.append(attr)
+        kern = getattr(engine, "_prefill_kernels", None)
+        if kern is not None:
+            for attr in ("whole", "chunk", "finish"):
+                if self.track(f"prefill.{attr}", getattr(kern, attr, None)):
+                    tracked.append(f"prefill.{attr}")
+        return tracked
+
+    def mark(self):
+        for name, fn in self._fns.items():
+            self._base[name] = self._size(fn)
+
+    def new_compiles(self) -> Dict[str, int]:
+        out = {}
+        for name, fn in self._fns.items():
+            delta = (self._size(fn) or 0) - self._base[name]
+            if delta > 0:
+                out[name] = delta
+        return out
+
+    def cache_sizes(self) -> Dict[str, int]:
+        return {name: self._size(fn) or 0
+                for name, fn in self._fns.items()}

@@ -1,0 +1,488 @@
+"""RA2xx — JAX trace-hygiene checks.
+
+Finds jitted functions (``jax.jit(f)`` / ``jax.jit(lambda ...)`` /
+``@jax.jit`` / ``@partial(jax.jit, static_argnums=...)``) and taint-walks
+their bodies: every non-static positional parameter is a tracer. Keyword-
+only parameters are treated as static configuration (the repo binds them
+via ``functools.partial`` at pallas_call/jit construction time), and
+``.shape`` / ``.ndim`` / ``.dtype`` / ``len()`` stop taint — those are
+Python values at trace time.
+
+  RA201  ``if`` / ``while`` / ``assert`` / ternary on a traced value
+         (needs ``jnp.where`` / ``lax.cond`` / checkify instead)
+  RA202  host sync on a tracer: ``float()/int()/bool()`` of a traced
+         value, ``np.*`` called on one, ``.item()`` / ``.tolist()``
+  RA203  mutation of captured state inside a jitted closure
+         (``self.x = ...`` / ``global``-declared names) — silently traces
+         once and never updates again
+  RA204  recompile hazards at jit CALL sites: an argument whose shape
+         expression derives from an unbucketed ``len(...)`` — every new
+         length is a fresh trace signature in the decode hot loop. Shapes
+         routed through ``_bucket_len`` / ``_pad_to`` / ``pages_for`` or
+         pow2 growth (``W *= 2``) are considered bucketed.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple, Union
+
+from .core import Finding, SourceFile
+
+_FnNode = Union[ast.FunctionDef, ast.Lambda]
+
+
+@dataclass
+class _Jitted:
+    fn: _FnNode
+    static_idx: Set[int] = field(default_factory=set)
+    static_names: Set[str] = field(default_factory=set)
+
+
+def _is_jit_func(f: ast.expr) -> bool:
+    if isinstance(f, ast.Attribute) and f.attr == "jit" and \
+            isinstance(f.value, ast.Name) and f.value.id == "jax":
+        return True
+    return isinstance(f, ast.Name) and f.id == "jit"
+
+
+def _jit_call_of(node: ast.expr) -> Optional[ast.Call]:
+    """The ``jax.jit(...)`` call inside `node`, unwrapping
+    ``partial(jax.jit, ...)``."""
+    if not isinstance(node, ast.Call):
+        return None
+    if _is_jit_func(node.func):
+        return node
+    f = node.func
+    is_partial = (isinstance(f, ast.Name) and f.id == "partial") or \
+        (isinstance(f, ast.Attribute) and f.attr == "partial")
+    if is_partial and node.args and _is_jit_func(node.args[0]):
+        return node
+    return None
+
+
+def _static_spec(call: ast.Call) -> Tuple[Set[int], Set[str]]:
+    idx: Set[int] = set()
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            vals = kw.value.elts if isinstance(kw.value, ast.Tuple) \
+                else [kw.value]
+            idx.update(v.value for v in vals
+                       if isinstance(v, ast.Constant)
+                       and isinstance(v.value, int))
+        elif kw.arg == "static_argnames":
+            vals = kw.value.elts if isinstance(kw.value, (ast.Tuple,
+                                                          ast.List)) \
+                else [kw.value]
+            names.update(v.value for v in vals
+                         if isinstance(v, ast.Constant)
+                         and isinstance(v.value, str))
+    return idx, names
+
+
+class _JitFinder(ast.NodeVisitor):
+    """Scoped resolver: `jax.jit(step)` binds to the `def step` visible in
+    the enclosing scope chain (builders reuse local names like `step`)."""
+
+    def __init__(self):
+        self.scopes: List[Dict[str, ast.FunctionDef]] = [{}]
+        self.found: Dict[int, _Jitted] = {}
+
+    def _resolve(self, name: str) -> Optional[ast.FunctionDef]:
+        for scope in reversed(self.scopes):
+            if name in scope:
+                return scope[name]
+        return None
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        self.scopes[-1][node.name] = node
+        for dec in node.decorator_list:
+            if _is_jit_func(dec):
+                self._add(node, set(), set())
+            else:
+                call = _jit_call_of(dec)
+                if call is not None:
+                    self._add(node, *_static_spec(call))
+        self.scopes.append({})
+        self.generic_visit(node)
+        self.scopes.pop()
+
+    def visit_Call(self, node: ast.Call):
+        call = _jit_call_of(node)
+        if call is not None:
+            # target is the first non-jit positional arg
+            args = [a for a in call.args if not _is_jit_func(a)]
+            if args:
+                target = args[0]
+                if isinstance(target, ast.Lambda):
+                    self._add(target, *_static_spec(call))
+                elif isinstance(target, ast.Name):
+                    fn = self._resolve(target.id)
+                    if fn is not None:
+                        self._add(fn, *_static_spec(call))
+        self.generic_visit(node)
+
+    def _add(self, fn: _FnNode, idx: Set[int], names: Set[str]):
+        j = self.found.setdefault(id(fn), _Jitted(fn))
+        j.static_idx |= idx
+        j.static_names |= names
+
+
+_TAINT_STOP_ATTRS = {"shape", "ndim", "dtype", "size"}
+_UNTAINTED_CALLS = {"len", "isinstance", "type", "range", "enumerate",
+                    "zip", "hasattr", "getattr"}
+
+
+class _Taint:
+    """Expression taintedness relative to a set of traced names."""
+
+    def __init__(self, tainted: Set[str]):
+        self.tainted = tainted
+
+    def expr(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Attribute):
+            if node.attr in _TAINT_STOP_ATTRS:
+                return False
+            return self.expr(node.value)
+        if isinstance(node, ast.Call):
+            fname = None
+            if isinstance(node.func, ast.Name):
+                fname = node.func.id
+            elif isinstance(node.func, ast.Attribute):
+                fname = node.func.attr
+            if fname in _UNTAINTED_CALLS:
+                return False
+            args_tainted = any(self.expr(a) for a in node.args) or \
+                any(self.expr(k.value) for k in node.keywords)
+            if isinstance(node.func, ast.Attribute):
+                return args_tainted or self.expr(node.func.value)
+            return args_tainted
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                   for op in node.ops):
+                return False
+            return self.expr(node.left) or \
+                any(self.expr(c) for c in node.comparators)
+        if isinstance(node, ast.Subscript):
+            return self.expr(node.value) or self.expr(node.slice)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.expr(e) for e in node.elts)
+        if isinstance(node, ast.Dict):
+            return any(self.expr(v) for v in node.values if v is not None)
+        if isinstance(node, ast.Lambda):
+            return False
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr) and self.expr(child):
+                return True
+        return False
+
+    def first_name(self, node: ast.expr) -> str:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Name) and n.id in self.tainted:
+                return n.id
+        return "<traced>"
+
+
+class _TraceChecker:
+    """RA201/202/203 over one jitted function body."""
+
+    def __init__(self, src: SourceFile, jit: _Jitted,
+                 findings: List[Finding]):
+        self.src = src
+        self.findings = findings
+        self.jit = jit
+        fn = jit.fn
+        self.globals_decl: Set[str] = set()
+        params = self._params(fn)
+        tainted = set()
+        for i, name in enumerate(params):
+            if name == "self" or i in jit.static_idx \
+                    or name in jit.static_names:
+                continue
+            tainted.add(name)
+        self.taint = _Taint(tainted)
+
+    @staticmethod
+    def _params(fn: _FnNode) -> List[str]:
+        a = fn.args
+        return [p.arg for p in (a.posonlyargs + a.args)]
+
+    def _emit(self, rule: str, line: int, msg: str):
+        self.findings.append(Finding(rule, self.src.rel, line, msg))
+
+    def run(self):
+        body = self.jit.fn.body
+        if isinstance(self.jit.fn, ast.Lambda):
+            self._expr_checks(body)
+            return
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt):
+        t = self.taint
+        if isinstance(stmt, (ast.Global, ast.Nonlocal)):
+            self.globals_decl.update(stmt.names)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            if t.expr(stmt.test):
+                kw = "if" if isinstance(stmt, ast.If) else "while"
+                self._emit("RA201", stmt.lineno,
+                           f"Python `{kw}` on traced value "
+                           f"`{t.first_name(stmt.test)}` in jitted function")
+            self._expr_checks(stmt.test)
+        elif isinstance(stmt, ast.Assert):
+            if t.expr(stmt.test):
+                self._emit("RA201", stmt.lineno,
+                           f"`assert` on traced value "
+                           f"`{t.first_name(stmt.test)}` in jitted function")
+            self._expr_checks(stmt.test)
+        elif isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            self._assign(stmt)
+        elif isinstance(stmt, ast.For):
+            if t.expr(stmt.iter):
+                for n in ast.walk(stmt.target):
+                    if isinstance(n, ast.Name):
+                        t.tainted.add(n.id)
+            self._expr_checks(stmt.iter)
+        elif isinstance(stmt, ast.FunctionDef):
+            # nested def (loop body for fori/scan): params are tracers too
+            nested = _Jitted(stmt)
+            sub = _TraceChecker(self.src, nested, self.findings)
+            sub.taint.tainted |= self.taint.tainted
+            sub.run()
+            return
+        elif isinstance(stmt, (ast.Return, ast.Expr)):
+            if stmt.value is not None:
+                self._expr_checks(stmt.value)
+        # recurse into compound bodies
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.stmt):
+                self._stmt(child)
+            elif isinstance(child, (ast.excepthandler,)):
+                for s in child.body:
+                    self._stmt(s)
+
+    def _assign(self, stmt):
+        t = self.taint
+        value = stmt.value
+        if value is not None:
+            self._expr_checks(value)
+        tainted_val = value is not None and t.expr(value)
+        targets = stmt.targets if isinstance(stmt, ast.Assign) \
+            else [stmt.target]
+        for tgt in targets:
+            if isinstance(tgt, ast.Attribute):
+                root = tgt
+                while isinstance(root, (ast.Attribute, ast.Subscript)):
+                    root = root.value
+                if isinstance(root, ast.Name) and (
+                        root.id == "self"
+                        or root.id in self.globals_decl):
+                    self._emit("RA203", stmt.lineno,
+                               f"mutation of captured `{ast.unparse(tgt)}` "
+                               f"inside jitted function (traced once, "
+                               f"never re-runs)")
+            elif isinstance(tgt, ast.Name):
+                if tgt.id in self.globals_decl:
+                    self._emit("RA203", stmt.lineno,
+                               f"assignment to global `{tgt.id}` inside "
+                               f"jitted function (traced once, never "
+                               f"re-runs)")
+                elif isinstance(stmt, ast.AugAssign):
+                    if tainted_val:
+                        t.tainted.add(tgt.id)
+                elif tainted_val:
+                    t.tainted.add(tgt.id)
+                else:
+                    t.tainted.discard(tgt.id)
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                for e in tgt.elts:
+                    if isinstance(e, ast.Name):
+                        if tainted_val:
+                            t.tainted.add(e.id)
+                        else:
+                            t.tainted.discard(e.id)
+
+    def _expr_checks(self, expr: ast.expr):
+        t = self.taint
+        stack: List[ast.AST] = [expr]
+        while stack:
+            node = stack.pop()
+            if isinstance(node, ast.Lambda):
+                nested = _Jitted(node)
+                sub = _TraceChecker(self.src, nested, self.findings)
+                sub.taint.tainted |= t.tainted
+                sub._expr_checks(node.body)
+                continue
+            if isinstance(node, ast.IfExp) and t.expr(node.test):
+                self._emit("RA201", node.lineno,
+                           f"ternary on traced value "
+                           f"`{t.first_name(node.test)}` in jitted function")
+            elif isinstance(node, ast.Call):
+                self._host_sync(node)
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _host_sync(self, node: ast.Call):
+        t = self.taint
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in ("float", "int", "bool") \
+                and node.args and t.expr(node.args[0]):
+            self._emit("RA202", node.lineno,
+                       f"`{f.id}()` on traced value "
+                       f"`{t.first_name(node.args[0])}` forces host sync")
+        elif isinstance(f, ast.Attribute):
+            if f.attr in ("item", "tolist") and t.expr(f.value):
+                self._emit("RA202", node.lineno,
+                           f"`.{f.attr}()` on traced value "
+                           f"`{t.first_name(f.value)}` forces host sync")
+            elif isinstance(f.value, ast.Name) \
+                    and f.value.id in ("np", "numpy") \
+                    and any(t.expr(a) for a in node.args):
+                self._emit("RA202", node.lineno,
+                           f"`np.{f.attr}(...)` on traced value "
+                           f"`{t.first_name(node.args[0])}` forces "
+                           f"host sync")
+
+
+# -- RA204: recompile hazards at jit call sites --------------------------
+
+_BUCKET_MARKERS = ("bucket", "pad", "pages_for")
+# scalar-cast callees: `jnp.int32(len(x))` is a VALUE, not a shape
+_CAST_FUNCS = {"int", "float", "bool", "int8", "int16", "int32", "int64",
+               "uint8", "uint16", "uint32", "uint64", "float16", "float32",
+               "float64", "bfloat16", "bool_"}
+
+
+def _jit_value_names(files: List[SourceFile]) -> Set[str]:
+    """Names (locals and attributes) known to hold jitted callables:
+    direct ``x = jax.jit(...)`` / ``self.f = jax.jit(...)`` assignments,
+    plus attributes assigned from builder functions that return jitted
+    callables (``self._step_fn = _build_cont_step_fn(...)``)."""
+    names: Set[str] = set()
+    builders: Set[str] = set()
+    for src in files:
+        # builders: module functions whose return value is (a tuple of)
+        # jax.jit(...) calls or names assigned from them
+        for node in src.tree.body:
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            jit_locals = {s.targets[0].id
+                          for s in ast.walk(node)
+                          if isinstance(s, ast.Assign)
+                          and len(s.targets) == 1
+                          and isinstance(s.targets[0], ast.Name)
+                          and _jit_call_of(s.value) is not None}
+            for ret in ast.walk(node):
+                if not isinstance(ret, ast.Return) or ret.value is None:
+                    continue
+                vals = ret.value.elts if isinstance(ret.value, ast.Tuple) \
+                    else [ret.value]
+                for v in vals:
+                    if _jit_call_of(v) is not None or (
+                            isinstance(v, ast.Name) and v.id in jit_locals):
+                        builders.add(node.name)
+                        break
+    for src in files:
+        for node in ast.walk(src.tree):
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+                continue
+            tgt = node.targets[0]
+            val = node.value
+            is_jit = _jit_call_of(val) is not None
+            from_builder = (isinstance(val, ast.Call)
+                            and isinstance(val.func, ast.Name)
+                            and val.func.id in builders)
+            if not (is_jit or from_builder):
+                continue
+            tgts = tgt.elts if isinstance(tgt, (ast.Tuple, ast.List)) \
+                else [tgt]
+            for x in tgts:
+                if isinstance(x, ast.Name):
+                    names.add(x.id)
+                elif isinstance(x, ast.Attribute):
+                    names.add(x.attr)
+    return names
+
+
+class _HazardScan:
+    def __init__(self, src: SourceFile, jit_names: Set[str],
+                 findings: List[Finding]):
+        self.src = src
+        self.jit_names = jit_names
+        self.findings = findings
+
+    def run(self):
+        for node in ast.walk(self.src.tree):
+            if isinstance(node, ast.FunctionDef):
+                self._function(node)
+
+    def _function(self, fn: ast.FunctionDef):
+        assign_map: Dict[str, ast.expr] = {}
+        pow2: Set[str] = set()
+        for s in ast.walk(fn):
+            if isinstance(s, ast.Assign) and len(s.targets) == 1 \
+                    and isinstance(s.targets[0], ast.Name):
+                assign_map[s.targets[0].id] = s.value
+            elif isinstance(s, ast.AugAssign) \
+                    and isinstance(s.target, ast.Name) \
+                    and isinstance(s.op, ast.Mult):
+                pow2.add(s.target.id)   # W *= 2: pow2-bucketed width
+
+        def hazardous(expr: ast.expr, seen: Set[str], depth: int) -> bool:
+            stack: List[ast.AST] = [expr]
+            while stack:
+                n = stack.pop()
+                if isinstance(n, (ast.List, ast.ListComp)):
+                    continue   # data literal: its LENGTH is the shape
+                if isinstance(n, ast.Call):
+                    fname = (n.func.id if isinstance(n.func, ast.Name)
+                             else n.func.attr
+                             if isinstance(n.func, ast.Attribute) else "")
+                    if any(m in fname for m in _BUCKET_MARKERS) \
+                            or fname in _CAST_FUNCS:
+                        continue   # bucketed subtree / scalar value cast
+                    if fname == "len":
+                        return True
+                if isinstance(n, ast.Name) and n.id not in seen \
+                        and n.id not in pow2 and depth < 4 \
+                        and n.id in assign_map:
+                    if hazardous(assign_map[n.id], seen | {n.id},
+                                 depth + 1):
+                        return True
+                stack.extend(ast.iter_child_nodes(n))
+            return False
+
+        reported: Set[int] = set()
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            name = (f.attr if isinstance(f, ast.Attribute)
+                    else f.id if isinstance(f, ast.Name) else None)
+            if name not in self.jit_names or node.lineno in reported:
+                continue
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                if hazardous(arg, set(), 0):
+                    reported.add(node.lineno)
+                    self.findings.append(Finding(
+                        "RA204", self.src.rel, node.lineno,
+                        f"jit call `{name}` takes an argument derived "
+                        f"from unbucketed `len(...)` — per-step shape "
+                        f"variation recompiles"))
+                    break
+
+
+def check(files: List[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    jit_names = _jit_value_names(files)
+    for src in files:
+        finder = _JitFinder()
+        finder.visit(src.tree)
+        for jit in finder.found.values():
+            _TraceChecker(src, jit, findings).run()
+        _HazardScan(src, jit_names, findings).run()
+    return findings

@@ -74,7 +74,7 @@ class MultiTaskManager:
         self.clock = clock or time.monotonic
         self.tasks: Dict[str, TaskState] = {}
         self.q_buffer: Deque[TrajectoryBatch] = deque()
-        self._lock = threading.RLock()
+        self._lock = threading.RLock()  # guards: q_buffer
         self._cv = threading.Condition(self._lock)
 
     # -- task lifecycle -------------------------------------------------

@@ -81,7 +81,10 @@ class MetricsRecorder:
         self.counters: Dict[str, int] = {}    # preemption/eviction/replay...
         self.t0: Optional[float] = None
         self.t1: Optional[float] = None
-        self._lock = threading.Lock()   # prefill workers record concurrently
+        # prefill workers record concurrently with the decode/train threads
+        self._lock = threading.Lock()   # guards: intervals/slot_samples/
+                                        # queue_samples/env_samples/
+                                        # page_samples/counters
 
     def incr(self, name: str, n: int = 1):
         """Count a scheduler event (preemptions, adapter_evictions,
@@ -105,18 +108,21 @@ class MetricsRecorder:
         timeline: the value holds until the next sample)."""
         if capacity <= 0:
             return
-        self.slot_samples.append((t, occupied, capacity))
+        with self._lock:
+            self.slot_samples.append((t, occupied, capacity))
 
     def record_queue_sample(self, t: float, prefill_q: int, ready_q: int):
         """Point sample of the disaggregated prefill stage's queue depths
         (waiting+in-prefill, ready-to-splice); step-function timeline like
         the slot samples."""
-        self.queue_samples.append((t, prefill_q, ready_q))
+        with self._lock:
+            self.queue_samples.append((t, prefill_q, ready_q))
 
     def record_env_sample(self, t: float, waiting: int, executing: int):
         """Point sample of the env-interaction stage's queue depths
         (requests waiting for a worker, tool calls executing)."""
-        self.env_samples.append((t, waiting, executing))
+        with self._lock:
+            self.env_samples.append((t, waiting, executing))
 
     def record_page_sample(self, t: float, used: int, total: int,
                            frag: float):
@@ -125,12 +131,14 @@ class MetricsRecorder:
         live cache entries); step-function timeline like the others."""
         if total <= 0:
             return
-        self.page_samples.append((t, used, total, frag))
+        with self._lock:
+            self.page_samples.append((t, used, total, frag))
 
     def page_pool_stats(self) -> Dict[str, float]:
         """Time-weighted occupancy (used/total) and fragmentation of the
         paged KV pool over the run (empty dict in dense-cache mode)."""
-        ps = self.page_samples
+        with self._lock:
+            ps = list(self.page_samples)
         if len(ps) < 2:
             return {}
         occ_w = frag_w = total = 0.0
@@ -168,24 +176,28 @@ class MetricsRecorder:
     def queue_depth_stats(self) -> Dict[str, float]:
         """Time-weighted mean + max depth per stage queue over the run
         (prefill + ready queues, and the env stage's queues if sampled)."""
-        out = self._depth_stats(self.queue_samples,
-                                ("prefill_q", "ready_q"))
-        out.update(self._depth_stats(self.env_samples,
-                                     ("env_q", "env_exec")))
+        with self._lock:
+            qs = list(self.queue_samples)
+            es = list(self.env_samples)
+        out = self._depth_stats(qs, ("prefill_q", "ready_q"))
+        out.update(self._depth_stats(es, ("env_q", "env_exec")))
         return out
 
     # -- environment-interaction accounting -----------------------------
     def env_wait_seconds(self) -> float:
         """Σ env-interval durations: row-seconds spent blocked on external
         tools/judges (the per-task split is env_wait_by_task)."""
-        return sum(iv.end - iv.start for iv in self.intervals
-                   if iv.phase == "env")
+        with self._lock:
+            return sum(iv.end - iv.start for iv in self.intervals
+                       if iv.phase == "env")
 
     def env_wait_by_task(self) -> Dict[str, float]:
         """Per-tenant env-interaction wait seconds (satellite: the global
         aggregate hid which tenant's tools were slow)."""
         out: Dict[str, float] = {}
-        for iv in self.intervals:
+        with self._lock:
+            ivs = list(self.intervals)
+        for iv in ivs:
             if iv.phase == "env":
                 out[iv.task_id] = out.get(iv.task_id, 0.0) + (iv.end - iv.start)
         return out
@@ -193,8 +205,9 @@ class MetricsRecorder:
     def env_busy_seconds(self) -> float:
         """Merged union of env intervals: wall time with at least one tool
         call outstanding (concurrent calls counted once)."""
-        spans = sorted((iv.start, iv.end) for iv in self.intervals
-                       if iv.phase == "env")
+        with self._lock:
+            spans = sorted((iv.start, iv.end) for iv in self.intervals
+                           if iv.phase == "env")
         busy, cur_s, cur_e = 0.0, None, None
         for s, e in spans:
             if cur_e is None or s > cur_e:
@@ -209,7 +222,8 @@ class MetricsRecorder:
 
     def slot_utilization_pct(self) -> float:
         """Time-weighted mean of occupied/capacity over the sampled span."""
-        ss = self.slot_samples
+        with self._lock:
+            ss = list(self.slot_samples)
         if len(ss) < 2:
             return 0.0
         weighted = total = 0.0
@@ -230,18 +244,22 @@ class MetricsRecorder:
 
     def busy_device_seconds(self, pool: str = None,
                             phase: str = None) -> float:
-        return sum((iv.end - iv.start) * iv.devices for iv in self.intervals
-                   if iv.phase != "env" and (pool is None or iv.pool == pool)
-                   and (phase is None or iv.phase == phase))
+        with self._lock:
+            return sum((iv.end - iv.start) * iv.devices
+                       for iv in self.intervals
+                       if iv.phase != "env"
+                       and (pool is None or iv.pool == pool)
+                       and (phase is None or iv.phase == phase))
 
     def utilization_pct(self) -> float:
         """AI-core utilization (paper Table 3 definition)."""
         total = self.total_device_seconds()
         if total <= 0:
             return 0.0
-        weighted = sum((iv.end - iv.start) * iv.devices
-                       * PHASE_INTENSITY.get(iv.phase, 0.3)
-                       for iv in self.intervals)
+        with self._lock:
+            weighted = sum((iv.end - iv.start) * iv.devices
+                           * PHASE_INTENSITY.get(iv.phase, 0.3)
+                           for iv in self.intervals)
         return 100.0 * weighted / total
 
     def idle_pct(self) -> float:
@@ -250,10 +268,12 @@ class MetricsRecorder:
         if total <= 0:
             return 0.0
         busy = 0.0
+        with self._lock:
+            ivs = list(self.intervals)
         for pool, ndev in self.pools.items():
             # merge overlapping intervals weighted by occupied devices
             evs: List[Tuple[float, float]] = []
-            for iv in self.intervals:
+            for iv in ivs:
                 if iv.pool != pool or iv.phase == "env":
                     continue
                 evs.append((iv.start, min(iv.devices, ndev)))
@@ -308,6 +328,8 @@ def summarize(manager, rec: MetricsRecorder) -> Dict[str, float]:
     # (n_restores / n_replays / n_replay_tokens_saved / n_snapshot_drops)
     out.update(rec.page_pool_stats())
     # scheduler event counters (zero-valued keys omitted: absent == 0)
-    for name, n in sorted(rec.counters.items()):
+    with rec._lock:
+        counters = dict(rec.counters)
+    for name, n in sorted(counters.items()):
         out[f"n_{name}"] = float(n)
     return out

@@ -70,7 +70,9 @@ than stalling the batch.
 """
 from __future__ import annotations
 
+import faulthandler
 import random
+import sys
 import threading
 import time
 from collections import deque
@@ -92,6 +94,26 @@ from repro.train.train_step import TrainConfig, init_opt_state, make_train_step
 from .admission import AdmissionConfig, AdmissionController
 from .manager import MultiTaskManager, TaskSpec
 from .metrics import MetricsRecorder
+
+
+def join_or_raise(threads: List[threading.Thread], timeout_s: float = 10.0):
+    """Join `threads` within one shared deadline; raise loudly on leaks.
+
+    A thread still alive after the stop flag + join timeout is a wedged
+    stage (deadlocked lock, stuck tool call, hung device op). Silently
+    returning would leak it into the caller's process — later runs then
+    fight it for slots/devices and failures surface far from the cause.
+    Instead: dump every thread's stack (faulthandler) and raise."""
+    deadline = time.monotonic() + timeout_s
+    for t in threads:
+        t.join(timeout=max(0.0, deadline - time.monotonic()))
+    leaked = [t for t in threads if t.is_alive()]
+    if leaked:
+        names = ", ".join(t.name for t in leaked)
+        faulthandler.dump_traceback(file=sys.stderr)
+        raise RuntimeError(
+            f"runtime thread(s) still alive {timeout_s:.0f}s after stop: "
+            f"{names} — all thread stacks dumped to stderr")
 
 
 @dataclass
@@ -645,8 +667,10 @@ class MARLaaSRuntime:
             raise self.error
 
     def _run_async(self, timeout_s):
-        rt = threading.Thread(target=self._rollout_loop, daemon=True)
-        tt = threading.Thread(target=self._train_loop, daemon=True)
+        rt = threading.Thread(target=self._rollout_loop, daemon=True,
+                              name="marlaas-rollout")
+        tt = threading.Thread(target=self._train_loop, daemon=True,
+                              name="marlaas-train")
         rt.start(); tt.start()
         deadline = time.monotonic() + timeout_s
         while time.monotonic() < deadline:
@@ -657,7 +681,7 @@ class MARLaaSRuntime:
             self._admission_tick()
             time.sleep(0.01)
         self._stop.set()
-        rt.join(timeout=10); tt.join(timeout=10)
+        join_or_raise([rt, tt], timeout_s=10.0)
 
     def _run_sync(self, timeout_s):
         """Barrier rounds: fused rollout for all, then train all, repeat."""

@@ -926,8 +926,8 @@ class ContinuousRolloutEngine:
         self._n_submitted = 0
         self.stats = RolloutStats()
         # -- disaggregated prefill stage (workers <-> decode thread) -------
-        self._stage_lock = threading.Lock()   # guards _sched/_ready/
-                                              # _stage_inflight/stage stats
+        self._stage_lock = threading.Lock()   # guards: _sched/_ready/
+                                              # _stage_inflight
         self._ready: Deque[ReadyRow] = deque()
         self._stage_inflight: List[_Row] = []  # popped by a worker, not yet
                                                # ready (host refs only)
@@ -1464,7 +1464,9 @@ class ContinuousRolloutEngine:
         generated prefix in one sequence and samples token `len(gen)` with
         counter `len(gen)` — bit-identical continuation."""
         free = [s for s in range(self.max_slots) if self._rows[s] is None]
-        if not free or not self._sched:
+        with self._stage_lock:
+            has_queued = bool(self._sched)
+        if not free or not has_queued:
             return False
         self._ensure_built()
         if self._stacked is None:

@@ -129,7 +129,8 @@ class EnvStage:
         self.n_workers = n_workers
         self.max_inflight_per_tenant = max_inflight_per_tenant  # 0 = off
         self.sim_latency = sim_latency
-        self._cond = threading.Condition()
+        self._cond = threading.Condition()  # guards: _queue/_executing/
+                                            # _done/_inflight
         self._queue: Deque[EnvJob] = deque()      # FIFO request queue
         self._executing: Dict[int, EnvJob] = {}   # id(job) -> job
         self._done: Deque[EnvJob] = deque()       # response queue
@@ -270,7 +271,7 @@ class EnvStage:
             self._cond.notify_all()
 
     # -- introspection ----------------------------------------------------
-    def _live_executing(self) -> List[EnvJob]:
+    def _live_executing(self) -> List[EnvJob]:  # held: _cond
         """Executing jobs whose row is still in flight. A cancelled job's
         row already completed (tool_timeout/abort) — the worker is merely
         riding out an uninterruptible call whose result will be discarded,

@@ -39,6 +39,7 @@ its stage lock.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -46,27 +47,35 @@ POLICIES = ("fifo", "srpt")
 
 
 class LengthPredictor:
-    """EMA per-tenant predictor of sampled completion length."""
+    """EMA per-tenant predictor of sampled completion length.
+
+    Thread contract: ``observe`` runs on the rollout thread (every evicted
+    row) while the driver thread calls ``predict`` from the admission
+    tick's expected-generation estimate — the EMA dict is the one piece of
+    scheduler state crossing threads, hence its own lock."""
 
     def __init__(self, alpha: float = 0.25):
         if not 0.0 < alpha <= 1.0:
             raise ValueError(f"alpha {alpha} outside (0, 1]")
         self.alpha = alpha
+        self._lock = threading.Lock()   # guards: _ema
         self._ema: Dict[str, float] = {}
 
     def observe(self, tenant: str, sampled_tokens: int):
         """Feed one completed row's sampled-token count."""
-        prev = self._ema.get(tenant)
         x = float(sampled_tokens)
-        self._ema[tenant] = x if prev is None else (
-            self.alpha * x + (1.0 - self.alpha) * prev)
+        with self._lock:
+            prev = self._ema.get(tenant)
+            self._ema[tenant] = x if prev is None else (
+                self.alpha * x + (1.0 - self.alpha) * prev)
 
     def predict(self, tenant: str, budget: int) -> float:
         """Expected sampled length for a row of `tenant` with this budget.
 
         No history -> the full budget (pessimistic prior); with history the
         EMA, still capped by the budget (a row can never exceed it)."""
-        e = self._ema.get(tenant)
+        with self._lock:
+            e = self._ema.get(tenant)
         return float(budget) if e is None else min(float(budget), e)
 
     def remaining(self, tenant: str, budget: int, sampled: int) -> float:
