@@ -93,6 +93,19 @@ def main():
     ap.add_argument("--mix", default="classic", choices=sorted(MIXES),
                     help="tenant env rotation; 'agentic' is the multi-turn "
                          "tool-heavy mix the env stage targets")
+    ap.add_argument("--async-train", action="store_true",
+                    help="event-driven off-policy trainer (ROADMAP §2): "
+                         "train micro-batches the moment enough complete "
+                         "GRPO groups arrive instead of waiting for "
+                         "full-round assembly")
+    ap.add_argument("--max-staleness", type=int, default=1,
+                    help="bounded staleness window in versions (async "
+                         "only): rollout may run this many rounds ahead "
+                         "of the last commit; 0 = on-policy, identical "
+                         "to the synchronous baseline")
+    ap.add_argument("--min-train-rows", type=int, default=0,
+                    help="micro-batch threshold in rows, rounded up to "
+                         "complete GRPO groups (0 = a full round)")
     args = ap.parse_args()
 
     cfg = base_config(args.preset)
@@ -116,7 +129,10 @@ def main():
         kv_page_size=args.kv_page_size,
         kv_pool_pages=args.kv_pool_pages,
         resume_restore=not args.no_resume_restore,
-        snapshot_budget_bytes=args.snapshot_budget_bytes))
+        snapshot_budget_bytes=args.snapshot_budget_bytes,
+        async_train=args.async_train,
+        max_staleness=args.max_staleness,
+        min_train_rows=args.min_train_rows))
     envs = MIXES[args.mix]
     for i in range(args.tasks):
         env = envs[i % len(envs)]

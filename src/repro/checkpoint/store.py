@@ -60,7 +60,7 @@ def flat_to_tree(flat: Dict[str, np.ndarray]):
 def save_checkpoint(directory: str, mgr: MultiTaskManager,
                     step_tag: Optional[str] = None) -> str:
     """Atomic snapshot; returns the snapshot path."""
-    tag = step_tag or f"step_{sum(s.steps_done for s in mgr.tasks.values()):08d}"
+    tag = step_tag or f"step_{mgr.total_steps_done():08d}"
     os.makedirs(directory, exist_ok=True)
     tmp = tempfile.mkdtemp(prefix=".ckpt_tmp_", dir=directory)
     manifest: Dict[str, Any] = {"tag": tag, "time": time.time(), "tasks": {},

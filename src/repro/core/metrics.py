@@ -79,12 +79,22 @@ class MetricsRecorder:
         # (t, used pages, total pages, fragmentation) of the paged KV pool
         self.page_samples: List[Tuple[float, int, int, float]] = []
         self.counters: Dict[str, int] = {}    # preemption/eviction/replay...
+        # trainer hand-off accounting (async off-policy trainer, ROADMAP §2):
+        # spans the trainer spent blocked in pop, and a step-function
+        # timeline of the DISPATCHABLE backlog (whole micro-batches the
+        # trainer could pop right now) — together they measure "trainer
+        # idle while trainable work existed", the quantity the round barrier
+        # wastes. Wait spans are NOT intervals: they must never count as
+        # device-busy time.
+        self.trainer_waits: List[Tuple[float, float]] = []
+        self.backlog_samples: List[Tuple[float, int]] = []  # (t, rows)
         self.t0: Optional[float] = None
         self.t1: Optional[float] = None
         # prefill workers record concurrently with the decode/train threads
         self._lock = threading.Lock()   # guards: intervals/slot_samples/
                                         # queue_samples/env_samples/
-                                        # page_samples/counters
+                                        # page_samples/counters/trainer_waits/
+                                        # backlog_samples
 
     def incr(self, name: str, n: int = 1):
         """Count a scheduler event (preemptions, adapter_evictions,
@@ -133,6 +143,69 @@ class MetricsRecorder:
             return
         with self._lock:
             self.page_samples.append((t, used, total, frag))
+
+    def record_trainer_wait(self, start: float, end: float):
+        """The trainer blocked in pop (no admissible micro-batch) over
+        [start, end). Booked separately from intervals so it can never be
+        mistaken for device-busy time."""
+        if end <= start:
+            return
+        with self._lock:
+            self.trainer_waits.append((start, end))
+
+    def record_train_backlog(self, t: float, rows: int):
+        """Point sample of the dispatchable train backlog — rows sitting
+        in whole micro-batches the trainer could pop right now (complete
+        GRPO groups in ``train_threshold`` multiples per tenant in async
+        mode; assembled Q_buffer rounds in sync mode). Step-function
+        timeline: sampled at every completion routing, pop, and commit,
+        the points where the level can change."""
+        with self._lock:
+            self.backlog_samples.append((t, rows))
+
+    def trainer_idle_stats(self) -> Dict[str, float]:
+        """Trainer idle-while-work-available between the first and last
+        train step: seconds the trainer sat in pop while a dispatchable
+        micro-batch existed, and that as a fraction of the
+        first-commit→last-commit span. Sub-threshold partial assemblies
+        are not dispatchable (no trainer could legally train them), so
+        trickle-in assembly time never counts against the trainer. This
+        is the hand-off latency the event-driven trainer eliminates (the
+        async bench gates on trainer_idle_frac ≈ 0)."""
+        with self._lock:
+            trains = [iv for iv in self.intervals if iv.pool == "train"]
+            waits = list(self.trainer_waits)
+            samples = list(self.backlog_samples)
+        if not trains:
+            return {}
+        t0 = min(iv.start for iv in trains)
+        t1 = max(iv.end for iv in trains)
+        if t1 <= t0:
+            return {}
+        segs: List[Tuple[float, float, int]] = []   # (start, end, backlog)
+        samples.sort()          # engine + trainer threads record concurrently
+        level, last = 0, None
+        for t, lv in samples:
+            if last is not None and t > last:
+                segs.append((last, t, level))
+            level = lv
+            last = t
+        if last is not None:
+            segs.append((last, float("inf"), level))
+        idle = 0.0
+        for ws, we in waits:
+            ws, we = max(ws, t0), min(we, t1)
+            if we <= ws:
+                continue
+            for ss, se, lv in segs:
+                if lv <= 0:
+                    continue
+                s, e = max(ws, ss), min(we, se)
+                if e > s:
+                    idle += e - s
+        return {"trainer_idle_with_work_s": idle,
+                "trainer_span_s": t1 - t0,
+                "trainer_idle_frac": idle / (t1 - t0)}
 
     def page_pool_stats(self) -> Dict[str, float]:
         """Time-weighted occupancy (used/total) and fragmentation of the
@@ -291,11 +364,12 @@ class MetricsRecorder:
 def summarize(manager, rec: MetricsRecorder) -> Dict[str, float]:
     """Standard summary across the paper's metrics."""
     span = rec.span()
-    steps = sum(st.steps_done for st in manager.tasks.values())
+    states = [st for _, st in manager.task_items()]
+    steps = sum(st.steps_done for st in states)
     ttfs = [st.first_step_at - st.submitted_at
-            for st in manager.tasks.values() if st.first_step_at is not None]
+            for st in states if st.first_step_at is not None]
     tpts: List[float] = []
-    for st in manager.tasks.values():
+    for st in states:
         ts = st.step_times
         tpts += [b - a for a, b in zip(ts, ts[1:])]
     out = {
@@ -323,6 +397,9 @@ def summarize(manager, rec: MetricsRecorder) -> Dict[str, float]:
         out["env_wait_s"] = env_wait
         out["env_busy_s"] = rec.env_busy_seconds()
     out.update(rec.queue_depth_stats())
+    # trainer hand-off: idle-while-work-available between first and last
+    # commit (≈0 for the event-driven trainer; the round barrier's waste)
+    out.update(rec.trainer_idle_stats())
     # paged KV pool occupancy/fragmentation gauges (ISSUE 5): absent under
     # the dense cache; restore-vs-replay counts ride the counters below
     # (n_restores / n_replays / n_replay_tokens_saved / n_snapshot_drops)

@@ -77,7 +77,7 @@ def _drive_marlaas(sim: Simulator, mgr: MultiTaskManager,
         # highest-priority pending tenants claim freed budget first (ties
         # keep submission order — pending_tasks preserves it)
         pending = sorted(mgr.pending_tasks(),
-                         key=lambda t: -mgr.tasks[t].spec.priority)
+                         key=lambda t: -mgr.spec_for(t).priority)
         for tid in pending:
             wl = workloads[tid]
             need = adm.workload_bytes(wl.rows, wl.prompt_len + wl.gen_len)
@@ -90,13 +90,13 @@ def _drive_marlaas(sim: Simulator, mgr: MultiTaskManager,
         if np_ is None:
             return
         version, _ = np_
-        st = mgr.tasks[tid]
+        spec = mgr.spec_for(tid)
 
         def on_rollout_done(tid=tid, version=version):
             mgr.enqueue(_fake_batch(tid, version))
             drain_buffer()
 
-        sim.submit_rollout(st.spec, workloads[tid], version, on_rollout_done,
+        sim.submit_rollout(spec, workloads[tid], version, on_rollout_done,
                            multi_lora=multi_lora)
 
     def drain_buffer():
@@ -109,14 +109,13 @@ def _drive_marlaas(sim: Simulator, mgr: MultiTaskManager,
 
             def on_train_done(b=b):
                 mgr.commit(b.task_id, None, None, b.version)
-                st = mgr.tasks[b.task_id]
-                if st.done:
+                if mgr.state(b.task_id).done:
                     adm.release(b.task_id)
                     try_admit()
                 else:
                     issue_rollout(b.task_id)
 
-            sim.submit_train(mgr.tasks[b.task_id].spec,
+            sim.submit_train(mgr.spec_for(b.task_id),
                              workloads[b.task_id], b.version, on_train_done)
 
     sim.schedule(0.0, try_admit)
@@ -150,7 +149,7 @@ def _drive_sync(sim: Simulator, mgr: MultiTaskManager, specs, workloads):
                 if state["outstanding"] == 0:
                     train_all()          # global barrier reached
 
-            sim.submit_rollout(mgr.tasks[tid].spec, workloads[tid], v, on_done)
+            sim.submit_rollout(mgr.spec_for(tid), workloads[tid], v, on_done)
 
     def train_all():
         batches = []
@@ -167,7 +166,7 @@ def _drive_sync(sim: Simulator, mgr: MultiTaskManager, specs, workloads):
                 if remaining["n"] == 0:
                     start_round()
 
-            sim.submit_train(mgr.tasks[b.task_id].spec, workloads[b.task_id],
+            sim.submit_train(mgr.spec_for(b.task_id), workloads[b.task_id],
                              b.version, on_train_done)
         if not batches:
             start_round()
@@ -218,11 +217,11 @@ def _drive_single(sim: Simulator, mgr: MultiTaskManager, specs, workloads,
                 mgr.commit(b.task_id, None, None, b.version)
                 step(b.task_id)
 
-            sim.submit_train(mgr.tasks[b.task_id].spec, workloads[b.task_id],
+            sim.submit_train(mgr.spec_for(b.task_id), workloads[b.task_id],
                              b.version, on_train_done,
                              pool_devices=train_devs)
 
-        sim.submit_rollout(mgr.tasks[tid].spec, workloads[tid], v,
+        sim.submit_rollout(mgr.spec_for(tid), workloads[tid], v,
                            on_rollout_done, multi_lora=False,
                            pool_devices=rollout_devs)
 

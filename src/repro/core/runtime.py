@@ -18,7 +18,26 @@ replaces the dense per-slot cache with the shared page pool):
       stateful ToolSession.call  <────┘  KV pages+SSM state snapshot to
       (cancellable: a timed-out          host, pages freed for the next
        call frees its worker NOW)        occupant)
-               Trainer thread — pops FIFO, runs PolicyUpdate, commits v+1
+               Trainer thread — round-synchronous baseline: pops full
+               rounds off the FIFO Q_buffer; `async_train=True` (ROADMAP
+               §2): drains the per-tenant completed-episode queue the
+               moment `min_train_rows` complete GRPO groups exist, under a
+               `max_staleness` admission window with decoupled-PPO
+               importance weighting — runs PolicyUpdate, commits v+1
+
+Event-driven off-policy trainer (`async_train=True`): each engine
+completion is stamped with the adapter version that generated it (per-row,
+surviving park/preempt/resume) and streams straight into
+`MultiTaskManager.enqueue_episode` — no round assembly on the rollout
+thread. The manager buffers rows until their GRPO group completes, the
+trainer pops per-tenant micro-batches (`min_train_rows` rounded up to
+complete groups; 0 = a full round) as soon as they exist, and rollout may
+run up to `max_staleness + 1` rounds ahead of the last commit so decode
+never drains between commits. Groups beyond the window are dropped and
+counted (`n_stale_rows_dropped`), never trained; groups trained at lag ≥ 1
+get a truncated importance-weight correction (`is_cap`) on the recorded
+behaviour logprobs. With `max_staleness=0` the whole path reduces
+token-for-token to the round-synchronous baseline (property-tested).
 
 Paged KV block pool (`paged_kv=True`, ISSUE 5): attention K/V lives in a
 shared pool of `kv_pool_pages` pages of `kv_page_size` tokens
@@ -165,6 +184,27 @@ class RuntimeConfig:
     snapshot_budget_bytes: int = 0    # host bytes for parked snapshots
                                       # (0 = unlimited); overflow drops the
                                       # snapshot -> that row replays
+    async_train: bool = False         # event-driven off-policy trainer
+                                      # (ROADMAP §2): trainer drains the
+                                      # per-tenant completed-episode queue
+                                      # at its own pace instead of waiting
+                                      # for full-round assembly; False =
+                                      # round-synchronous baseline
+    max_staleness: int = 1            # bounded staleness window (versions):
+                                      # rollout may run this many rounds
+                                      # ahead of the last commit; episodes
+                                      # lagging further are dropped+counted.
+                                      # 0 reduces token-for-token to the
+                                      # synchronous baseline
+    min_train_rows: int = 0           # micro-batch threshold in rows
+                                      # (rounded UP to complete GRPO groups;
+                                      # 0 = a full round) — fixed shape per
+                                      # tenant, so the jitted step never
+                                      # retraces
+    is_cap: float = 2.0               # decoupled-PPO importance-weight
+                                      # truncation for stale micro-batches
+                                      # (active only when async_train and
+                                      # max_staleness > 0)
     max_len: int = 96
     use_kernel: bool = False
     seed: int = 0
@@ -176,15 +216,31 @@ class RuntimeConfig:
 
 
 class FailureInjector:
-    """Crashes the trainer after N commits (tests restart-from-checkpoint)."""
+    """Crashes the trainer after N commits (tests restart-from-checkpoint).
 
-    def __init__(self, fail_after_commits: Optional[int] = None):
+    `fail_point="pre_commit"` instead kills the trainer BETWEEN pop and
+    commit of what would be the Nth commit — the window where a popped
+    batch used to be lost silently (the manager's in-flight tracking +
+    `recover_inflight` is the fix under test)."""
+
+    def __init__(self, fail_after_commits: Optional[int] = None,
+                 fail_point: str = "post_commit"):
+        assert fail_point in ("post_commit", "pre_commit")
         self.fail_after = fail_after_commits
+        self.fail_point = fail_point
         self.commits = 0
+
+    def on_train(self):
+        """Called by the trainer after pop, before commit."""
+        if (self.fail_point == "pre_commit" and self.fail_after is not None
+                and self.commits + 1 >= self.fail_after):
+            self.fail_after = None     # one-shot: the restart must succeed
+            raise RuntimeError("injected node failure (pre-commit)")
 
     def on_commit(self):
         self.commits += 1
-        if self.fail_after is not None and self.commits >= self.fail_after:
+        if (self.fail_point == "post_commit" and self.fail_after is not None
+                and self.commits >= self.fail_after):
             raise RuntimeError("injected node failure")
 
 
@@ -204,7 +260,14 @@ class MARLaaSRuntime:
             import dataclasses as _dc
             self.acfg = _dc.replace(self.acfg, paged=True,
                                     page_size=rcfg.kv_page_size)
-        self.mgr = MultiTaskManager()
+        if rcfg.async_train and rcfg.rollout_mode != "continuous":
+            raise ValueError("async_train requires rollout_mode='continuous' "
+                             "(the event-driven trainer consumes the slot "
+                             "engine's completion stream)")
+        self.mgr = MultiTaskManager(
+            max_staleness=rcfg.max_staleness if rcfg.async_train else 0,
+            min_train_rows=rcfg.min_train_rows,
+            async_mode=rcfg.async_train)
         self.admission = AdmissionController(cfg, self.acfg)
         self.rec = MetricsRecorder({"rollout": rcfg.rollout_pool_devices,
                                     "train": rcfg.train_pool_devices})
@@ -248,6 +311,13 @@ class MARLaaSRuntime:
         # writes, admission tick reads): feeds the remaining-budget-aware
         # readmission re-estimate
         self._preempt_progress: Dict[str, float] = {}
+        # per-tenant round counter: GRPO group identity for the episode
+        # queue is (round, group-within-round) — rollout thread only
+        self._round_seq: Dict[str, int] = {}
+        # cumulative completed/trained row counts feeding the recorder's
+        # trainer-backlog timeline (each written by exactly one thread)
+        self._rows_completed = 0
+        self._rows_trained = 0
         self._stop = threading.Event()
         self.failure = failure
         self.error: Optional[BaseException] = None
@@ -266,8 +336,16 @@ class MARLaaSRuntime:
             hash((self.rcfg.seed, spec.task_id)) % (2 ** 31))
 
     def _tc(self, spec: TaskSpec) -> TrainConfig:
+        # the importance-weight correction only activates when stale
+        # micro-batches are actually admissible — at max_staleness=0 every
+        # batch is on-policy and the loss must stay bit-identical to the
+        # synchronous baseline
+        is_cap = (self.rcfg.is_cap
+                  if self.rcfg.async_train and self.rcfg.max_staleness > 0
+                  else 0.0)
         return TrainConfig(group_size=spec.group_size,
                            use_logprob_kernel=self.rcfg.use_kernel,
+                           is_cap=is_cap,
                            adamw=AdamWConfig(lr=spec.lr))
 
     def _train_step_for(self, spec: TaskSpec):
@@ -280,18 +358,18 @@ class MARLaaSRuntime:
     def _build_requests(self, tids: List[str], adapter_order: Dict[str, int]):
         reqs = []
         for tid in tids:
-            st = self.mgr.tasks[tid]
+            spec = self.mgr.spec_for(tid)
             env = self.envs[tid]
             rng = self.datagens[tid]
-            for _ in range(st.spec.num_groups):
+            for _ in range(spec.num_groups):
                 prompt, truth = env.sample_prompt(rng)
-                for _ in range(st.spec.group_size):
+                for _ in range(spec.group_size):
                     reqs.append(RolloutRequest(
                         task_id=tid, adapter_index=adapter_order[tid],
                         prompt=prompt, truth=truth, env=env,
-                        max_new_tokens=st.spec.max_new_tokens,
-                        temperature=st.spec.temperature,
-                        priority=st.spec.priority,
+                        max_new_tokens=spec.max_new_tokens,
+                        temperature=spec.temperature,
+                        priority=spec.priority,
                         max_turns=self.rcfg.max_turns or None))
         return reqs
 
@@ -300,19 +378,16 @@ class MARLaaSRuntime:
         """One fused cross-task rollout round. Returns True if work done."""
         ready = self.mgr.rollout_ready_tasks()
         # admission control gates which tenants join the fused batch
-        batch_tids, versions = [], {}
+        batch_tids, versions, adapters = [], {}, []
         for tid in ready:
-            st = self.mgr.tasks[tid]
-            if st.status == "pending":
-                continue
             np_ = self.mgr.next_policy(tid)
             if np_ is None:
                 continue
             versions[tid] = np_[0]
+            adapters.append(np_[1])
             batch_tids.append(tid)
         if not batch_tids:
             return False
-        adapters = [self.mgr.tasks[t].adapters for t in batch_tids]
         order = {t: i for i, t in enumerate(batch_tids)}
         reqs = self._build_requests(batch_tids, order)
         t0 = time.monotonic()
@@ -323,7 +398,7 @@ class MARLaaSRuntime:
                         self.rcfg.rollout_pool_devices)
         for tid in batch_tids:
             tb = to_trajectory_batch(results, tid, versions[tid],
-                                     self.mgr.tasks[tid].spec.group_size,
+                                     self.mgr.spec_for(tid).group_size,
                                      pad_to=self.rcfg.max_len)
             self.mgr.enqueue(tb)
         return True
@@ -361,7 +436,7 @@ class MARLaaSRuntime:
         """A tenant's adapter may not be evicted while it has rows resident
         or queued in the engine (queued requests carry its slot index)."""
         return (tid in self.cengine.active_tenants()
-                or self.mgr.tasks[tid].rollout_inflight_rows > 0)
+                or self.mgr.state(tid).rollout_inflight_rows > 0)
 
     def _feed_continuous(self) -> bool:
         """Submit every consumable (task, version) round into the engine
@@ -371,7 +446,7 @@ class MARLaaSRuntime:
         rollout thread only."""
         fed = False
         for tid in self.mgr.rollout_ready_tasks():
-            st = self.mgr.tasks[tid]
+            st = self.mgr.state(tid)
             slot = self.residency.acquire(tid, st.adapters,
                                           in_use=self._adapter_in_use)
             if slot is None:
@@ -389,10 +464,17 @@ class MARLaaSRuntime:
                 self.cengine.set_adapters(slot, adapters)
                 self._resident_version[tid] = version
             reqs = self._build_requests([tid], {tid: slot})
+            # GRPO group identity for the episode queue: (round, group) —
+            # stamped into row meta alongside the behaviour version so
+            # park/preempt/resume can't lose it
+            round_no = self._round_seq.get(tid, 0) + 1
+            self._round_seq[tid] = round_no
+            group_size = self.mgr.spec_for(tid).group_size
             self.mgr.rollout_started(tid, len(reqs))
-            for r in reqs:
-                self.cengine.submit(r, meta={"task_id": tid,
-                                             "version": version})
+            for i, r in enumerate(reqs):
+                self.cengine.submit(r, meta={
+                    "task_id": tid, "version": version,
+                    "group": (round_no, i // group_size)})
             fed = True
         return fed
 
@@ -424,9 +506,51 @@ class MARLaaSRuntime:
         self._seg_t0 = now
         self._seg_tasks = frozenset()
 
+    def _handle_completion(self, comp, rounds: Dict[tuple, list]) -> bool:
+        """Route one engine completion into the trainer feed; True if a
+        trainer-visible queue advanced. Every completion is accounted:
+        `rollout_row_done` always runs, and rows that can never train
+        (finished task, beyond the staleness window) are dropped WITH a
+        counter instead of leaking in a partial round."""
+        tid = comp.task_id
+        self.mgr.rollout_row_done(tid)
+        self._rows_completed += 1
+        if self.rcfg.async_train:
+            # event-driven feed: the episode joins its GRPO group in the
+            # per-tenant queue the moment it evicts — no round assembly
+            advanced = self.mgr.enqueue_episode(tid, comp.version,
+                                                comp.meta.get("group"), comp)
+            self.rec.record_train_backlog(time.monotonic(),
+                                          self.mgr.dispatchable_rows())
+            return advanced
+        st = self.mgr.state(tid)
+        if st.done or st.version - comp.version > self.mgr.max_staleness:
+            # this round can never train: drop the completion AND any
+            # already-buffered siblings (previously they sat in `rounds`
+            # forever — the partial-entry leak)
+            stale = rounds.pop((tid, comp.version), [])
+            self.rec.incr("orphaned_completions", 1 + len(stale))
+            return False
+        batch = rounds.setdefault((tid, comp.version), [])
+        batch.append(comp)
+        spec = self.mgr.spec_for(tid)
+        if len(batch) < spec.rows_per_batch:
+            return False
+        del rounds[(tid, comp.version)]
+        # completions arrive in eviction order; GRPO groups are contiguous
+        # rows sharing a prompt, so restore submission order before packing
+        batch.sort(key=lambda c: c.submit_index)
+        tb = to_trajectory_batch(batch, tid, comp.version, spec.group_size,
+                                 pad_to=self.rcfg.max_len)
+        self.mgr.enqueue(tb)
+        self.rec.record_train_backlog(time.monotonic(),
+                                      self.mgr.dispatchable_rows())
+        return True
+
     def _rollout_loop_continuous(self):
         eng = self.cengine
         rounds: Dict[tuple, list] = {}      # (tid, v) -> completions so far
+        clean = False                       # exited via all-done, not stop
         self._seg_tasks: frozenset = frozenset()
         self._seg_t0: Optional[float] = None
         last_slot_sample = None
@@ -468,27 +592,35 @@ class MARLaaSRuntime:
                 self._flush_decode_segment(now)
                 self._seg_tasks = tasks_now
             for comp in eng.drain_completions():
-                tid = comp.meta["task_id"]
-                version = comp.meta["version"]
-                self.mgr.rollout_row_done(tid)
-                batch = rounds.setdefault((tid, version), [])
-                batch.append(comp)
-                spec = self.mgr.tasks[tid].spec
-                if len(batch) == spec.rows_per_batch:
-                    del rounds[(tid, version)]
-                    # completions arrive in eviction order; GRPO groups are
-                    # contiguous rows sharing a prompt, so restore
-                    # submission order before packing
-                    batch.sort(key=lambda c: c.submit_index)
-                    tb = to_trajectory_batch(batch, tid, version,
-                                             spec.group_size,
-                                             pad_to=self.rcfg.max_len)
-                    self.mgr.enqueue(tb)
+                if self._handle_completion(comp, rounds):
                     progressed = True
             if not progressed and not fed:
                 if self.mgr.all_done() and eng.idle():
+                    clean = True
                     break
                 time.sleep(0.002)
+        # final drain: the stop flag can land while completions sit in the
+        # engine's out-queue — without this they vanished with the thread,
+        # inflight-row counters never returned to zero, and a restart
+        # over-counted occupancy (the shutdown half of the rounds-dict leak)
+        for comp in eng.drain_completions():
+            self._handle_completion(comp, rounds)
+        if clean:
+            # drain invariants: a clean all-done exit must leave no orphaned
+            # completions and every inflight-row counter back at zero
+            assert not rounds, (
+                f"partial rounds leaked at clean shutdown: "
+                f"{[(k, len(v)) for k, v in rounds.items()]}")
+            leftover = self.mgr.inflight_rows()
+            assert not leftover, (
+                f"inflight-row counters nonzero at clean shutdown: {leftover}")
+            assert self.mgr.partial_rows() == 0, "partial GRPO groups leaked"
+        elif rounds:
+            # aborted run (stop flag / injected failure): rows already
+            # completed for never-finished rounds are surfaced, not lost
+            self.rec.incr("orphaned_completions",
+                          sum(len(v) for v in rounds.values()))
+            rounds.clear()
         now = time.monotonic()
         occ, cap = eng.occupancy()
         self.rec.record_slot_sample(now, occ, cap)   # close the timeline
@@ -517,11 +649,16 @@ class MARLaaSRuntime:
             eng._halt_stage()       # workers die with the rollout loop
 
     # -- trainer ---------------------------------------------------------------
-    def _train_one(self, tb) -> None:
+    def _train_one(self, tb, trained_version: Optional[int] = None) -> None:
         import jax.numpy as jnp
-        st = self.mgr.tasks[tb.task_id]
+        if self.failure:
+            self.failure.on_train()    # pre-commit fail point: the popped
+                                       # batch is in-flight right now
+        if trained_version is None:
+            trained_version = tb.version
+        st = self.mgr.state(tb.task_id)
+        tc = self._tc(st.spec)
         step_fn = self._train_step_for(st.spec)
-        S = tb.tokens.shape[1]
         batch = {
             "tokens": jnp.asarray(tb.tokens),
             "prompt_lens": jnp.asarray(tb.prompt_lens),
@@ -530,6 +667,11 @@ class MARLaaSRuntime:
         }
         if "loss_mask" in tb.meta:
             batch["loss_mask"] = jnp.asarray(tb.meta["loss_mask"])
+        if tc.is_cap > 0 and tb.behavior_logprobs is not None:
+            # decoupled-PPO correction: the loss reweights by
+            # min(exp(old_lp - behavior_lp), is_cap) — behaviour logprobs
+            # were recorded at sample time under the generating version
+            batch["behavior_logprobs"] = jnp.asarray(tb.behavior_logprobs)
         t0 = time.monotonic()
         new_adapters, new_opt, metrics = step_fn(self.base_params, st.adapters,
                                                  st.opt_state, batch)
@@ -537,33 +679,83 @@ class MARLaaSRuntime:
         t1 = time.monotonic()
         self.rec.record("train", "train", tb.task_id, t0, t1,
                         self.rcfg.train_pool_devices)
-        self.mgr.commit(tb.task_id, new_adapters, new_opt, tb.version,
+        self.mgr.commit(tb.task_id, new_adapters, new_opt, trained_version,
                         reward_mean=float(np.mean(tb.rewards)))
+        self._rows_trained += tb.num_rows
+        self.rec.record_train_backlog(time.monotonic(),
+                                      self.mgr.dispatchable_rows())
         if self.failure:
             self.failure.on_commit()
         if (self.rcfg.checkpoint_dir and self.rcfg.checkpoint_every and
-                sum(s.steps_done for s in self.mgr.tasks.values())
+                self.mgr.total_steps_done()
                 % self.rcfg.checkpoint_every == 0):
             from repro.checkpoint.store import save_checkpoint
             save_checkpoint(self.rcfg.checkpoint_dir, self.mgr)
 
     def _train_loop(self):
         try:
+            # a previous trainer incarnation may have died between pop and
+            # commit (injected failure / crash): restore its popped work to
+            # the queue head before consuming anything new, else the tenant
+            # whose issue budget is already spent deadlocks
+            requeued = self.mgr.recover_inflight()
+            if requeued:
+                self.rec.incr("train_work_recovered", requeued)
+            if self.rcfg.async_train:
+                self._train_loop_async()
+                return
             while not self._stop.is_set():
+                t0 = time.monotonic()
                 tb = self.mgr.pop_batch(timeout=0.05)
                 if tb is None:
+                    self.rec.record_trainer_wait(t0, time.monotonic())
                     if self.mgr.all_done():
                         return
                     continue
+                self.rec.record_train_backlog(time.monotonic(),
+                                              self.mgr.dispatchable_rows())
                 self._train_one(tb)
         except BaseException as e:
             self.error = e
             self._stop.set()
 
+    def _train_loop_async(self):
+        """Event-driven trainer (ROADMAP §2): pop one tenant's micro-batch
+        of complete GRPO groups the moment its `min_train_rows` threshold
+        is met — never waits for full-round assembly, so trainer idle time
+        between commits is bounded by decode throughput, not by the
+        slowest row of a round."""
+        while not self._stop.is_set():
+            t0 = time.monotonic()
+            item = self.mgr.pop_episodes(timeout=0.05)
+            if item is None:
+                self.rec.record_trainer_wait(t0, time.monotonic())
+                if self.mgr.all_done():
+                    return
+                continue
+            self.rec.record_train_backlog(time.monotonic(),
+                                          self.mgr.dispatchable_rows())
+            tid, groups = item
+            rows = [r for g in groups for r in g.rows]
+            # eviction order -> submission order (same sort as the
+            # synchronous packer: at max_staleness=0 the micro-batch is the
+            # full round, token-for-token)
+            rows.sort(key=lambda c: c.submit_index)
+            oldest = min(g.version for g in groups)
+            newest = max(g.version for g in groups)
+            spec = self.mgr.spec_for(tid)
+            tb = to_trajectory_batch(rows, tid, newest, spec.group_size,
+                                     pad_to=self.rcfg.max_len)
+            if self.mgr.version_of(tid) - oldest > 0:
+                self.rec.incr("stale_rows_trained", len(rows))
+            # commit is checked against the OLDEST behaviour version in the
+            # micro-batch — the conservative end of the staleness window
+            self._train_one(tb, trained_version=oldest)
+
     # -- admission driver (priority-ordered, preemption-capable) -----------
     def _pending_by_priority(self) -> List[str]:
         pending = self.mgr.pending_tasks()
-        pending.sort(key=lambda t: -self.mgr.tasks[t].spec.priority)
+        pending.sort(key=lambda t: -self.mgr.spec_for(t).priority)
         return pending
 
     def _expected_gen(self, tid: str) -> Optional[float]:
@@ -573,7 +765,7 @@ class MARLaaSRuntime:
         generate, so admission packs tighter as history accrues."""
         if not self.rcfg.paged_kv:
             return None
-        spec = self.mgr.tasks[tid].spec
+        spec = self.mgr.spec_for(tid)
         return self.cengine.predictor.predict(tid, spec.max_new_tokens)
 
     def _try_admit_with_preemption(self, tid: str) -> bool:
@@ -582,21 +774,22 @@ class MARLaaSRuntime:
         resident rows are evicted on the rollout thread and replay later;
         its bytes move to the admission controller's preempted set for
         re-admission once capacity frees."""
-        st = self.mgr.tasks[tid]
-        if self.admission.try_admit(st.spec, 32, self._expected_gen(tid)):
+        spec = self.mgr.spec_for(tid)
+        if self.admission.try_admit(spec, 32, self._expected_gen(tid)):
             return True
         if not (self.rcfg.preemption
                 and self.rcfg.rollout_mode == "continuous"):
             return False
-        victims = [t2 for t2, s2 in self.mgr.task_items()
+        items = dict(self.mgr.task_items())
+        victims = [t2 for t2, s2 in items.items()
                    if s2.status == "admitted" and not s2.done
-                   and s2.spec.priority < st.spec.priority]
-        victims.sort(key=lambda t2: (self.mgr.tasks[t2].spec.priority,
-                                     -self.mgr.tasks[t2].admitted_at))
+                   and s2.spec.priority < spec.priority]
+        victims.sort(key=lambda t2: (items[t2].spec.priority,
+                                     -items[t2].admitted_at))
         # feasibility: don't preempt anyone unless evicting ALL eligible
         # victims would actually fit the newcomer (else thrash for nothing)
         from .admission import task_state_bytes
-        need = task_state_bytes(self.cfg, st.spec, 32,
+        need = task_state_bytes(self.cfg, spec, 32,
                                 self.acfg.kv_dtype_bytes)
         freeable = sum(self.admission.admitted_bytes(t2) for t2 in victims)
         if (self.admission.used_bytes - freeable + need
@@ -606,7 +799,7 @@ class MARLaaSRuntime:
             self.admission.preempt(victim)
             self.mgr.preempt(victim)
             self._preempt_q.append(victim)     # engine evicts on its thread
-            if self.admission.try_admit(st.spec, 32,
+            if self.admission.try_admit(spec, 32,
                                         self._expected_gen(tid)):
                 return True
         return False
@@ -620,7 +813,7 @@ class MARLaaSRuntime:
                 self.admission.release(tid)
                 self.mgr.readmit(tid)          # preempted+done -> finished
         for tid in sorted(self.admission.preempted(),
-                          key=lambda t: -self.mgr.tasks[t].spec.priority):
+                          key=lambda t: -self.mgr.spec_for(t).priority):
             # remaining-budget-aware re-estimate (ROADMAP open item): rows
             # already partially decoded shrink the reservation re-charged at
             # readmission, so preempted tenants pack back in tighter
@@ -635,7 +828,7 @@ class MARLaaSRuntime:
                     self.admission.reestimate_preempted_bytes(tid, actual)
             elif progress is not None:
                 self.admission.reestimate_preempted(
-                    tid, self.mgr.tasks[tid].spec, progress, 32)
+                    tid, self.mgr.spec_for(tid), progress, 32)
             if self.admission.try_readmit(tid):
                 self.mgr.readmit(tid)
                 self.rec.incr("readmissions")
@@ -647,10 +840,10 @@ class MARLaaSRuntime:
     def run(self, timeout_s: float = 600.0):
         """Run to completion under the configured policy."""
         for tid in self._pending_by_priority():
-            st = self.mgr.tasks[tid]
+            spec = self.mgr.spec_for(tid)
             wl_prompt = 32
             if (self.rcfg.policy == "marlaas"
-                    and not self.admission.try_admit(st.spec, wl_prompt,
+                    and not self.admission.try_admit(spec, wl_prompt,
                                                      self._expected_gen(tid))
                     and self.acfg.strict):
                 continue                      # stays pending until release
@@ -663,6 +856,11 @@ class MARLaaSRuntime:
             self._run_sequential(timeout_s)
         else:
             raise ValueError(self.rcfg.policy)
+        # staleness-window drop-or-train accounting -> summary counters
+        # (n_stale_rows_dropped / n_stale_groups_dropped / ...)
+        for name, n in self.mgr.drop_counters().items():
+            if n:
+                self.rec.incr(name, n)
         if self.error:
             raise self.error
 
@@ -680,6 +878,14 @@ class MARLaaSRuntime:
             # priority preemption) as capacity moves
             self._admission_tick()
             time.sleep(0.01)
+        # grace drain: bounded-staleness pipelining may leave rounds issued
+        # before the final commit still decoding — let the rollout loop
+        # retire them through the normal completion path (counted as
+        # discarded tails) so the inflight-row counters return to zero,
+        # instead of abandoning resident rows at the stop flag
+        if self.mgr.all_done() and not self._stop.is_set():
+            rt.join(timeout=min(30.0, max(1.0,
+                                          deadline - time.monotonic())))
         self._stop.set()
         join_or_raise([rt, tt], timeout_s=10.0)
 
@@ -699,8 +905,7 @@ class MARLaaSRuntime:
 
     def _run_sequential(self, timeout_s):
         deadline = time.monotonic() + timeout_s
-        for tid in list(self.mgr.tasks):
-            st = self.mgr.tasks[tid]
+        for tid, st in self.mgr.task_items():
             while not st.done and time.monotonic() < deadline:
                 np_ = self.mgr.next_policy(tid)
                 if np_ is None:

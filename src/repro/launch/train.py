@@ -56,11 +56,12 @@ def main():
         if snap:
             print(f"resuming from {snap}")
             load_checkpoint(snap, rt.mgr)
-            for tid, st in rt.mgr.tasks.items():
+            for tid, st in rt.mgr.task_items():
                 rt.envs[tid] = make_env(st.spec.env_name)
                 rt.datagens[tid] = random.Random(args.seed + hash(tid) % 97)
-    if not rt.mgr.tasks:
-        for i in range(args.tasks):
+    if not rt.mgr.task_items():
+        for i in range(args.tasks):   # noqa: RA102 — argparse Namespace
+                                      # attr, not the manager's tasks dict
             env = ENVS[i % len(ENVS)]
             rt.submit_task(TaskSpec(
                 f"{env}-{i}", env, group_size=4, num_groups=1,
@@ -69,7 +70,7 @@ def main():
 
     rt.run(timeout_s=args.timeout)
     print("tasks:", {t: f"v{s.version} r={s.reward_history[-1:]}"
-                     for t, s in rt.mgr.tasks.items()})
+                     for t, s in rt.mgr.task_items()})
     print("metrics:", {k: round(v, 3)
                        for k, v in summarize(rt.mgr, rt.rec).items()})
 

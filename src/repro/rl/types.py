@@ -33,6 +33,11 @@ class RolloutCompletion:
                                       # tool_timeout|tool_error|straggler|
                                       # aborted
     slot: int = -1                    # decode slot the row occupied
+    version: int = -1                 # adapter version that generated the
+                                      # row (stamped from submit meta, so it
+                                      # survives park/preempt/resume) — the
+                                      # behaviour version for the trainer's
+                                      # staleness admission check
     sampled_tokens: int = 0           # tokens charged to max_new_tokens
     forced_tokens: int = 0            # force-fed tokens (budget-exempt)
     submit_index: int = -1            # engine-global submission order

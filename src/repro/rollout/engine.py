@@ -1112,12 +1112,17 @@ class ContinuousRolloutEngine:
     # -- slot lifecycle --------------------------------------------------
     def _completion(self, row: _Row, prompt, slot: int) -> RolloutCompletion:
         """One finished episode → completion record (shared by slot
-        eviction, parked-row timeout, and the drain abort paths)."""
+        eviction, parked-row timeout, and the drain abort paths). The
+        behaviour version is stamped per-row from the submit meta — which
+        lives on the row object itself, so the stamp survives park,
+        preemption, and snapshot/replay resume."""
+        meta = row.meta if isinstance(row.meta, dict) else {}
         return RolloutCompletion(
             task_id=row.req.task_id, prompt_len=row.prompt_len,
             tokens=list(prompt) + row.gen, gen_logprobs=row.lps,
             gen_loss_mask=row.lmask, truth=row.req.truth, env=row.req.env,
             finish_reason=row.finish_reason, slot=slot,
+            version=int(meta.get("version", -1)),
             sampled_tokens=row.sampled, forced_tokens=row.forced,
             submit_index=row.submit_index, submitted_at=row.submitted_at,
             started_at=row.started_at, finished_at=time.monotonic(),

@@ -36,6 +36,13 @@ class TrainConfig:
     accum_steps: int = 1
     recompute_old: bool = True       # recompute behavior logprobs under the
                                      # training forward (MoE-drop safe)
+    is_cap: float = 0.0              # decoupled-PPO importance-weight cap
+                                     # for off-policy (stale) batches:
+                                     # ρ = min(exp(old_lp − behavior_lp),
+                                     # is_cap) reweights the clipped
+                                     # objective. 0 disables the correction
+                                     # entirely — the on-policy loss is
+                                     # bit-identical to before
     trainable: str = "lora"          # lora | full
     use_logprob_kernel: bool = False
     adamw: AdamWConfig = field(default_factory=AdamWConfig)
@@ -101,13 +108,22 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig):
             ref_lp, _, _ = _policy_logprobs(params, tokens, cfg, None, tc,
                                             batch.get("enc_embeds"))
             ref_lp = jax.lax.stop_gradient(ref_lp)
+        # off-policy correction for the bounded-staleness trainer: the
+        # behaviour logprobs recorded at sample time enter ONLY as the
+        # truncated importance weight; the clip ratio stays anchored to the
+        # recomputed (proximal) old_lp
+        behavior = (batch.get("behavior_logprobs")
+                    if tc.is_cap > 0 else None)
         out = grpo_loss(new_lp, old_lp, adv, mask, ref_lp,
                         clip_eps=tc.clip_eps, kl_coef=tc.kl_coef,
-                        entropy=ent, ent_coef=tc.ent_coef)
+                        entropy=ent, ent_coef=tc.ent_coef,
+                        behavior_logprobs=behavior, is_cap=tc.is_cap)
         loss = out.loss + 0.01 * aux          # MoE load-balance aux
         metrics = {"loss": out.loss, "pg_loss": out.pg_loss, "kl": out.kl,
                    "entropy": out.entropy, "ratio_mean": out.ratio_mean,
-                   "clip_frac": out.clip_frac, "aux": aux}
+                   "clip_frac": out.clip_frac, "aux": aux,
+                   "is_weight_mean": out.is_weight_mean,
+                   "is_trunc_frac": out.is_trunc_frac}
         return loss, metrics
 
     def train_step(base_params, lora_tree, opt_state, batch):
@@ -131,7 +147,8 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig):
                                    trainable)
             zeros_m = {k: jnp.zeros((), jnp.float32) for k in
                        ["loss", "pg_loss", "kl", "entropy", "ratio_mean",
-                        "clip_frac", "aux"]}
+                        "clip_frac", "aux", "is_weight_mean",
+                        "is_trunc_frac"]}
             mbs = jax.tree.map(
                 lambda t: t.reshape((A, t.shape[0] // A) + t.shape[1:]), batch)
             (grads, msum), _ = jax.lax.scan(micro, (zeros_g, zeros_m), mbs)

@@ -32,15 +32,35 @@ def test_next_policy_issued_once_per_version():
     assert m.next_policy("t") == (1, None)     # unlocked by the commit
 
 
-def test_stale_trajectory_rejected():
+def test_stale_trajectory_dropped_and_counted():
+    # the on-policy assert became a bounded-staleness admission check:
+    # at the default max_staleness=0 a stale batch is DROPPED and counted
+    # (drop-or-train decision), never trained — and never an exception
     m = MultiTaskManager()
     m.submit(TaskSpec("t", "gsm8k"))
     m.admit("t")
     m.next_policy("t")
     m.enqueue(_tb("t", 0))
+    m.pop_batch()
     m.commit("t", None, None, 0)
-    with pytest.raises(AssertionError, match="on-policy"):
-        m.enqueue(_tb("t", 0))                 # v0 after commit of v1 = stale
+    assert m.enqueue(_tb("t", 0)) is False     # v0 after commit of v1 = stale
+    assert m.pop_batch() is None               # dropped, not queued
+    drops = m.drop_counters()
+    assert drops["stale_batches_dropped"] == 1
+    assert drops["stale_rows_dropped"] == 2
+
+
+def test_stale_batch_within_window_admitted():
+    m = MultiTaskManager(max_staleness=1, async_mode=True)
+    m.submit(TaskSpec("t", "gsm8k"))
+    m.admit("t")
+    m.next_policy("t")
+    m.enqueue(_tb("t", 0))
+    m.commit("t", None, None, 0)
+    assert m.enqueue(_tb("t", 0)) is True      # lag 1 <= max_staleness
+    b = m.pop_batch()
+    m.commit("t", None, None, b.version)       # lag-1 commit admitted too
+    assert m.tasks["t"].version == 2
 
 
 def test_commit_wrong_version_rejected():

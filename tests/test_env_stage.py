@@ -123,10 +123,14 @@ def _drive(eng, reqs, preempt_step=0, victims=(), max_iters=5000):
     deadline = time.monotonic() + 120
     while not eng.idle() and iters < max_iters:
         progressed = eng.step()
-        iters += 1
-        if iters == preempt_step:
-            for v in victims:
-                preempted += eng.preempt_tenant(v)
+        # only productive steps count against the budget: cold-start jit
+        # compiles on the async prefill workers spin thousands of
+        # no-progress iterations (the 120s deadline guards real hangs)
+        if progressed:
+            iters += 1
+            if iters == preempt_step:
+                for v in victims:
+                    preempted += eng.preempt_tenant(v)
         for c in eng.drain_completions():
             comps[pos_of[c.submit_index]] = c
         if not progressed:

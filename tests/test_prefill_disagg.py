@@ -66,9 +66,13 @@ def _drive(eng, reqs, preempt_step=0, victim=None, max_iters=3000):
     deadline = time.monotonic() + 120
     while not eng.idle() and iters < max_iters:
         progressed = eng.step()
-        iters += 1
-        if iters == preempt_step and victim is not None:
-            preempted = eng.preempt_tenant(victim)
+        # only productive steps count against the budget: cold-start jit
+        # compiles on the async prefill workers spin thousands of
+        # no-progress iterations (the 120s deadline guards real hangs)
+        if progressed:
+            iters += 1
+            if iters == preempt_step and victim is not None:
+                preempted = eng.preempt_tenant(victim)
         for c in eng.drain_completions():
             comps[pos_of[c.submit_index]] = c
         if not progressed:
