@@ -1,0 +1,287 @@
+"""Global copy-on-write prefix cache vs private-pages paged KV (ISSUE 8
+tentpole gates).
+
+Workload: GRPO groups of N=8 same-prompt rows per tenant (long template
+prompts) on a resume-heavy agentic mix (forced tool turns -> park/resume
+every few tokens). Identical seeds + forced-CALL pattern in both modes —
+token streams are bit-identical, asserted below.
+
+  private — PR 5 baseline (prefix_cache off): every row prefills its full
+            prompt into private pages; park/resume round-trips host
+            snapshots (``snapshots`` > 0).
+  shared  — this PR: the group leader prefills once, siblings map their
+            block tables onto the SAME retained pages (tail included) and
+            fork copy-on-write on first divergent write; park/resume is a
+            pure retain + block-table splice (``device_resident_resumes``
+            > 0, zero host snapshot bytes).
+
+Gate 1 — prefill-FLOPs: total ``prefill_tokens`` (shared) must be <= 1/2
+of the private baseline (the suffix-only installs erase the group's
+duplicate prompt prefills).
+
+Gate 2 — resident-row packing under one HBM budget: the group-shared
+admission estimator (prompt pages charged once per group) must admit
+>= 1.3x the rows of the private page-granular estimator. Computed with
+the production estimators on the full granite config.
+
+Zero-host-bytes invariant: shared-mode ``snapshots == 0`` and
+``snapshot_drops`` unchanged from the baseline (both 0), with
+``device_resident_resumes`` > 0.
+
+  PYTHONPATH=src python -m benchmarks.bench_prefix_cache [--json out.json]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import random
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_record, write_bench_json
+from repro.configs import REGISTRY, reduced
+from repro.core.admission import (task_state_bytes_paged,
+                                  task_state_bytes_shared)
+from repro.core.manager import TaskSpec
+from repro.data import tokenizer as tok
+from repro.envs.tasks import make_env
+from repro.lora.adapters import init_lora
+from repro.models import init_params
+import repro.rollout.engine as eng_mod
+import repro.rollout.prefill as pf_mod
+from repro.rollout.engine import ContinuousRolloutEngine, RolloutRequest
+
+N_TENANTS = 2
+GROUP = 8                     # GRPO siblings per tenant (gate: N >= 8)
+DECODE_SLOTS = 4
+MAX_LEN = 256
+PAGE = 32
+PROMPT_FILL = 150             # shared template ahead of the real prompt:
+                              # the duplicate prefill cost COW sharing kills
+BUDGET = 10                   # sampled tokens per row
+HOPS = 3                      # tool turns per episode (parks + resumes)
+CALL_AT = (1, 9, 17)          # spaced past each forced RESP block
+ENV_LATENCY = 0.01
+ENV_WORKERS = 16
+KV_POOL_PAGES = 72            # resident set + parked rows + radix index
+GATE_PREFILL = 2.0            # >= 2x prefill-token reduction
+GATE_ROWS = 1.3               # >= 1.3x admitted resident rows
+
+_STATE = {}
+
+
+def _bias_sampler():
+    """Deterministic forced-CALL pattern (bench_env_stage trick): rows
+    sample CALL at fixed counters, EOS remapped away — identical in both
+    modes, so token streams stay bit-identical."""
+    if _STATE.get("biased"):
+        return
+    orig = pf_mod._sample_rows
+
+    def biased(logits, keys, counters, temps):
+        s = orig(logits, keys, counters, temps)
+        s = jnp.where(s == tok.EOS, 10, s)
+        hit = jnp.zeros(counters.shape, bool)
+        for c in CALL_AT:
+            hit = hit | (counters == c)
+        return jnp.where(hit, tok.CALL, s)
+
+    pf_mod._sample_rows = biased
+    eng_mod._sample_rows = biased
+    _STATE["biased"] = True
+
+
+def _model():
+    if "cfg" not in _STATE:
+        cfg = dataclasses.replace(
+            reduced(REGISTRY["granite-3-2b"], dtype="float32"),
+            num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+            head_dim=64, d_ff=512, vocab_size=tok.VOCAB_SIZE)
+        _STATE["cfg"] = cfg
+        _STATE["params"] = init_params(jax.random.PRNGKey(0), cfg)
+        _STATE["trees"] = [init_lora(jax.random.PRNGKey(100 + t), cfg)
+                          for t in range(N_TENANTS)]
+    return _STATE["cfg"], _STATE["params"], _STATE["trees"]
+
+
+def _requests():
+    """N_TENANTS GRPO groups: all GROUP rows of a tenant share ONE long
+    prompt (template + question), differing only in seed."""
+    env = make_env("hopsearch", kb_size=16, hops=HOPS, seed=0)
+    env.env_latency_mean = ENV_LATENCY
+    env.env_latency_std = 0.0
+    rng = random.Random(0)
+    filler = (tok.encode("x" * 7 + " ") * 32)[:PROMPT_FILL]
+    reqs = []
+    for t in range(N_TENANTS):
+        prompt, truth = env.sample_prompt(rng)
+        prompt = [prompt[0]] + filler + prompt[1:]
+        for i in range(GROUP):
+            reqs.append(RolloutRequest(
+                f"t{t}", t, prompt, truth, env, max_new_tokens=BUDGET,
+                seed=t * 4096 + i))
+    return reqs
+
+
+def _drain(eng, reqs):
+    toks = 0
+    for r in reqs:
+        eng.submit(r)
+    n, t0 = 0, time.monotonic()
+    guard = t0 + 900.0
+    while not eng.idle() and time.monotonic() < guard:
+        progressed = eng.step()
+        for c in eng.drain_completions():
+            n += 1
+            toks += len(c.tokens)
+        if not progressed:
+            time.sleep(0.0002)
+    wall = time.monotonic() - t0
+    assert n == len(reqs), f"only {n}/{len(reqs)} rows completed"
+    return wall, toks
+
+
+def run_mode(mode: str):
+    """One engine per mode; warm pass compiles every jit variant (and, in
+    shared mode, seeds the radix index), the second pass is measured."""
+    _bias_sampler()
+    cfg, params, trees = _model()
+    eng = ContinuousRolloutEngine(
+        cfg, params, max_slots=DECODE_SLOTS, max_adapters=N_TENANTS,
+        max_len=MAX_LEN, seed=0, scheduler="srpt",
+        env_stage=True, env_workers=ENV_WORKERS,
+        paged_kv=True, kv_page_size=PAGE, kv_pool_pages=KV_POOL_PAGES,
+        resume_restore=True, prefix_cache=(mode == "shared"))
+    for t in range(N_TENANTS):
+        eng.set_adapters(t, trees[t])
+    _drain(eng, _requests())                 # warm pass (compiles)
+    from repro.rollout.engine import RolloutStats
+    eng.stats = RolloutStats()               # measure the second pass only
+    wall, toks = _drain(eng, _requests())
+    eng.check_page_invariants()
+    stats = eng.stats
+    pool = eng.page_stats()
+    eng.shutdown()
+    return wall, toks, stats, pool
+
+
+def packing_gate():
+    """Gate 2: rows admitted under one HBM budget — private page-granular
+    charges vs group-shared charges (full prompt pages once per group)."""
+    cfg = REGISTRY["granite-3-2b"]
+    prompt_len, page, budget = 256, PAGE, 2e9
+    tenants = [TaskSpec(f"t{i}", "gsm8k", group_size=8, num_groups=2,
+                        max_new_tokens=512) for i in range(64)]
+
+    def admitted_rows(estimator):
+        used, rows = 0.0, 0
+        for spec in tenants:
+            need = estimator(spec)
+            if used + need > budget:
+                continue
+            used += need
+            rows += spec.rows_per_batch
+        return rows
+
+    private = admitted_rows(lambda spec: task_state_bytes_paged(
+        cfg, spec, prompt_len, page_size=page, expected_new_tokens=48.0))
+    shared = admitted_rows(lambda spec: task_state_bytes_shared(
+        cfg, spec, prompt_len, page_size=page, expected_new_tokens=48.0))
+    return private, shared
+
+
+def bench():
+    out = {"config": {
+        "tenants": N_TENANTS, "group": GROUP, "decode_slots": DECODE_SLOTS,
+        "max_len": MAX_LEN, "page": PAGE, "prompt_fill": PROMPT_FILL,
+        "budget": BUDGET, "hops": HOPS, "env_latency_s": ENV_LATENCY}}
+    for mode in ("private", "shared"):
+        wall, toks, stats, pool = run_mode(mode)
+        out[mode] = {
+            "wall_s": wall,
+            "tokens_per_sec": stats.tokens_generated / wall,
+            "tokens_generated": stats.tokens_generated,
+            "completion_tokens": toks,
+            "prefill_tokens": stats.prefill_tokens,
+            "prefix_hits": stats.prefix_hits,
+            "prefix_hit_tokens": stats.prefix_hit_tokens,
+            "cow_forks": stats.cow_forks,
+            "parks": stats.parks, "resumes": stats.resumes,
+            "restores": stats.restores,
+            "snapshots": stats.snapshots,
+            "snapshot_drops": stats.snapshot_drops,
+            "device_resident_resumes": stats.device_resident_resumes,
+            "fused_forced_tokens": stats.fused_forced_tokens,
+            "page_pool": pool,
+        }
+    pf_ratio = (out["private"]["prefill_tokens"]
+                / max(1, out["shared"]["prefill_tokens"]))
+    private_rows, shared_rows = packing_gate()
+    row_ratio = shared_rows / max(1, private_rows)
+    out["packing"] = {"private_rows": private_rows,
+                      "shared_rows": shared_rows,
+                      "ratio": row_ratio, "gate": GATE_ROWS}
+    out["prefill_reduction"] = float(pf_ratio)
+    out["gate"] = GATE_PREFILL
+    ok = pf_ratio >= GATE_PREFILL and row_ratio >= GATE_ROWS
+    # identical workload sanity: bit-identical token streams
+    if out["private"]["completion_tokens"] != out["shared"]["completion_tokens"]:
+        ok = False
+    # sharing actually engaged: group siblings hit, tail pages forked
+    if out["shared"]["prefix_hits"] == 0 or out["shared"]["cow_forks"] == 0:
+        ok = False
+    # zero-host-bytes park/resume: device-resident resumes with NO host
+    # snapshots, snapshot_drops unchanged from the baseline
+    if out["shared"]["device_resident_resumes"] == 0:
+        ok = False
+    if out["shared"]["snapshots"] != 0:
+        ok = False
+    if out["shared"]["snapshot_drops"] != out["private"]["snapshot_drops"]:
+        ok = False
+    out["pass"] = bool(ok)
+    print(f"bench_prefix_cache,tenants={N_TENANTS},group={GROUP},"
+          f"prefix={PROMPT_FILL},"
+          f"private_prefill={out['private']['prefill_tokens']},"
+          f"shared_prefill={out['shared']['prefill_tokens']},"
+          f"reduction={pf_ratio:.2f}x,"
+          f"cow_forks={out['shared']['cow_forks']},"
+          f"dev_resumes={out['shared']['device_resident_resumes']},"
+          f"rows {private_rows}->{shared_rows} ({row_ratio:.2f}x),"
+          f"{'ok' if out['pass'] else 'FAIL'}")
+    return out
+
+
+def main(argv):
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            print("usage: bench_prefix_cache [--json OUT.json]")
+            return 2
+        json_path = argv[i + 1]
+    out = bench()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {json_path}")
+    # uniform cross-PR schema (benchmarks/common.py): prefill tokens,
+    # lower is better — ratio = private/shared >= gate passes
+    write_bench_json("BENCH_prefix_cache.json", bench_record(
+        "prefix_cache", GATE_PREFILL, out["shared"]["prefill_tokens"],
+        out["private"]["prefill_tokens"], higher_is_better=False,
+        extra={"packing": out["packing"],
+               "cow_forks": out["shared"]["cow_forks"],
+               "prefix_hits": out["shared"]["prefix_hits"],
+               "device_resident_resumes":
+                   out["shared"]["device_resident_resumes"],
+               "tokens_per_sec_shared": out["shared"]["tokens_per_sec"],
+               "tokens_per_sec_private": out["private"]["tokens_per_sec"],
+               "pass": out["pass"]}))
+    return 0 if out["pass"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -90,6 +90,22 @@ def main():
     ap.add_argument("--snapshot-budget-bytes", type=int, default=0,
                     help="host arena for parked KV snapshots (0 = "
                          "unlimited; overflow falls back to replay)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="paged mode: disable the copy-on-write prefix "
+                         "cache (ISSUE 8) and allocate every row's pages "
+                         "privately. When enabled (the default with "
+                         "--paged-kv), sharing happens at three levels: "
+                         "(1) GRPO-group sharing — same-prompt group "
+                         "siblings map their block tables onto one "
+                         "prefilled page set and fork pages copy-on-write "
+                         "on first divergent decode write; (2) device-"
+                         "resident snapshots — park/preempt of a row "
+                         "whose pages are in-pool retains them on device "
+                         "and resume is a block-table splice (host "
+                         "snapshots demoted to a spill tier); (3) radix "
+                         "prefix reuse — new requests and tool-turn "
+                         "resumes match their longest cached page-aligned "
+                         "prefix and prefill only the suffix")
     ap.add_argument("--mix", default="classic", choices=sorted(MIXES),
                     help="tenant env rotation; 'agentic' is the multi-turn "
                          "tool-heavy mix the env stage targets")
@@ -130,6 +146,7 @@ def main():
         kv_pool_pages=args.kv_pool_pages,
         resume_restore=not args.no_resume_restore,
         snapshot_budget_bytes=args.snapshot_budget_bytes,
+        prefix_cache=not args.no_prefix_cache,
         async_train=args.async_train,
         max_staleness=args.max_staleness,
         min_train_rows=args.min_train_rows))
@@ -156,6 +173,11 @@ def main():
               f"replay_tokens_saved={st.replay_tokens_saved} "
               f"snapshot_drops={st.snapshot_drops} "
               f"pool_exhausted={st.pool_exhausted} "
+              f"prefix_hits={st.prefix_hits} "
+              f"prefix_hit_tokens={st.prefix_hit_tokens} "
+              f"cow_forks={st.cow_forks} "
+              f"device_resident_resumes={st.device_resident_resumes} "
+              f"fused_forced_tokens={st.fused_forced_tokens} "
               f"pool={rt.cengine.page_stats()}")
 
 

@@ -404,9 +404,13 @@ def summarize(manager, rec: MetricsRecorder) -> Dict[str, float]:
     # the dense cache; restore-vs-replay counts ride the counters below
     # (n_restores / n_replays / n_replay_tokens_saved / n_snapshot_drops)
     out.update(rec.page_pool_stats())
-    # scheduler event counters (zero-valued keys omitted: absent == 0)
+    # scheduler event counters (zero-valued keys omitted: absent == 0).
+    # kv_* entries are end-of-run gauges of the prefix cache (shared pages,
+    # index-held pages, HBM bytes per resident row) riding the counter
+    # channel — emitted without the n_ count prefix.
     with rec._lock:
         counters = dict(rec.counters)
     for name, n in sorted(counters.items()):
-        out[f"n_{name}"] = float(n)
+        key = name if name.startswith("kv_") else f"n_{name}"
+        out[key] = float(n)
     return out

@@ -184,6 +184,16 @@ class RuntimeConfig:
     snapshot_budget_bytes: int = 0    # host bytes for parked snapshots
                                       # (0 = unlimited); overflow drops the
                                       # snapshot -> that row replays
+    prefix_cache: bool = True         # paged only (ISSUE 8): global
+                                      # copy-on-write prefix cache — GRPO
+                                      # groups share prompt pages (fork on
+                                      # first divergent write), park/resume
+                                      # keeps prefix pages device-resident
+                                      # (host snapshots become a spill
+                                      # tier), and a per-tenant radix index
+                                      # lets new rows prefill only their
+                                      # uncached suffix; False = private
+                                      # pages (PR 5 baseline)
     async_train: bool = False         # event-driven off-policy trainer
                                       # (ROADMAP §2): trainer drains the
                                       # per-tenant completed-episode queue
@@ -258,8 +268,13 @@ class MARLaaSRuntime:
             # page-granular admission accounting rides the paged engine
             # (copy, never mutate a caller-shared config object)
             import dataclasses as _dc
-            self.acfg = _dc.replace(self.acfg, paged=True,
-                                    page_size=rcfg.kv_page_size)
+            # group-shared prompt charging only where the engine actually
+            # shares pages (pure-attention caches; SSM/hybrid rows keep
+            # private recurrent state and never radix-match)
+            self.acfg = _dc.replace(
+                self.acfg, paged=True, page_size=rcfg.kv_page_size,
+                prefix_shared=(rcfg.prefix_cache
+                               and cfg.family not in ("ssm", "hybrid")))
         if rcfg.async_train and rcfg.rollout_mode != "continuous":
             raise ValueError("async_train requires rollout_mode='continuous' "
                              "(the event-driven trainer consumes the slot "
@@ -295,6 +310,7 @@ class MARLaaSRuntime:
             kv_pool_pages=rcfg.kv_pool_pages,
             resume_restore=rcfg.resume_restore,
             snapshot_budget_bytes=rcfg.snapshot_budget_bytes,
+            prefix_cache=rcfg.prefix_cache,
             on_stage=self._on_stage)
         # LRU tenant -> stacked-LoRA slot map (rollout thread only). The
         # device write happens in _feed_continuous once the consumable
@@ -637,9 +653,22 @@ class MARLaaSRuntime:
                              eng.stats.replay_tokens_saved),
                             ("snapshots", eng.stats.snapshots),
                             ("snapshot_drops", eng.stats.snapshot_drops),
-                            ("pool_exhausted", eng.stats.pool_exhausted)):
+                            ("pool_exhausted", eng.stats.pool_exhausted),
+                            ("prefix_hits", eng.stats.prefix_hits),
+                            ("prefix_hit_tokens",
+                             eng.stats.prefix_hit_tokens),
+                            ("cow_forks", eng.stats.cow_forks),
+                            ("device_resident_resumes",
+                             eng.stats.device_resident_resumes),
+                            ("fused_forced_tokens",
+                             eng.stats.fused_forced_tokens)):
                 if n:
                     self.rec.incr(name, n)
+            # sharing gauges ride the counter channel as end-of-run values
+            for name in ("kv_shared_pages", "kv_prefix_pages",
+                         "kv_hbm_bytes_per_row"):
+                if ps.get(name):
+                    self.rec.incr(name, int(ps[name]))
         if self.rcfg.env_stage:
             self.rec.record_env_sample(now, *eng.env_depths())
             if eng._env is not None:

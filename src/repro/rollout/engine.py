@@ -71,6 +71,41 @@ the RETAINED token-replay path — output is token-for-token identical
 either way (property-tested across attention/SSM/hybrid, both fill
 paths, preempt-at-any-turn).
 
+Copy-on-write prefix cache (``prefix_cache=True``, default with paged
+KV; ISSUE 8). Pages are shared at three levels over the ref-counted
+pool, pure-attention families only (SSM/hybrid degrade to the private
+behaviour above):
+
+  GRPO-group sharing — same-``(tenant, prompt)`` rows are recognized in
+    the queue: the leader prefills privately and publishes its prompt
+    pages (full pages + the exact-remainder tail) to the per-tenant
+    ``PrefixIndex``; siblings install via ``_radix_fill_rows`` with ZERO
+    prompt writes — every page retained, the final chunk recomputed only
+    for the first-token logits. The first decode write past the shared
+    boundary hits a page with refcount > 1 and ``_ensure_decode_pages``
+    COW-forks just that page (``stats.cow_forks``); earlier pages stay
+    shared for the group's lifetime.
+  device-resident snapshots — park/preempt of an in-pool row moves page
+    OWNERSHIP from the slot to the row (pure retain, zero host bytes for
+    attention; hybrid recurrent rows still snapshot) and resume is a
+    block-table splice (``stats.device_resident_resumes``). The host
+    ``KVSnapshot`` arena is demoted to a spill tier: under pool pressure
+    ``_alloc_pages`` evicts cold radix entries, then spills the oldest
+    device-parked row to host (or token replay).
+  radix prefix reuse — any new request or tool-turn resume matches its
+    longest cached page-aligned prefix and prefills only the suffix
+    (``stats.prefix_hits`` / ``prefix_hit_tokens``; ``prefill_tokens``
+    drops by exactly the matched length).
+
+Response-prefill fusion (paged mode): a replay-path resume folds its
+forced RESP…ENDRESP block into the one (re)prefill call — forced
+logprobs gathered from the prefill logits, ``stats.fused_forced_tokens``
+— instead of force-feeding one decode step per token; restore-mode
+resumes never prefill at all, which subsumes it. Token streams are
+bit-identical on every path (``tests/test_prefix_cache.py``), and
+``check_page_invariants`` asserts exact refcount conservation across
+slots, device-parked rows, and radix nodes.
+
 Determinism: sampling is per-row — each request carries a base PRNG key
 (``fold_in(master, request.seed or submit-index)``) folded with the row's
 own generated-token count. A row's tokens therefore depend only on its own
@@ -115,12 +150,12 @@ from repro.configs import ModelConfig
 from repro.data import tokenizer as tok
 from repro.envs.base import CancelToken, Env, call_session
 from repro.lora.adapters import batched_ctx, init_stacked_buffer, stack_adapters
-from repro.models import (decode_step, forward_seq, init_cache,
-                          init_paged_cache, lm_logits)
+from repro.models import (decode_step, forward_prefill_chunk, forward_seq,
+                          init_cache, init_paged_cache, lm_logits)
 from repro.rl.types import RolloutCompletion, TrajectoryBatch
 from repro.rollout.env_stage import EnvStage
-from repro.rollout.kvcache import (KVSnapshot, PagePool, SnapshotStore,
-                                   pages_for)
+from repro.rollout.kvcache import (KVSnapshot, PagePool, PrefixIndex,
+                                   SnapshotStore, pages_for)
 from repro.rollout.prefill import (PrefillKernels, PrefillWorker, ReadyRow,
                                    _bucket_len, _sample_rows, effective_chunk)
 from repro.rollout.scheduler import LengthPredictor, SlotScheduler
@@ -189,6 +224,21 @@ class RolloutStats:
                                    # pressure (row fell back to replay)
     pool_exhausted: int = 0        # rows finished by cache-capacity
                                    # eviction when the page pool ran dry
+    # prefix-cache extras (ISSUE 8: COW page sharing, rollout/kvcache.py)
+    prefix_hits: int = 0           # rows installed off a radix/trie match
+                                   # (retained prefix pages, suffix-only
+                                   # prefill)
+    prefix_hit_tokens: int = 0     # prefix tokens those hits did NOT
+                                   # re-prefill (prefill_tokens drops by
+                                   # exactly this much)
+    cow_forks: int = 0             # shared pages privatized on first
+                                   # decode write (alloc + 1-page copy)
+    device_resident_resumes: int = 0   # park/preempt resumes whose KV
+                                       # pages never left the pool (pure
+                                       # retain; zero host snapshot bytes)
+    fused_forced_tokens: int = 0   # forced RESP…ENDRESP tokens folded into
+                                   # a resume's prefill call instead of one
+                                   # decode step each (response fusion)
     tool_wait_slot_steps: int = 0  # Σ over decode steps of resident rows
                                    # frozen on a tool wait — the slot dead
                                    # weight env_stage drives to 0 by
@@ -377,11 +427,21 @@ def _build_refill_fn_paged(cfg: ModelConfig, use_kernel: bool, max_len: int,
     (`dest_pages`), its block-table row is mirrored host-side by the
     engine, and only ``ceil(seq_len/page)`` pages are consumed instead of
     a ``max_len`` reservation. Recurrent SSM/conv state is per-row and
-    dense, spliced exactly as before."""
+    dense, spliced exactly as before.
+
+    Response-prefill fusion: an env-stage resume's forced RESP…ENDRESP
+    block is part of ``tokens`` (the host appends it to prompt+prefix), so
+    the whole response prefills in THIS call instead of force-feeding one
+    decode step per token. ``fpos``/``ftoks`` [W, F_B] name the positions
+    whose logits predict each forced token and the tokens themselves;
+    ``flp`` returns their logprobs — bit-equal to what the step-wise path
+    records, because prefill logits at a position are identical to the
+    decode step's logits there."""
 
     def refill(params, adapters, tokens, prompt_lens, init_counters, slots,
                dest_pages, new_row_ids, new_keys, new_temps, forced,
-               forced_mask, cache, cur, counters, keys, temps, row_ids):
+               forced_mask, fpos, ftoks, cache, cur, counters, keys, temps,
+               row_ids):
         pcache = init_cache(cfg, tokens.shape[0], max_len)
         lora = batched_ctx(adapters, new_row_ids, cfg, use_kernel)
         h, pcache, _ = forward_seq(params, tokens, cfg, lora, pcache,
@@ -393,6 +453,11 @@ def _build_refill_fn_paged(cfg: ModelConfig, use_kernel: bool, max_len: int,
         first = jnp.where(forced_mask > 0, forced, sampled).astype(jnp.int32)
         lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
                                  first[:, None], axis=-1)[:, 0]
+        fh = jnp.take_along_axis(
+            h, fpos[:, :, None].astype(jnp.int32), axis=1)
+        flogits = lm_logits(fh, params, cfg)
+        flp = jnp.take_along_axis(jax.nn.log_softmax(flogits, -1),
+                                  ftoks[:, :, None], axis=-1)[:, :, 0]
         out = dict(cache)
         if "kp" in cache:
             out["kp"], out["vp"] = _paged_scatter(
@@ -406,9 +471,9 @@ def _build_refill_fn_paged(cfg: ModelConfig, use_kernel: bool, max_len: int,
                  keys.at[slots].set(new_keys),
                  temps.at[slots].set(new_temps),
                  row_ids.at[slots].set(new_row_ids))
-        return first, lp, out, state
+        return first, lp, flp, out, state
 
-    return jax.jit(refill, donate_argnums=(12, 13, 14, 15, 16, 17))
+    return jax.jit(refill, donate_argnums=(14, 15, 16, 17, 18, 19))
 
 
 def _build_splice_fn_paged(cfg: ModelConfig, page: int):
@@ -487,13 +552,86 @@ def _build_restore_fn(cfg: ModelConfig):
     return jax.jit(restore, donate_argnums=(0, 13, 14, 15, 16, 17))
 
 
+def _build_cow_fn(cfg: ModelConfig):
+    """Copy-on-write fork of ONE page: duplicate physical page `src` into
+    freshly allocated page `dst` (all attention layers). Runs when a row is
+    about to decode-write into a page with refcount > 1 — the writer gets a
+    private copy of just that page; every earlier shared page stays shared.
+    src/dst are traced scalars, so one compiled variant serves every
+    fork."""
+
+    def cow(cache, src, dst):
+        out = dict(cache)
+        out["kp"] = cache["kp"].at[:, dst].set(cache["kp"][:, src])
+        out["vp"] = cache["vp"].at[:, dst].set(cache["vp"][:, src])
+        return out
+
+    return jax.jit(cow, donate_argnums=(0,))
+
+
+def _build_suffix_fn(cfg: ModelConfig, use_kernel: bool, max_len: int,
+                     page: int):
+    """Radix-hit install: the row's longest indexed prefix (`start` tokens,
+    static — ``start // page`` retained pool pages) is GATHERED into a
+    width-1 dense scratch, only the suffix runs through
+    ``forward_prefill_chunk`` at offset `start` (attending over the gathered
+    prefix — the same chunked-prefill decomposition the async workers use,
+    exact for pure-attention stacks at any offset), and only the suffix
+    chunks scatter back into fresh pool pages (`dest_pages` names the
+    matched chunks as sentinel). First token sampling/forcing is identical
+    to the whole-prompt refill: same final-position logits, same
+    fold_in(key, init_counter) — so a radix hit is bit-equal to a full
+    prefill, minus ``start`` tokens of compute."""
+
+    def suffix(start, params, adapters, row_id, prefix_pages, tokens,
+               seq_len, init_counter, key, temp, forced, forced_mask,
+               cache, dest_pages, slot, cur, counters, keys, temps,
+               row_ids):
+        pcache = init_cache(cfg, 1, max_len)
+        pk = jnp.take(cache["kp"], prefix_pages, axis=1)
+        pv = jnp.take(cache["vp"], prefix_pages, axis=1)
+        L, _, _, KVH, hd = pk.shape
+        pcache = dict(
+            pcache,
+            k=pcache["k"].at[:, :, :start].set(
+                pk.reshape(L, 1, start, KVH, hd).astype(pcache["k"].dtype)),
+            v=pcache["v"].at[:, :, :start].set(
+                pv.reshape(L, 1, start, KVH, hd).astype(pcache["v"].dtype)))
+        lora = batched_ctx(adapters, row_id, cfg, use_kernel)
+        h, pcache = forward_prefill_chunk(params, tokens, cfg, lora,
+                                          pcache, start=start,
+                                          seq_lens=seq_len - start)
+        last = jnp.take_along_axis(
+            h, (seq_len - 1 - start)[:, None, None].astype(jnp.int32),
+            axis=1)[:, 0]
+        logits = lm_logits(last, params, cfg)
+        sampled = _sample_rows(logits, key, init_counter, temp)
+        first = jnp.where(forced_mask > 0, forced, sampled).astype(jnp.int32)
+        lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                 first[:, None], axis=-1)[:, 0]
+        out = dict(cache)
+        out["kp"], out["vp"] = _paged_scatter(
+            cfg, cache, pcache["k"], pcache["v"], dest_pages[None], page)
+        out["pos"] = cache["pos"].at[slot].set(seq_len[0])
+        state = (cur.at[slot].set(first[0]),
+                 counters.at[slot].set(init_counter[0] + 1),
+                 keys.at[slot].set(key[0]),
+                 temps.at[slot].set(temp[0]),
+                 row_ids.at[slot].set(row_id[0]))
+        return first, lp, out, state
+
+    return jax.jit(suffix, static_argnums=(0,),
+                   donate_argnums=(12, 15, 16, 17, 18, 19))
+
+
 class _Row:
     """Host-side per-episode state machine (one slot / one batch lane when
     resident; parked rows hold no slot at all)."""
     __slots__ = ("req", "prompt_len", "gen", "lps", "lmask", "sampled",
                  "forced", "status", "forced_q", "finish_reason", "key",
                  "submit_index", "meta", "submitted_at", "started_at",
-                 "replays", "session", "turns", "snap")
+                 "replays", "session", "turns", "snap", "dev_pages",
+                 "dev_pos")
 
     def __init__(self, req: RolloutRequest, key, submit_index: int,
                  meta=None, submitted_at: float = 0.0):
@@ -519,6 +657,10 @@ class _Row:
         self.snap = None              # host KVSnapshot while parked/queued
                                       # (paged engine, resume_restore mode);
                                       # None -> the row replays from tokens
+        self.dev_pages = None         # KV pages kept IN-POOL while parked
+                                      # (prefix cache: zero-copy park; the
+                                      # row owns one refcount per page)
+        self.dev_pos = 0              # cache entries those pages hold
 
     def turn_limit(self) -> int:
         """Effective tool-turn budget (0 = unlimited)."""
@@ -843,7 +985,7 @@ class ContinuousRolloutEngine:
                  env_workers: int = 2, env_inflight_per_tenant: int = 0,
                  paged_kv: bool = False, kv_page_size: int = 16,
                  kv_pool_pages: int = 0, resume_restore: bool = True,
-                 snapshot_budget_bytes: int = 0,
+                 snapshot_budget_bytes: int = 0, prefix_cache: bool = True,
                  on_stage=None):
         self.cfg = cfg
         self.base_params = base_params
@@ -878,6 +1020,20 @@ class ContinuousRolloutEngine:
             self.kv_pool_pages = 0
             self._pages = None
             self._snap_store = None
+        # -- global COW prefix cache (ISSUE 8) -----------------------------
+        # three sharing levels over the page pool: GRPO-group prompt pages
+        # (siblings radix-hit the representative's pages), device-resident
+        # park/preempt (pages stay in-pool; host snapshot demoted to a
+        # spill tier), and cross-request radix reuse of common prefixes.
+        # prefix_cache=False reproduces the PR-5 private-pages engine.
+        self.prefix_cache = bool(paged_kv and prefix_cache)
+        self._prefix_idx = (PrefixIndex(kv_page_size)
+                            if self.prefix_cache else None)
+        self._dev_parked: List[_Row] = []   # rows whose dev_pages are live
+                                            # (engine-thread-only registry:
+                                            # spill victims + invariants)
+        self._cow_fn = None
+        self._suffix_fn = None
         self._snap_fn = None
         self._restore_fn = None
         self.sim_latency = sim_latency
@@ -947,6 +1103,11 @@ class ContinuousRolloutEngine:
                     self.kv_page_size)
                 self._snap_fn = _build_snap_fn(self.cfg)
                 self._restore_fn = _build_restore_fn(self.cfg)
+                if self.prefix_cache:
+                    self._cow_fn = _build_cow_fn(self.cfg)
+                    self._suffix_fn = _build_suffix_fn(
+                        self.cfg, self.use_kernel, self.max_len,
+                        self.kv_page_size)
             else:
                 self._refill_fn = _build_refill_fn(self.cfg, self.use_kernel,
                                                    self.max_len)
@@ -993,6 +1154,12 @@ class ContinuousRolloutEngine:
             self._stacked = init_stacked_buffer(tree, self.max_adapters)
         self._stacked = self._write_adapter_fn(self._stacked, tree,
                                                jnp.int32(index))
+        if self._prefix_idx is not None:
+            # cached K/V was produced under the OLD adapter weights — a
+            # match against it would be silently wrong for the new ones
+            stale = self._prefix_idx.invalidate(index)
+            if stale:
+                self._pages.release(stale)
 
     # -- submission ------------------------------------------------------
     def submit(self, req: RolloutRequest, meta=None):
@@ -1159,6 +1326,7 @@ class ContinuousRolloutEngine:
         """Finish an episode that holds NO slot (parked in the env stage:
         tool timeout or abort)."""
         self._drop_snap(row)          # a dead row's snapshot frees its arena
+        self._release_dev(row)        # ... and its in-pool parked pages
         self._completed.append(self._completion(row, row.req.prompt, -1))
         self.stats.completions += 1
 
@@ -1232,6 +1400,124 @@ class ContinuousRolloutEngine:
             self._snap_store.remove(row.snap)
             row.snap = None
 
+    def _release_dev(self, row: _Row):
+        """Drop a row's device-resident parked pages (death paths: abort,
+        timeout, capacity finish) — the counterpart of ``_drop_snap`` for
+        the in-pool tier."""
+        if getattr(row, "dev_pages", None) is not None:
+            self._pages.release(row.dev_pages)
+            row.dev_pages, row.dev_pos = None, 0
+            if row in self._dev_parked:
+                self._dev_parked.remove(row)
+
+    # -- prefix cache: allocation relief + device-resident parking ---------
+    def _alloc_pages(self, n: int, *, spill: bool = True
+                     ) -> Optional[List[int]]:
+        """Pool allocation with prefix-cache pressure relief: on failure,
+        evict cold radix entries (LRU leaves), then spill the oldest
+        device-parked row's pages to the host snapshot tier, then retry.
+        ``spill=False`` keeps the call host-only (no device gather) — use
+        it under ``_stage_lock``."""
+        if n == 0:
+            return []
+        pages = self._pages.alloc(n)
+        while pages is None:
+            if self._prefix_idx is not None:
+                dropped = self._prefix_idx.pop_lru(
+                    max(1, n - self._pages.free_pages))
+                if dropped:
+                    self._pages.release(dropped)
+                    pages = self._pages.alloc(n)
+                    continue
+            if not (spill and self._spill_dev_parked()):
+                return None
+            pages = self._pages.alloc(n)
+        return pages
+
+    def _spill_dev_parked(self) -> bool:
+        """Spill tier: demote the oldest device-parked row to a host
+        snapshot (gather its pages off-device, merge with its recurrent
+        -state snapshot if any) so the pool pages free up. If the snapshot
+        store rejects the bytes, the row falls back to token replay —
+        either way its pages return to the pool. Returns True if a row was
+        spilled."""
+        if not self._dev_parked:
+            return False
+        row = self._dev_parked.pop(0)
+        n_pg = len(row.dev_pages)
+        outs = self._snap_fn(self._cache,
+                             jnp.asarray(self._padded_pages(row.dev_pages)),
+                             jnp.int32(0))
+        old = row.snap            # hybrid park: recurrent-only snapshot
+        snap = KVSnapshot(
+            pos=row.dev_pos, cur=row.gen[-1],
+            kpages=np.asarray(outs["kp"][:, :n_pg]),
+            vpages=np.asarray(outs["vp"][:, :n_pg]),
+            ssm=old.ssm if old is not None else None,
+            conv=old.conv if old is not None else None)
+        if old is not None:
+            self._snap_store.remove(old)
+            row.snap = None
+        self._pages.release(row.dev_pages)
+        row.dev_pages, row.dev_pos = None, 0
+        if self._snap_store.try_add(snap):
+            row.snap = snap
+            self.stats.snapshots += 1
+        else:
+            self.stats.snapshot_drops += 1   # token-replay fallback
+        return True
+
+    def _dev_park_row(self, slot: int, row: _Row) -> bool:
+        """Device-resident park/preempt (prefix cache): the row KEEPS its
+        pool pages — ownership moves from the slot to the row, resume is a
+        block-table splice, and ZERO bytes cross the host boundary for the
+        attention family. Recurrent state (hybrid) has no paged
+        representation and still snapshots to host; if the store rejects
+        it the row falls back to token replay (pages released). Returns
+        True when the slot was vacated (device-resident or replay)."""
+        if not (self.prefix_cache and self.resume_restore):
+            return False
+        if self.cfg.family == "ssm" or not self._slot_pages[slot]:
+            return False                 # no attention pages to keep
+        pos = self._slot_pos[slot]
+        n_pg = self._row_pages_needed(pos)
+        pages = self._slot_pages[slot]
+        if "ssm" in self._cache:         # hybrid: recurrent part to host
+            outs = self._snap_fn(self._cache,
+                                 jnp.asarray(self._padded_pages([])),
+                                 jnp.int32(slot))
+            snap = KVSnapshot(pos=pos, cur=row.gen[-1],
+                              ssm=np.asarray(outs["ssm"]).copy(),
+                              conv=np.asarray(outs["conv"]).copy())
+            if not self._snap_store.try_add(snap):
+                self.stats.snapshot_drops += 1
+                self._free_slot_pages(slot)      # replay fallback
+                return True
+            row.snap = snap
+            self.stats.snapshots += 1
+        # the slot may hold one slack page pre-allocated for the pending
+        # write (pos % page == 0): it has no valid entries — drop it
+        if n_pg < len(pages):
+            self._pages.release(pages[n_pg:])
+        row.dev_pages = pages[:n_pg]
+        row.dev_pos = pos
+        self._dev_parked.append(row)
+        # hand-off WITHOUT release: the row now owns the refcounts
+        self._slot_pages[slot] = []
+        self._tbl_host[slot, :] = self._pages.sentinel
+        self._tbl_dirty = True
+        return True
+
+    def _park_or_snap(self, slot: int, row: _Row):
+        """Vacate a slot preserving resume state: device-resident when the
+        prefix cache is on (pure retain, no host round-trip), host
+        snapshot otherwise; both fall back to token replay under memory
+        pressure."""
+        if self._dev_park_row(slot, row):
+            return
+        self._snapshot_row(slot, row)
+        self._free_slot_pages(slot)
+
     def _finish_capacity(self, row: _Row):
         """Cache-capacity eviction: the page pool cannot serve this row
         even when otherwise idle, so the episode finishes with what it has
@@ -1260,12 +1546,65 @@ class ContinuousRolloutEngine:
                 # when it is genuinely next in scheduler order — it must
                 # not jump a higher-priority tenant's fresh rows (e.g. the
                 # newcomer its own preemption just made room for)
-                row = self._sched.pop_if(self.stats.refills,
-                                         lambda r: r.snap is not None)
+                row = self._sched.pop_if(
+                    self.stats.refills,
+                    lambda r: r.snap is not None or r.dev_pages is not None)
             if row is None:
                 break
+            if row.dev_pages is not None:
+                # device-resident resume: the pages never left the pool —
+                # reattach them to the slot's block table and reset the
+                # device row state. Zero KV bytes cross the host boundary
+                # (the restore call's page writes land on the scratch
+                # page); only the hybrid recurrent rows come back up.
+                slot = free.pop(0)
+                t0 = time.monotonic()
+                kz = vz = jnp.zeros(
+                    (self._cache["kp"].shape[0], self._max_pg,
+                     self.kv_page_size, self.cfg.num_kv_heads,
+                     self.cfg.head_dim), self._cache["kp"].dtype)
+                zssm = self._cache.get("ssm")
+                ssm_row = (jnp.asarray(row.snap.ssm)
+                           if row.snap is not None and row.snap.ssm is not None
+                           else (zssm[:, 0] if zssm is not None
+                                 else jnp.zeros((1,))))
+                zconv = self._cache.get("conv")
+                conv_row = (jnp.asarray(row.snap.conv)
+                            if row.snap is not None and row.snap.conv is not None
+                            else (zconv[:, 0] if zconv is not None
+                                  else jnp.zeros((1,))))
+                self._cache, state = self._restore_fn(
+                    self._cache, kz, vz,
+                    jnp.asarray(self._padded_pages([])), jnp.int32(slot),
+                    jnp.int32(row.dev_pos), ssm_row, conv_row,
+                    jnp.int32(row.gen[-1]), jnp.int32(len(row.gen)),
+                    jnp.asarray(row.key, jnp.uint32),
+                    jnp.float32(row.req.temperature),
+                    jnp.int32(row.req.adapter_index), self._d_cur,
+                    self._d_counters, self._d_keys, self._d_temps,
+                    self._d_row_ids)
+                (self._d_cur, self._d_counters, self._d_keys,
+                 self._d_temps, self._d_row_ids) = state
+                self._mask_sig = None
+                now = time.monotonic()
+                self._rows[slot] = row
+                self._prompts[slot] = list(row.req.prompt)
+                # ownership transfer back: slot adopts the row's refcounts
+                self._assign_slot_pages(slot, row.dev_pages, row.dev_pos)
+                self._dev_parked.remove(row)
+                row.dev_pages, row.dev_pos = None, 0
+                self._drop_snap(row)
+                self.stats.restores += 1
+                self.stats.device_resident_resumes += 1
+                self.stats.replay_tokens_saved += (row.prompt_len
+                                                   + len(row.gen))
+                self.stats.splice_seconds += now - t0
+                if self.on_stage is not None:
+                    self.on_stage("splice", row.req.task_id, t0, now)
+                did = True
+                continue
             snap = row.snap
-            pages = self._pages.alloc(snap.n_pages)
+            pages = self._alloc_pages(snap.n_pages)
             if pages is None:
                 if (self._pages.used_pages == 0
                         and snap.n_pages > self._pages.n_pages):
@@ -1335,8 +1674,30 @@ class ContinuousRolloutEngine:
             if need_idx >= self._max_pg:
                 continue            # accept() finishes the row at max_len
             if need_idx < len(self._slot_pages[slot]):
+                page = self._slot_pages[slot][need_idx]
+                if (self.prefix_cache
+                        and self._pages.refcount(page) > 1):
+                    # copy-on-write fork: the row is about to decode-write
+                    # into a SHARED page — privatize just this page (alloc
+                    # + one-page copy); every earlier shared page stays
+                    # shared. The last sibling standing sees rc==1 and
+                    # writes in place.
+                    pg = self._alloc_pages(1)
+                    if pg is None:
+                        r.status, r.finish_reason = "done", "capacity"
+                        self.stats.pool_exhausted += 1
+                        self._evict(slot)
+                        continue
+                    self._cache = self._cow_fn(self._cache, jnp.int32(page),
+                                               jnp.int32(pg[0]))
+                    self._pages.release([page])
+                    self._slot_pages[slot][need_idx] = pg[0]
+                    self._tbl_host[slot, need_idx] = pg[0]
+                    self._tbl_dirty = True
+                    self.stats.cow_forks += 1
                 continue
-            pg = self._pages.alloc(1)
+            pg = (self._alloc_pages(1) if self.prefix_cache
+                  else self._pages.alloc(1))
             if pg is None:
                 r.status, r.finish_reason = "done", "capacity"
                 self.stats.pool_exhausted += 1
@@ -1348,8 +1709,10 @@ class ContinuousRolloutEngine:
 
     def page_stats(self) -> Dict[str, float]:
         """Pool occupancy/fragmentation gauges: used/total pages, the
-        high-water mark, and internal fragmentation (allocated page slack
-        beyond the live cache entries)."""
+        high-water mark, internal fragmentation (allocated page slack
+        beyond the live cache entries), and the prefix-cache sharing
+        gauges (shared pages, index-held pages, HBM bytes per resident
+        row)."""
         if self._pages is None:
             return {}
         used = self._pages.used_pages
@@ -1359,12 +1722,55 @@ class ContinuousRolloutEngine:
                    for s in range(self.max_slots)
                    if self._rows[s] is not None)
         frag = 1.0 - live / cap_tokens if cap_tokens else 0.0
+        resident = sum(1 for r in self._rows if r is not None)
+        resident += len(self._dev_parked)      # in-pool parked rows count:
+                                               # their pages are HBM too
+        dtype_bytes = (self._cache["kp"].dtype.itemsize
+                       if self._cache is not None and "kp" in self._cache
+                       else 2)
+        hbm = cap_tokens * self.cfg.state_bytes_per_token(dtype_bytes)
         return {"kv_pages_used": float(used),
                 "kv_pages_total": float(self._pages.n_pages),
                 "kv_pages_peak": float(self._pages.peak_used),
                 "kv_page_frag": float(frag),
+                "kv_shared_pages": float(self._pages.shared_pages),
+                "kv_prefix_pages": float(
+                    self._prefix_idx.held_pages
+                    if self._prefix_idx is not None else 0),
+                "kv_hbm_bytes_per_row": float(hbm / max(1, resident)),
                 "snapshot_bytes": float(
                     self._snap_store.bytes_used if self._snap_store else 0)}
+
+    def check_page_invariants(self):
+        """Debug assertion the test suite runs after every drive loop:
+        allocator-level conservation (``PagePool.check_invariants``) PLUS
+        exact refcount accounting — every page's rc must equal its owner
+        count across resident slots, device-parked rows, and radix-index
+        nodes, and the host block-table mirror must name exactly the
+        slots' pages. Catches COW leaks and double-frees at the step they
+        happen instead of as end-of-run drift."""
+        if self._pages is None:
+            return
+        self._pages.check_invariants()
+        owners = np.zeros((self._pages.n_pages,), np.int64)
+        for s in range(self.max_slots):
+            for p in self._slot_pages[s]:
+                owners[p] += 1
+            want = np.full((self._max_pg,), self._pages.sentinel, np.int32)
+            want[:len(self._slot_pages[s])] = self._slot_pages[s]
+            assert (self._tbl_host[s] == want).all(), \
+                f"slot {s}: block-table mirror out of sync"
+        for row in self._dev_parked:
+            assert row.dev_pages is not None
+            for p in row.dev_pages:
+                owners[p] += 1
+        if self._prefix_idx is not None:
+            for p, n in self._prefix_idx.refcounts().items():
+                owners[p] += n
+        for p in range(self._pages.n_pages):
+            assert self._pages.refcount(p) == owners[p], (
+                f"page {p}: rc={self._pages.refcount(p)} but "
+                f"{owners[p]} owners (slots+parked+index)")
 
     def queued_state_bytes(self, task_id: str,
                            dtype_bytes: int = 2) -> Optional[int]:
@@ -1388,6 +1794,11 @@ class ContinuousRolloutEngine:
         fixed = self.cfg.state_bytes_fixed(dtype_bytes)
         total = 0
         for r in rows:
+            if getattr(r, "dev_pages", None) is not None:
+                # device-parked: its pages are ALREADY in the pool — the
+                # resume allocates nothing, only the fixed state returns
+                total += fixed
+                continue
             n_pg = (r.snap.n_pages if getattr(r, "snap", None) is not None
                     else self._row_pages_needed(r.prompt_len + len(r.gen)))
             total += n_pg * self.kv_page_size * per_tok + fixed
@@ -1416,8 +1827,7 @@ class ContinuousRolloutEngine:
         row = self._rows[slot]
         row.replays += 1
         if self.paged_kv:
-            self._snapshot_row(slot, row)
-            self._free_slot_pages(slot)
+            self._park_or_snap(slot, row)
         self._rows[slot] = None
         self._prompts[slot] = None
         self.stats.preemptions += 1
@@ -1457,6 +1867,193 @@ class ContinuousRolloutEngine:
             freed += 1
         return freed
 
+    # -- radix prefix reuse + GRPO-group sharing ---------------------------
+    def _radix_on(self) -> bool:
+        """Radix/group page sharing applies to pure-attention stacks only:
+        suffix prefill at an arbitrary page offset is exact for attention
+        (the same chunked-prefill decomposition the async workers use) but
+        not for SSD recurrences mid-chunk, and SSM/hybrid rows carry
+        recurrent state that has no shareable paged form."""
+        return (self._prefix_idx is not None and self._cache is not None
+                and "kp" in self._cache and "ssm" not in self._cache)
+
+    def _group_key(self, r: _Row):
+        return (r.req.adapter_index, tuple(r.req.prompt))
+
+    def _radix_candidate(self, r: _Row):
+        """Shared-install plan for a queued row whose prefix is in-pool:
+        ``(shared_pages, start, L)`` or None. ``shared_pages`` are the
+        pool pages the row will reference (NOT yet retained) and ``start``
+        the page-aligned offset its suffix prefill resumes from. An exact
+        whole-sequence hit (a GRPO-group sibling, or an unmodified
+        re-submit) shares EVERY page including the partial tail: nothing
+        is written at install — the final chunk recomputes only for the
+        first-token logits — and the first decode write past the shared
+        boundary COW-forks the tail page."""
+        if r.snap is not None or r.dev_pages is not None:
+            return None
+        seq = list(r.req.prompt) + r.gen
+        L = len(seq)
+        adapter = r.req.adapter_index
+        hit = self._prefix_idx.match_full(adapter, seq)
+        if hit is not None:
+            pages, tail = hit
+            shared = pages + ([tail] if tail is not None else [])
+            start = (len(pages) - (1 if tail is None else 0)) \
+                * self.kv_page_size
+            if start + _bucket_len(L - start) <= self.max_len:
+                return (shared, start, L)
+        pages = self._prefix_idx.match(adapter, seq, max_tokens=L - 1)
+        if not pages:
+            return None
+        start = len(pages) * self.kv_page_size
+        if start + _bucket_len(L - start) > self.max_len:
+            return None                  # suffix bucket would overflow
+        return (pages, start, L)
+
+    def _index_prompt(self, row: _Row, row_pages: List[int]):
+        """Publish a freshly installed row's prompt pages (full pages +
+        partial tail) to the per-tenant radix index so later same-prefix
+        rows share them. The index holds its own refcount per page
+        (retained here); entries outlive the row and drop via LRU eviction
+        under pool pressure or adapter-swap invalidation. Valid on EVERY
+        install path — prompt-position K/V depends only on prompt tokens,
+        so even a replayed row's pages hold the exact prompt prefix."""
+        if not self._radix_on():
+            return
+        n_full = row.prompt_len // self.kv_page_size
+        if n_full < 1:
+            return
+        rem = row.prompt_len % self.kv_page_size
+        tail = (int(row_pages[n_full])
+                if rem and len(row_pages) > n_full else None)
+        newly = self._prefix_idx.insert(
+            row.req.adapter_index, row.req.prompt,
+            [int(p) for p in row_pages[:n_full]], tail_page=tail)
+        if newly:
+            self._pages.retain(newly)
+
+    def _radix_fill_rows(self) -> bool:
+        """Decode-thread install of queued rows whose prefix is already
+        in-pool (radix hit / GRPO sibling): retain the shared pages,
+        prefill ONLY the suffix (`_suffix_fn`, one width-1 call per row;
+        jit caches one variant per (start, suffix-bucket) pair), and book
+        only the suffix as prefill work. Runs before the private fill
+        paths each step, and pops with ``pop_if`` so a sharable row never
+        jumps a higher-priority tenant."""
+        if not self._radix_on():
+            return False
+        free = [s for s in range(self.max_slots) if self._rows[s] is None]
+        if not free:
+            return False
+        self._ensure_built()
+        if self._stacked is None:
+            return False          # the fill paths raise the proper error
+        installed = 0
+        while free:
+            with self._stage_lock:
+                row = self._sched.pop_if(
+                    self.stats.refills,
+                    lambda r: self._radix_candidate(r) is not None)
+            if row is None:
+                break
+            plan = self._radix_candidate(row)
+            if plan is None:      # index mutated between pop and here
+                with self._stage_lock:
+                    self._sched.push(row, self.stats.refills)
+                break
+            shared, start, L = plan
+            self._pages.retain(shared)
+            fresh = self._alloc_pages(self._row_pages_needed(L)
+                                      - len(shared))
+            if fresh is None:     # pool pressure: retry next step
+                self._pages.release(shared)
+                with self._stage_lock:
+                    self._sched.push(row, self.stats.refills)
+                break
+            slot = free.pop(0)
+            t0 = time.monotonic()
+            seq = list(row.req.prompt) + row.gen
+            S_b = _bucket_len(L - start)
+            toks = np.zeros((1, S_b), np.int32)
+            toks[0, :L - start] = seq[start:]
+            n_chunks = self.max_len // self.kv_page_size
+            dest = np.full((n_chunks,), self._pages.sentinel, np.int32)
+            dest[len(shared):len(shared) + len(fresh)] = fresh
+            was_forced = bool(row.forced_q)
+            first, lp, self._cache, state = self._suffix_fn(
+                start, self.base_params, self._stacked,
+                jnp.asarray([row.req.adapter_index], jnp.int32),
+                jnp.asarray(shared[:start // self.kv_page_size], jnp.int32),
+                jnp.asarray(toks), jnp.asarray([L], jnp.int32),
+                jnp.asarray([len(row.gen)], jnp.int32),
+                jnp.asarray(row.key[None], jnp.uint32),
+                jnp.asarray([row.req.temperature], jnp.float32),
+                jnp.asarray([row.forced_q[0] if was_forced else 0],
+                            jnp.int32),
+                jnp.asarray([1 if was_forced else 0], jnp.int32),
+                self._cache, jnp.asarray(dest), jnp.int32(slot),
+                self._d_cur, self._d_counters, self._d_keys, self._d_temps,
+                self._d_row_ids)
+            (self._d_cur, self._d_counters, self._d_keys, self._d_temps,
+             self._d_row_ids) = state
+            self._mask_sig = None
+            now = time.monotonic()
+            installed += 1
+            self._rows[slot] = row
+            self._prompts[slot] = list(row.req.prompt)
+            self._assign_slot_pages(slot, shared + fresh, L)
+            self._index_prompt(row, shared + fresh)
+            self.stats.prefix_hits += 1
+            self.stats.prefix_hit_tokens += start
+            self.stats.prefill_tokens += L - start      # suffix only
+            self.stats.prefill_seconds += now - t0
+            self.stats.decode_stall_seconds += now - t0
+            if was_forced:                    # env-stage resume splice
+                row.forced_q.pop(0)
+                if row.gen:
+                    self.stats.replays += 1
+                    self.stats.replay_tokens += L - start
+            elif row.gen:                     # preemption replay
+                self.stats.replays += 1
+                self.stats.replay_tokens += L - start
+            else:                             # fresh row (GRPO sibling)
+                self.stats.prefills += 1
+                row.started_at = now
+            self.stats.tokens_generated += 1
+            if not was_forced:
+                self.stats.sampled_tokens += 1
+            if self.on_stage is not None:
+                self.on_stage("prefill", row.req.task_id, t0, now)
+            action = row.accept(int(np.asarray(first)[0]),
+                                float(np.asarray(lp)[0]),
+                                0.0 if was_forced else 1.0, self.max_len)
+            if action == "call":
+                self._on_call(slot)
+            elif action == "done":
+                self._evict(slot)
+        if installed:
+            self.stats.refills += 1    # one refill event (starvation aging)
+        return installed > 0
+
+    def _fusable_forced(self, row: _Row) -> bool:
+        """Response-prefill fusion guard: a forced RESP…ENDRESP block can
+        fold into the row's (re)prefill call only when replaying it
+        step-wise would provably not terminate or branch mid-block —
+        forced tokens never dispatch CALLs (mask 0), so the only early
+        exits are a forced EOS, the max_len capacity trip, or the
+        sampling budget firing at the block's last token."""
+        q = row.forced_q
+        if len(q) <= 1:
+            return False            # single opener: already one call
+        if tok.EOS in q:
+            return False
+        if row.prompt_len + len(row.gen) + len(q) >= self.max_len:
+            return False
+        if row.sampled >= row.req.max_new_tokens:
+            return False
+        return True
+
     def _refill_free_slots(self) -> bool:
         """Fill every freed slot from the queue with ONE fused jitted call:
         batch-prefill the incoming rows, splice their KV/SSM state into the
@@ -1467,7 +2064,14 @@ class ContinuousRolloutEngine:
         The queue pops in scheduler order (priority / predicted-remaining /
         starvation tier). A preemption-replayed row prefills its prompt +
         generated prefix in one sequence and samples token `len(gen)` with
-        counter `len(gen)` — bit-identical continuation."""
+        counter `len(gen)` — bit-identical continuation.
+
+        Prefix cache interplay: snapshot/device-parked rows restore on the
+        decode thread and radix-sharable rows install via
+        ``_radix_fill_rows`` — neither pops here. A GRPO sibling of a row
+        popped THIS round defers one step (``seen_keys``) so the leader's
+        pages reach the index first and the sibling lands as an
+        exact-match share instead of a private prefill."""
         free = [s for s in range(self.max_slots) if self._rows[s] is None]
         with self._stage_lock:
             has_queued = bool(self._sched)
@@ -1479,9 +2083,23 @@ class ContinuousRolloutEngine:
         t0 = time.monotonic()
         incoming: List[Tuple[int, _Row]] = []
         pages_of: List[List[int]] = []
-        # snapshot-carrying rows restore on the decode thread (no prefill
-        # at all) — the replay/fresh refill must not pop them
-        where = (lambda r: r.snap is None) if self.resume_restore else None
+        seen_keys = set()
+        radix = self._radix_on()
+        where = None
+        if self.resume_restore or radix:
+            def where(r):
+                # snapshot/device-parked rows restore on the decode
+                # thread (no prefill at all); radix candidates install
+                # through the suffix-only path
+                if r.snap is not None or r.dev_pages is not None:
+                    return False
+                if radix and self._radix_candidate(r) is not None:
+                    return False
+                if radix and len(r.req.prompt) >= self.kv_page_size \
+                        and self._group_key(r) in seen_keys:
+                    return False        # sibling: wait for the leader
+                return True
+        pressure = False
         with self._stage_lock:
             while free and self._sched:
                 row = self._sched.pop(self.stats.refills, where=where)
@@ -1490,23 +2108,43 @@ class ContinuousRolloutEngine:
                 if self.paged_kv:
                     n_pg = self._row_pages_needed(
                         len(row.req.prompt) + len(row.gen))
-                    pages = self._pages.alloc(n_pg)
+                    # spill=False: dev-parked spilling gathers device
+                    # state (host sync) — never under _stage_lock; cold
+                    # radix entries still evict (pure host bookkeeping)
+                    pages = self._alloc_pages(n_pg, spill=False)
                     if pages is None:
                         if self._pages.used_pages == 0:
                             self._finish_capacity(row)   # can never fit
                             continue
                         # pool pressure: resident rows will free pages
                         self._sched.push(row, self.stats.refills)
+                        pressure = True
                         break
                     pages_of.append(pages)
                 incoming.append((free.pop(0), row))
+                if radix:
+                    seen_keys.add(self._group_key(row))
         if not incoming:
+            if pressure and self._dev_parked:
+                # nothing installable and nothing resident to free pages:
+                # demote the oldest device-parked row to the host tier
+                # (outside the lock) so the next step's alloc succeeds
+                self._spill_dev_parked()
             return False
         k = len(incoming)
         W = 1                                    # next-pow2 width bucket
         while W < k:
             W *= 2
-        seqs = [list(row.req.prompt) + row.gen for _, row in incoming]
+        # response-prefill fusion (paged path): a resume's whole forced
+        # RESP…ENDRESP block joins the prefilled sequence — its tokens are
+        # known — instead of force-feeding one decode step each
+        fused = [self.paged_kv and self._fusable_forced(row)
+                 for _, row in incoming]
+        seqs = [list(row.req.prompt) + row.gen
+                + (row.forced_q if fused[j] else [])
+                for j, (_, row) in enumerate(incoming)]
+        F_B = max([1] + [_bucket_len(len(r.forced_q))
+                         for j, (_, r) in enumerate(incoming) if fused[j]])
         S_p = _bucket_len(max(len(s) for s in seqs))
         tokens = np.zeros((W, S_p), np.int32)
         prompt_lens = np.ones((W,), np.int32)    # ghosts: len-1 dummy prompt
@@ -1517,6 +2155,9 @@ class ContinuousRolloutEngine:
         temps = np.ones((W,), np.float32)
         forced = np.zeros((W,), np.int32)        # env-stage resumes install
         fmask = np.zeros((W,), np.int32)         # a forced RESP opener
+        fpos = np.zeros((W, F_B), np.int32)      # fusion: positions whose
+        ftoks = np.zeros((W, F_B), np.int32)     # logits predict each
+                                                 # forced token
         for j, (slot, row) in enumerate(incoming):
             tokens[j, :len(seqs[j])] = seqs[j]
             prompt_lens[j] = len(seqs[j])
@@ -1525,7 +2166,13 @@ class ContinuousRolloutEngine:
             slots[j] = slot
             keys[j] = row.key
             temps[j] = row.req.temperature
-            if row.forced_q:
+            if fused[j]:
+                L0 = len(row.req.prompt) + len(row.gen)
+                Fj = len(row.forced_q)
+                init_counters[j] = len(row.gen) + Fj
+                fpos[j, :Fj] = np.arange(L0 - 1, L0 - 1 + Fj)
+                ftoks[j, :Fj] = row.forced_q
+            elif row.forced_q:
                 forced[j] = row.forced_q[0]
                 fmask[j] = 1
         if self.paged_kv:
@@ -1535,14 +2182,15 @@ class ContinuousRolloutEngine:
             dest = np.full((W, n_chunks), self._pages.sentinel, np.int32)
             for j, pages in enumerate(pages_of):
                 dest[j, :len(pages)] = pages
-            first, lp, self._cache, state = self._refill_fn(
+            first, lp, flp, self._cache, state = self._refill_fn(
                 self.base_params, self._stacked, jnp.asarray(tokens),
                 jnp.asarray(prompt_lens), jnp.asarray(init_counters),
                 jnp.asarray(slots), jnp.asarray(dest), jnp.asarray(row_ids),
                 jnp.asarray(keys), jnp.asarray(temps), jnp.asarray(forced),
-                jnp.asarray(fmask), self._cache, self._d_cur,
-                self._d_counters, self._d_keys, self._d_temps,
-                self._d_row_ids)
+                jnp.asarray(fmask), jnp.asarray(fpos), jnp.asarray(ftoks),
+                self._cache, self._d_cur, self._d_counters, self._d_keys,
+                self._d_temps, self._d_row_ids)
+            flp = np.asarray(flp)
         else:
             first, lp, self._cache, state = self._refill_fn(
                 self.base_params, self._stacked, jnp.asarray(tokens),
@@ -1572,19 +2220,33 @@ class ContinuousRolloutEngine:
             self._prompts[slot] = list(row.req.prompt)
             if self.paged_kv:
                 self._assign_slot_pages(slot, pages_of[j], len(seqs[j]))
+                self._index_prompt(row, pages_of[j])
             was_forced = fmask[j] == 1
-            if was_forced:                        # env-stage resume splice
-                row.forced_q.pop(0)
+            L_replay = len(row.req.prompt) + len(row.gen)
+            if was_forced or fused[j]:            # env-stage resume splice
                 if row.gen:   # the resume re-prefilled prompt+prefix: the
                     self.stats.replays += 1       # per-turn recomputation
-                    self.stats.replay_tokens += len(seqs[j])  # restore kills
+                    self.stats.replay_tokens += L_replay  # restore kills
             elif row.gen:                         # preemption replay
                 self.stats.replays += 1
-                self.stats.replay_tokens += len(seqs[j])
+                self.stats.replay_tokens += L_replay
             else:                                 # fresh row
                 self.stats.prefills += 1
                 row.started_at = now
             self.stats.prefill_tokens += len(seqs[j])
+            if fused[j]:
+                Fj = len(row.forced_q)
+                self.stats.fused_forced_tokens += Fj
+                self.stats.tokens_generated += Fj
+                for t in range(Fj):
+                    tk = row.forced_q.pop(0)   # pop BEFORE accept, like the
+                    # step-wise path: accept's budget check reads forced_q
+                    action = row.accept(tk, float(flp[j, t]), 0.0,
+                                        self.max_len)
+                    assert action == "continue", \
+                        "fusion guard admitted a terminating forced block"
+            elif was_forced:
+                row.forced_q.pop(0)
             self.stats.tokens_generated += 1
             if not was_forced:
                 self.stats.sampled_tokens += 1
@@ -1618,7 +2280,7 @@ class ContinuousRolloutEngine:
             row = rr.row
             pages: List[int] = []
             if self.paged_kv:
-                alloc = self._pages.alloc(self._row_pages_needed(rr.seq_len))
+                alloc = self._alloc_pages(self._row_pages_needed(rr.seq_len))
                 if alloc is None:
                     if self._pages.used_pages == 0:
                         self._finish_capacity(row)      # can never fit
@@ -1659,11 +2321,14 @@ class ContinuousRolloutEngine:
             self._prompts[slot] = list(row.req.prompt)
             if self.paged_kv:
                 self._assign_slot_pages(slot, pages, rr.seq_len)
-            if rr.forced_first:                   # env-stage resume splice
-                row.forced_q.pop(0)
+                self._index_prompt(row, pages)
+            n_fused = len(rr.forced_lps)
+            if rr.forced_first or n_fused:        # env-stage resume splice
+                if rr.forced_first:
+                    row.forced_q.pop(0)
                 if row.gen:                       # resume re-prefilled the
                     self.stats.replays += 1       # whole prefix async
-                    self.stats.replay_tokens += rr.seq_len
+                    self.stats.replay_tokens += rr.seq_len - n_fused
             elif row.gen:                         # preemption replay
                 self.stats.replays += 1
                 self.stats.replay_tokens += rr.seq_len
@@ -1672,6 +2337,18 @@ class ContinuousRolloutEngine:
                 row.started_at = now
             self.stats.splices += 1
             self.stats.splice_wait_seconds += max(0.0, now - rr.ready_at)
+            if n_fused:
+                # response-prefill fusion: the worker prefilled the whole
+                # forced block — book its tokens here with the prefill
+                # logprobs (bit-equal to the step-wise force-feed)
+                self.stats.fused_forced_tokens += n_fused
+                self.stats.tokens_generated += n_fused
+                for t in range(n_fused):
+                    tk = row.forced_q.pop(0)
+                    action = row.accept(tk, rr.forced_lps[t], 0.0,
+                                        self.max_len)
+                    assert action == "continue", \
+                        "fusion guard admitted a terminating forced block"
             self.stats.tokens_generated += 1
             if not rr.forced_first:
                 self.stats.sampled_tokens += 1
@@ -1719,12 +2396,11 @@ class ContinuousRolloutEngine:
         latency = row.req.env.sample_env_latency(
             _RandomShim(self._rng)) if not self.sim_latency else 0.0
         if self.paged_kv:
-            # resume_restore: the row's KV pages + recurrent state go to
-            # host so the tool-response resume splices them back instead
-            # of replaying prompt+prefix (the per-turn recomputation this
-            # PR kills); the freed pages immediately serve the refill
-            self._snapshot_row(slot, row)
-            self._free_slot_pages(slot)
+            # resume_restore: the row's resume state is preserved — pages
+            # stay IN-POOL under the prefix cache (pure retain, zero host
+            # bytes) or snapshot to host otherwise; the tool-response
+            # resume splices them back instead of replaying prompt+prefix
+            self._park_or_snap(slot, row)
         self._rows[slot] = None
         self._prompts[slot] = None
         self.stats.parks += 1
@@ -1798,6 +2474,13 @@ class ContinuousRolloutEngine:
         # host snapshot splice their saved pages back on the decode thread
         # — no prefill graph, no replay — before the fill paths run
         if self.resume_restore and self._restore_rows():
+            progressed = True
+        # radix/GRPO shared installs (prefix cache): rows whose prefix is
+        # already in-pool retain it and prefill only their suffix — runs
+        # on the decode thread before the private fill paths in BOTH
+        # fused and disaggregated modes
+        if self.paged_kv and self._stacked is not None \
+                and self._radix_fill_rows():
             progressed = True
         # fill freed slots from the cross-task queue: disaggregated mode
         # splices asynchronously-prefilled rows (decode never runs a prefill

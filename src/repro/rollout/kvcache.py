@@ -29,7 +29,21 @@ O(N·len) recomputation (``RolloutStats.replay_tokens_saved``).
 ``SnapshotStore`` — byte-budgeted host arena for snapshots. Under memory
 pressure (``budget_bytes`` exceeded) a new snapshot is DROPPED rather than
 stored; the row then falls back to the retained token-replay path, which
-is token-for-token identical (property-tested), just slower.
+is token-for-token identical (property-tested), just slower. Since the
+prefix cache (ISSUE 8) parks attention pages device-resident, the store
+is a SPILL tier: it only sees pages when the pool itself is under
+pressure, plus the recurrent SSM/conv states (which have no paged
+representation and always go to host).
+
+``PrefixIndex`` — a per-adapter radix/trie over page-aligned token
+prefixes. Every fully-prefilled prompt inserts its FULL pages (each node
+is one page worth of tokens; the index holds its own refcount on the
+page), and a new request walks its longest indexed prefix, retains those
+pages, and prefills only the suffix. Pages in the index are immutable by
+construction — decode writes land at positions >= the page-aligned
+prompt boundary, and the engine's copy-on-write fork covers any page
+with refcount > 1 — so sharing is safe across GRPO siblings, tool-turn
+resumes, and unrelated requests with a common system prefix.
 
 The pool itself is plain host bookkeeping — device page contents live in
 the engine's cache pytree (``kp``/``vp``: ``[L, n_pages+1, page, KVH,
@@ -39,6 +53,7 @@ somewhere harmless without any clamping in the kernels).
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -85,6 +100,11 @@ class PagePool:
 
     def refcount(self, page: int) -> int:
         return int(self._rc[page])
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages with more than one owner (COW prefix-sharing gauge)."""
+        return int((self._rc > 1).sum())
 
     def check_invariants(self):
         """Allocator invariants (hypothesis property tests call this after
@@ -187,3 +207,205 @@ class SnapshotStore:
     def remove(self, snap: KVSnapshot):
         self.bytes_used -= snap.nbytes
         assert self.bytes_used >= 0
+
+
+class _TrieNode:
+    __slots__ = ("children", "page", "parent", "key", "stamp")
+
+    def __init__(self, parent: Optional["_TrieNode"] = None,
+                 key=None, page: int = -1):
+        self.children: Dict[tuple, "_TrieNode"] = {}
+        self.page = page          # physical page id this node retains
+        self.parent = parent
+        self.key = key            # edge label: tuple of page_size tokens
+        self.stamp = 0            # LRU clock at last touch
+
+
+class PrefixIndex:
+    """Per-adapter radix index over page-aligned token prefixes.
+
+    Each trie edge is one page worth of tokens (a tuple of ``page_size``
+    ints); the node at the end of the edge retains exactly one reference
+    on the physical page holding that chunk's K/V. ``insert`` dedups
+    against existing nodes (a sibling inserting an already-indexed prefix
+    retains nothing new), ``match`` walks the longest indexed prefix, and
+    ``pop_lru`` / ``invalidate`` hand back page ids for the CALLER to
+    release — all ``PagePool`` mutation stays on the engine thread, which
+    serializes pool access. The lock only protects trie structure so that
+    prefill workers may run read-mostly ``match`` probes concurrently
+    with engine inserts/evictions.
+    """
+
+    def __init__(self, page_size: int):
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.page_size = int(page_size)
+        self._lock = threading.Lock()   # guards: _roots/_clock/_held
+        self._roots: Dict[object, _TrieNode] = {}
+        self._clock = 0
+        self._held = 0                  # pages currently retained by nodes
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def held_pages(self) -> int:
+        with self._lock:
+            return self._held
+
+    def refcounts(self) -> Dict[int, int]:
+        """Page id -> number of index nodes retaining it (for the engine's
+        page-invariant checker)."""
+        out: Dict[int, int] = {}
+        with self._lock:
+            for root in self._roots.values():
+                stack = list(root.children.values())
+                while stack:
+                    nd = stack.pop()
+                    out[nd.page] = out.get(nd.page, 0) + 1
+                    stack.extend(nd.children.values())
+        return out
+
+    # -- helpers ---------------------------------------------------------
+    def _chunks(self, tokens) -> List[tuple]:
+        p = self.page_size
+        n = len(tokens) // p
+        return [tuple(int(t) for t in tokens[i * p:(i + 1) * p])
+                for i in range(n)]
+
+    # -- lifecycle -------------------------------------------------------
+    def insert(self, adapter, tokens, pages: List[int],
+               tail_page: Optional[int] = None) -> List[int]:
+        """Index a prompt's FULL pages (``len(pages)`` must cover the
+        page-aligned prefix of ``tokens``) plus, optionally, the PARTIAL
+        tail page holding the remainder — keyed by the (shorter) remainder
+        tuple, so an exact-prompt sibling (GRPO group) can share the whole
+        prompt including its last page and fork it copy-on-write at the
+        first decode write. Returns the subset of page ids newly
+        referenced by the index — the caller must ``retain`` exactly
+        those (the row already owns them, so rc >= 1 holds)."""
+        chunks = self._chunks(tokens)[:len(pages)]
+        rem = tuple(int(t) for t in tokens[len(chunks) * self.page_size:])
+        newly: List[int] = []
+        with self._lock:
+            self._clock += 1
+            node = self._roots.setdefault(adapter, _TrieNode())
+            for i, ch in enumerate(chunks):
+                nxt = node.children.get(ch)
+                if nxt is None:
+                    nxt = _TrieNode(parent=node, key=ch,
+                                    page=int(pages[i]))
+                    node.children[ch] = nxt
+                    newly.append(int(pages[i]))
+                nxt.stamp = self._clock
+                node = nxt
+            if tail_page is not None and rem:
+                nxt = node.children.get(rem)
+                if nxt is None:
+                    nxt = _TrieNode(parent=node, key=rem,
+                                    page=int(tail_page))
+                    node.children[rem] = nxt
+                    newly.append(int(tail_page))
+                nxt.stamp = self._clock
+            self._held += len(newly)
+        return newly
+
+    def match_full(self, adapter, tokens):
+        """Exact whole-sequence match (the GRPO-sibling fast path): every
+        full chunk is indexed AND — for non-page-aligned sequences — a
+        tail node holds the exact remainder. Returns ``(full_pages,
+        tail_page)`` (``tail_page`` None when the sequence is page-aligned)
+        or None. A hit means the sibling installs with ZERO prefill
+        writes: it retains every page, recomputes only the final chunk for
+        its first-token logits, and its first decode write COW-forks the
+        shared tail."""
+        chunks = self._chunks(tokens)
+        rem = tuple(int(t) for t in tokens[len(chunks) * self.page_size:])
+        with self._lock:
+            node = self._roots.get(adapter)
+            if node is None:
+                return None
+            self._clock += 1
+            pages: List[int] = []
+            for ch in chunks:
+                nxt = node.children.get(ch)
+                if nxt is None:
+                    return None
+                nxt.stamp = self._clock
+                pages.append(nxt.page)
+                node = nxt
+            if not rem:
+                return (pages, None) if pages else None
+            tail = node.children.get(rem)
+            if tail is None:
+                return None
+            tail.stamp = self._clock
+            return (pages, tail.page)
+
+    def match(self, adapter, tokens, max_tokens: Optional[int] = None
+              ) -> List[int]:
+        """Longest indexed page-aligned prefix of ``tokens``: the page
+        ids along the path, NOT retained — the engine retains them under
+        its own serialization before any eviction can run (evictions also
+        happen only on the engine thread). ``max_tokens`` caps the match
+        (e.g. to ``len(seq) - 1`` so at least one suffix token remains to
+        prefill)."""
+        chunks = self._chunks(tokens)
+        if max_tokens is not None:
+            chunks = chunks[:max(0, int(max_tokens)) // self.page_size]
+        pages: List[int] = []
+        with self._lock:
+            node = self._roots.get(adapter)
+            if node is None:
+                return []
+            self._clock += 1
+            for ch in chunks:
+                nxt = node.children.get(ch)
+                if nxt is None:
+                    break
+                nxt.stamp = self._clock
+                pages.append(nxt.page)
+                node = nxt
+        return pages
+
+    def pop_lru(self, n_pages: int) -> List[int]:
+        """Remove up to ``n_pages`` least-recently-touched LEAF entries
+        (an emptied parent becomes eligible next round) and return their
+        page ids for the caller to release."""
+        out: List[int] = []
+        with self._lock:
+            while len(out) < n_pages:
+                leaf = None
+                for root in self._roots.values():
+                    stack = list(root.children.values())
+                    while stack:
+                        nd = stack.pop()
+                        if nd.children:
+                            stack.extend(nd.children.values())
+                        elif leaf is None or nd.stamp < leaf.stamp:
+                            leaf = nd
+                if leaf is None:
+                    break
+                del leaf.parent.children[leaf.key]
+                out.append(leaf.page)
+            self._held -= len(out)
+        return out
+
+    def invalidate(self, adapter=None) -> List[int]:
+        """Drop one adapter's subtree (or everything when ``adapter`` is
+        None — e.g. ``set_adapters`` swapped the stack) and return the
+        page ids for the caller to release."""
+        out: List[int] = []
+        with self._lock:
+            if adapter is None:
+                roots = list(self._roots.values())
+                self._roots.clear()
+            else:
+                nd = self._roots.pop(adapter, None)
+                roots = [nd] if nd is not None else []
+            for root in roots:
+                stack = list(root.children.values())
+                while stack:
+                    nd = stack.pop()
+                    out.append(nd.page)
+                    stack.extend(nd.children.values())
+            self._held -= len(out)
+        return out

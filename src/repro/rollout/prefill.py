@@ -46,7 +46,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Deque, List, Optional
 
 import jax
@@ -112,7 +112,7 @@ class PrefillKernels:
         enc = 8 if cfg.family == "encdec" else 0
 
         def whole(params, adapters, row_ids, tokens, seq_lens, init_counters,
-                  keys, temps, forced, forced_mask):
+                  keys, temps, forced, forced_mask, fpos, ftoks):
             pcache = init_cache(cfg, tokens.shape[0], max_len, enc_len=enc)
             lora = batched_ctx(adapters, row_ids, cfg, use_kernel)
             h, pcache, _ = forward_seq(params, tokens, cfg, lora, pcache,
@@ -126,7 +126,15 @@ class PrefillKernels:
                               sampled).astype(jnp.int32)
             lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
                                      first[:, None], axis=-1)[:, 0]
-            return first, lp, pcache
+            # response-prefill fusion: logprob of each forced token off
+            # the logits at the position that predicts it (fpos) — the
+            # same values the step-wise force-feed would record
+            fh = jnp.take_along_axis(
+                h, fpos[:, :, None].astype(jnp.int32), axis=1)
+            flogits = lm_logits(fh, params, cfg)
+            flp = jnp.take_along_axis(jax.nn.log_softmax(flogits, -1),
+                                      ftoks[:, :, None], axis=-1)[:, :, 0]
+            return first, lp, flp, pcache
 
         def chunk(start, params, adapters, row_ids, tokens, seq_lens, pcache):
             lora = batched_ctx(adapters, row_ids, cfg, use_kernel)
@@ -167,15 +175,24 @@ class ReadyRow:
     ready_at: float          # queue timestamp: splice latency = now - this
     forced_first: bool = False   # env-stage resume: `first` is the forced
                                  # RESP opener (loss_mask 0), not a sample
+    forced_lps: List[float] = field(default_factory=list)
+                             # response-prefill fusion: logprobs of the
+                             # whole forced RESP…ENDRESP block, prefilled
+                             # in the same call (seq_len includes them and
+                             # `first` samples AFTER the block)
 
 
 class _Job:
     """One in-flight prefill: host progress of a chunked row."""
-    __slots__ = ("row", "seq", "L", "pcache", "done", "chunks", "spent")
+    __slots__ = ("row", "seq", "L", "pcache", "done", "chunks", "spent",
+                 "fused")
 
-    def __init__(self, row):
+    def __init__(self, row, fused: int = 0):
         self.row = row
         self.seq = list(row.req.prompt) + row.gen
+        self.fused = fused           # forced tokens folded into the prefill
+        if fused:
+            self.seq += row.forced_q[:fused]
         self.L = len(self.seq)
         self.pcache = None
         self.done = 0
@@ -212,21 +229,46 @@ class PrefillWorker(threading.Thread):
                 return None
             if not eng._sched:
                 return None
-            # snapshot-carrying rows (paged engine, resume_restore) never
-            # prefill: the decode thread splices their saved pages back
-            where = ((lambda r: r.snap is None)
-                     if getattr(eng, "resume_restore", False) else None)
+            # snapshot-carrying and device-parked rows (paged engine,
+            # resume_restore / prefix cache) never prefill: the decode
+            # thread splices their saved state back. Radix candidates and
+            # GRPO siblings of rows already in this stage also stay queued
+            # — the decode thread installs them as shared-page suffix
+            # prefills (a sibling popped here would pay a full private
+            # prefill the index was about to save).
+            where = None
+            if (getattr(eng, "resume_restore", False)
+                    or getattr(eng, "prefix_cache", False)):
+                radix = eng._radix_on()
+                seen = set()
+                if radix:
+                    seen = {eng._group_key(r) for r in eng._stage_inflight}
+                    seen |= {eng._group_key(rr.row) for rr in eng._ready}
+
+                def where(r):
+                    if r.snap is not None or r.dev_pages is not None:
+                        return False
+                    if radix and eng._radix_candidate(r) is not None:
+                        return False
+                    if radix and len(r.req.prompt) >= eng.kv_page_size \
+                            and eng._group_key(r) in seen:
+                        return False
+                    return True
             row = eng._sched.pop(eng.stats.refills, where=where)
             if row is not None:
                 eng._stage_inflight.append(row)
             return row
 
-    def _emit(self, job: _Job, first: int, lp: float):
+    def _emit(self, job: _Job, first: int, lp: float,
+              forced_lps: Optional[List[float]] = None):
         eng = self.eng
         ready = ReadyRow(row=job.row, seq_len=job.L, first=first, lp=lp,
-                         init_counter=len(job.row.gen), pcache=job.pcache,
+                         init_counter=len(job.row.gen) + job.fused,
+                         pcache=job.pcache,
                          ready_at=time.monotonic(),
-                         forced_first=bool(job.row.forced_q))
+                         forced_first=bool(job.row.forced_q)
+                         and not job.fused,
+                         forced_lps=forced_lps or [])
         with eng._stage_lock:
             if job.row not in eng._stage_inflight:
                 return    # aborted by drain() while we were prefilling
@@ -250,12 +292,16 @@ class PrefillWorker(threading.Thread):
         row_id = jnp.asarray([row.req.adapter_index], jnp.int32)
         key = jnp.asarray(row.key[None], jnp.uint32)
         temp = jnp.asarray([row.req.temperature], jnp.float32)
-        counter = jnp.asarray([len(row.gen)], jnp.int32)
+        counter = jnp.asarray([len(row.gen) + job.fused], jnp.int32)
         # env-stage resume: the first spliced token is the forced RESP
-        # opener (the response follows via the ordinary force-feed path)
-        forced = jnp.asarray([row.forced_q[0] if row.forced_q else 0],
-                             jnp.int32)
-        fmask = jnp.asarray([1 if row.forced_q else 0], jnp.int32)
+        # opener (the response follows via the ordinary force-feed path) —
+        # unless the job FUSED the whole forced block into its sequence,
+        # in which case `first` is a true sample past the block
+        forced = jnp.asarray(
+            [row.forced_q[0] if row.forced_q and not job.fused else 0],
+            jnp.int32)
+        fmask = jnp.asarray([1 if row.forced_q and not job.fused else 0],
+                            jnp.int32)
         C = eng._prefill_chunk_eff
         t0 = time.monotonic()
 
@@ -269,15 +315,23 @@ class PrefillWorker(threading.Thread):
         if C == 0 or job.L <= C or cfg.family == "encdec":
             toks = np.zeros((1, _bucket_len(job.L)), np.int32)
             toks[0, :job.L] = job.seq
-            first, lp, job.pcache = ker.whole(
+            F = job.fused
+            fpos = np.zeros((1, _bucket_len(F) if F else 1), np.int32)
+            ftoks = np.zeros_like(fpos)
+            if F:
+                L0 = job.L - F
+                fpos[0, :F] = np.arange(L0 - 1, L0 - 1 + F)
+                ftoks[0, :F] = job.seq[L0:]
+            first, lp, flp, job.pcache = ker.whole(
                 params, stacked, row_id, jnp.asarray(toks),
                 jnp.asarray([job.L], jnp.int32), counter, key, temp,
-                forced, fmask)
+                forced, fmask, jnp.asarray(fpos), jnp.asarray(ftoks))
             job.chunks += 1
             first = int(np.asarray(first)[0])
             lp = float(np.asarray(lp)[0])
+            flps = [float(x) for x in np.asarray(flp)[0, :F]] if F else None
             booked(True)
-            self._emit(job, first, lp)
+            self._emit(job, first, lp, flps)
             return True
         if job.pcache is None:
             job.pcache = ker.fresh_cache()
@@ -310,7 +364,19 @@ class PrefillWorker(threading.Thread):
             while not eng._stage_stop.is_set():
                 row = self._try_pop()
                 if row is not None:
-                    jobs.append(_Job(row))
+                    # response-prefill fusion: fold a resume's whole forced
+                    # block into the prefill when the job will run as ONE
+                    # whole-sequence call (per-token logprobs come off the
+                    # same hidden states; chunked jobs keep the step-wise
+                    # force-feed)
+                    C = eng._prefill_chunk_eff
+                    L_f = row.prompt_len + len(row.gen) + len(row.forced_q)
+                    fuse = (getattr(eng, "paged_kv", False)
+                            and eng._fusable_forced(row)
+                            and (C == 0 or L_f <= C
+                                 or eng.cfg.family == "encdec"))
+                    jobs.append(_Job(row,
+                                     fused=len(row.forced_q) if fuse else 0))
                 if not jobs:
                     time.sleep(0.0005)
                     continue

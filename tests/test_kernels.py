@@ -139,6 +139,46 @@ def test_paged_gqa_decode_matches_contiguous():
                                rtol=2e-5, atol=2e-5)
 
 
+def test_paged_gqa_decode_aliased_block_tables():
+    """COW prefix sharing (ISSUE 8) makes block tables alias the SAME
+    physical pages across rows: every row of a GRPO group points its
+    prompt-prefix entries at one shared page set and only the tail pages
+    are private. The kernel indexes the pool through the per-row table, so
+    aliased rows must read identically to rows with private copies of the
+    same values — and rows at different positions within the shared pages
+    must each mask correctly."""
+    ks = jax.random.split(KEY, 4)
+    B, H, KVH, hd, n_pg, page = 4, 8, 2, 32, 4, 16
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    # pool: 2 shared prefix pages + B private tail-region pages (+ scratch)
+    P = 2 + 2 * B
+    kp = jax.random.normal(ks[1], (P + 1, page, KVH, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (P + 1, page, KVH, hd), jnp.float32)
+    tbl = np.zeros((B, n_pg), np.int32)
+    tbl[:, :2] = [0, 1]                       # all rows share pages 0,1
+    for b in range(B):
+        tbl[b, 2:] = [2 + 2 * b, 3 + 2 * b]   # private tails
+    # rows at different depths, including one still inside the shared pages
+    pos = jnp.array([page + 3, 2 * page, 3 * page + 5, 4 * page - 1])
+    out = paged_gqa_decode(q, kp, vp, jnp.asarray(tbl), pos)
+    want = ref.paged_gqa_decode_ref(q, kp, vp, jnp.asarray(tbl), pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # aliasing is value-transparent: materialize private copies of the
+    # shared pages per row and the outputs must match bit-for-bit
+    kp2, vp2 = np.asarray(kp), np.asarray(vp)
+    kp2 = np.concatenate([kp2, kp2[[0, 1]].repeat(B, 0).reshape(
+        2 * B, page, KVH, hd)])
+    vp2 = np.concatenate([vp2, vp2[[0, 1]].repeat(B, 0).reshape(
+        2 * B, page, KVH, hd)])
+    tbl2 = tbl.copy()
+    for b in range(B):
+        tbl2[b, :2] = [P + 1 + b, P + 1 + B + b]
+    out2 = paged_gqa_decode(q, jnp.asarray(kp2), jnp.asarray(vp2),
+                            jnp.asarray(tbl2), pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
 @pytest.mark.parametrize("R,d,V", [(16, 32, 64), (50, 48, 100), (8, 24, 52),
                                    (128, 64, 512)])
 @pytest.mark.parametrize("softcap", [0.0, 30.0])

@@ -164,6 +164,7 @@ def _drive(eng, reqs, preempt_step, victims):
         for c in eng.drain_completions():
             comps[pos_of[c.submit_index]] = c
     assert len(comps) == len(reqs), "engine failed to drain"
+    eng.check_page_invariants()
     return comps, preempted
 
 
@@ -192,12 +193,19 @@ def test_restore_resume_parity_property(fam):
 
     check()
     assert observed["n"] > 0
-    assert eng.stats.restores > 0 and eng.stats.snapshots > 0
+    assert eng.stats.restores > 0
+    # attention rows park DEVICE-RESIDENT under the prefix cache (pure
+    # retain, zero host bytes); recurrent state still snapshots to host
+    assert (eng.stats.snapshots > 0
+            or eng.stats.device_resident_resumes > 0)
     assert eng.stats.replays == 0           # restore NEVER replays
     assert eng.stats.replay_tokens == 0
-    # no leak: pool fully free once idle, snapshot arena empty
-    assert eng._pages.used_pages == 0
+    # no leak: only radix-index retained prompt pages may remain at idle,
+    # the snapshot arena is empty
+    held = eng._prefix_idx.held_pages if eng._prefix_idx else 0
+    assert eng._pages.used_pages == held
     assert eng._snap_store.bytes_used == 0
+    eng.check_page_invariants()
 
 
 # ===========================================================================
@@ -240,6 +248,8 @@ def _run_engine(eng, reqs, preempt_at=()):
         if not progressed:
             time.sleep(0.0005)
     assert len(comps) == len(reqs), "engine failed to drain"
+    if getattr(eng, "paged_kv", False):
+        eng.check_page_invariants()
     return comps
 
 
