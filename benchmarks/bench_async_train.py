@@ -28,6 +28,18 @@ dispatchable work). Gates:
     ttfc(sync) / ttfc(async)   >= 1.2x
     trainer_idle_frac(async)   <= 0.1
 
+A third arm re-runs async with end-to-end episode tracing ON (ISSUE 9):
+it must reproduce each episode's submission→commit latency as the sum of
+its per-stage components (±1%), name a bottleneck stage for every one of
+the 16 tenants, and stay within the tracing-overhead gate
+
+    ttfc(traced) / ttfc(async) <= 1.03
+
+(the workload is deterministic — both arms generate identical tokens, so
+the ttfc ratio IS the tokens/sec ratio). The traced arm's Perfetto trace
+lands in BENCH_async_train_trace.json (CI artifact; open at
+ui.perfetto.dev — park→env→resume flow arrows link the stage tracks).
+
 Measured arms run against a persistent JAX compilation cache populated by
 a full-size warm pass of each arm: the engine jits per-instance closures,
 so without the on-disk cache every fresh runtime would re-XLA-compile all
@@ -70,6 +82,9 @@ MAX_STALENESS = 2
 ENV_WORKERS = 32              # >= concurrent parks: workers never queue
 GATE_SPEEDUP = 1.2
 GATE_IDLE_FRAC = 0.1
+GATE_TRACE_OVERHEAD = 1.03    # ttfc(traced) / ttfc(async) ceiling
+GATE_TRACE_RESIDUAL = 0.01    # max |Σcomponents - e2e| / e2e per episode
+TRACE_ARTIFACT = "BENCH_async_train_trace.json"
 
 _STATE = {}
 
@@ -116,7 +131,7 @@ def _model():
     return _STATE["cfg"], _STATE["params"]
 
 
-def _runtime(async_train: bool):
+def _runtime(async_train: bool, trace: bool = False):
     """One arm's runtime over the mixed 16-tenant workload. Both arms build
     from the same base params and the same per-tenant seeds."""
     _compile_cache()
@@ -127,7 +142,7 @@ def _runtime(async_train: bool):
         max_adapter_slots=N_TENANTS, seed=0,
         env_stage=True, env_workers=ENV_WORKERS,
         async_train=async_train, max_staleness=MAX_STALENESS,
-        min_train_rows=0))
+        min_train_rows=0, trace=trace))
     for i in range(N_TENANTS):
         agentic = i >= N_TENANTS // 2
         env = "search" if agentic else "gsm8k"
@@ -141,15 +156,15 @@ def _runtime(async_train: bool):
     return rt
 
 
-def _run_once(async_train: bool) -> dict:
-    rt = _runtime(async_train)
+def _run_once(async_train: bool, trace: bool = False) -> dict:
+    rt = _runtime(async_train, trace=trace)
     t0 = time.monotonic()
     rt.run(timeout_s=600.0)
     assert rt.mgr.all_done(), "arm did not complete"
     last_commit = max(st.last_step_at for _, st in rt.mgr.task_items())
     idle = rt.rec.trainer_idle_stats()
     d = rt.mgr.drop_counters()
-    return {
+    out = {
         "time_to_final_commit_s": last_commit - t0,
         "wall_s": time.monotonic() - t0,
         "total_steps": rt.mgr.total_steps_done(),
@@ -160,19 +175,49 @@ def _run_once(async_train: bool) -> dict:
         "trainer_span_s": idle["trainer_span_s"],
         **d,
     }
+    if trace:
+        out["trace_doc"] = rt.tracer.export_chrome()
+        out["trace_dropped_events"] = rt.tracer.dropped_events
+    return out
 
 
-def run_arm(async_train: bool, reps: int = 2) -> dict:
+def run_arm(async_train: bool, reps: int = 2, trace: bool = False) -> dict:
     """Best-of-`reps` measured runs (min time-to-final-commit): refill
     shape buckets are timing-dependent, so even after the warm pass a
     measured run can stumble into one novel bucket and pay its compile —
     the repeated run takes the cached path. Drop counters and row totals
     must agree across reps (the workload is deterministic)."""
-    runs = [_run_once(async_train) for _ in range(reps)]
+    runs = [_run_once(async_train, trace=trace) for _ in range(reps)]
     best = min(runs, key=lambda r: r["time_to_final_commit_s"])
     best["ttfc_runs"] = [round(r["time_to_final_commit_s"], 3)
                          for r in runs]
     return best
+
+
+def _validate_trace(doc: dict) -> dict:
+    """Critical-path acceptance on the traced arm's export: every
+    committed episode's per-stage components sum to its E2E latency
+    (within GATE_TRACE_RESIDUAL), every tenant gets a named bottleneck,
+    and the park→env→resume hand-offs appear as s/f flow-event pairs."""
+    from repro.obs.report import analyze, load_episodes
+    res = analyze(load_episodes(doc))
+    tenants = res["tenants"]
+    flows = [e for e in doc["traceEvents"] if e["ph"] in ("s", "f")]
+    kinds = {e["name"] for e in flows}
+    ok = (res["episodes"] > 0
+          and res["max_relative_residual"] <= GATE_TRACE_RESIDUAL
+          and len(tenants) == N_TENANTS
+          and all(v["bottleneck"] for v in tenants.values())
+          and {"park", "resume"} <= kinds)
+    return {
+        "trace_episodes": res["episodes"],
+        "trace_max_residual": res["max_relative_residual"],
+        "trace_tenants": len(tenants),
+        "trace_flow_events": len(flows),
+        "trace_bottlenecks": {t: v["bottleneck"]
+                              for t, v in sorted(tenants.items())},
+        "trace_valid": bool(ok),
+    }
 
 
 def bench():
@@ -194,16 +239,32 @@ def bench():
         "env_latency_s": ENV_LATENCY, "max_staleness": MAX_STALENESS}}
     out["async"] = run_arm(True)
     out["sync"] = run_arm(False)
+    # tracing-overhead arm: async again with the tracer on — same tokens,
+    # same schedule pressure, plus the trace acceptance checks
+    traced = run_arm(True, trace=True)
+    doc = traced.pop("trace_doc")
+    with open(TRACE_ARTIFACT, "w") as f:
+        json.dump(doc, f)
+    print(f"wrote {TRACE_ARTIFACT}")
+    traced.update(_validate_trace(doc))
+    out["traced"] = traced
     speedup = (out["sync"]["time_to_final_commit_s"]
                / out["async"]["time_to_final_commit_s"])
+    overhead = (traced["time_to_final_commit_s"]
+                / out["async"]["time_to_final_commit_s"])
     out["ttfc_speedup"] = float(speedup)
+    out["trace_overhead"] = float(overhead)
     out["gate_speedup"] = GATE_SPEEDUP
     out["gate_idle_frac"] = GATE_IDLE_FRAC
+    out["gate_trace_overhead"] = GATE_TRACE_OVERHEAD
     ok = (speedup >= GATE_SPEEDUP
-          and out["async"]["trainer_idle_frac"] <= GATE_IDLE_FRAC)
-    # both arms must do the same amount of committed training
-    if (out["sync"]["total_steps"] != out["async"]["total_steps"]
-            or out["sync"]["rows_trained"] != out["async"]["rows_trained"]):
+          and out["async"]["trainer_idle_frac"] <= GATE_IDLE_FRAC
+          and overhead <= GATE_TRACE_OVERHEAD
+          and traced["trace_valid"])
+    # all arms must do the same amount of committed training
+    if any(out[arm]["total_steps"] != out["async"]["total_steps"]
+           or out[arm]["rows_trained"] != out["async"]["rows_trained"]
+           for arm in ("sync", "traced")):
         ok = False
     out["pass"] = bool(ok)
     print(f"bench_async_train,tenants={N_TENANTS},slots={DECODE_SLOTS},"
@@ -214,6 +275,9 @@ def bench():
           f"async_idle_frac={out['async']['trainer_idle_frac']:.3f},"
           f"sync_idle_frac={out['sync']['trainer_idle_frac']:.3f},"
           f"stale_dropped={out['async']['stale_rows_dropped']},"
+          f"trace_overhead={overhead:.3f},"
+          f"trace_residual={traced['trace_max_residual']:.4f},"
+          f"trace_eps={traced['trace_episodes']},"
           f"{'ok' if out['pass'] else 'FAIL'}")
     return out
 
@@ -239,7 +303,12 @@ def main(argv):
         higher_is_better=False,
         extra={"trainer_idle_frac": out["async"]["trainer_idle_frac"],
                "gate_idle_frac": GATE_IDLE_FRAC,
-               "stale_rows_dropped": out["async"]["stale_rows_dropped"]})
+               "stale_rows_dropped": out["async"]["stale_rows_dropped"],
+               "trace_overhead": out["trace_overhead"],
+               "gate_trace_overhead": GATE_TRACE_OVERHEAD,
+               "trace_max_residual": out["traced"]["trace_max_residual"],
+               "trace_episodes": out["traced"]["trace_episodes"],
+               "trace_valid": out["traced"]["trace_valid"]})
     rec["pass"] = out["pass"]
     write_bench_json("BENCH_async_train.json", rec)
     return 0 if out["pass"] else 1

@@ -122,6 +122,12 @@ def main():
     ap.add_argument("--min-train-rows", type=int, default=0,
                     help="micro-batch threshold in rows, rounded up to "
                          "complete GRPO groups (0 = a full round)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="end-to-end episode tracing (ISSUE 9): write a "
+                         "Perfetto-loadable Chrome trace JSON here (open "
+                         "at ui.perfetto.dev) and print the critical-path "
+                         "latency report (per-tenant p50/p95/p99 and the "
+                         "dominant bottleneck stage)")
     args = ap.parse_args()
 
     cfg = base_config(args.preset)
@@ -149,7 +155,8 @@ def main():
         prefix_cache=not args.no_prefix_cache,
         async_train=args.async_train,
         max_staleness=args.max_staleness,
-        min_train_rows=args.min_train_rows))
+        min_train_rows=args.min_train_rows,
+        trace=bool(args.trace_out)))
     envs = MIXES[args.mix]
     for i in range(args.tasks):
         env = envs[i % len(envs)]
@@ -179,6 +186,13 @@ def main():
               f"device_resident_resumes={st.device_resident_resumes} "
               f"fused_forced_tokens={st.fused_forced_tokens} "
               f"pool={rt.cengine.page_stats()}")
+    if args.trace_out:
+        from repro.obs.report import analyze, format_report, load_episodes
+        trace = rt.tracer.dump_json(args.trace_out)
+        print(f"\ntrace written to {args.trace_out} "
+              f"(open at ui.perfetto.dev; "
+              f"{rt.tracer.dropped_events} events dropped)")
+        print(format_report(analyze(load_episodes(trace))))
 
 
 if __name__ == "__main__":

@@ -2,7 +2,8 @@
 
 Three AST-based checker families over ``src/``:
 
-  RA1xx  lock discipline   (``analysis/locks.py``)
+  RA1xx  lock discipline   (``analysis/locks.py``) + metrics phase
+         literals (RA105, ``analysis/phases.py``)
   RA2xx  JAX trace hygiene (``analysis/tracing.py``)
   RA3xx  Pallas kernels    (``analysis/pallas_rules.py``)
 

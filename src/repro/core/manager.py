@@ -124,8 +124,24 @@ class MultiTaskManager:
         self.stale_groups_dropped = 0
         self.stale_batches_dropped = 0
         self.discarded_tail_rows = 0   # rows arriving after their task done
+        # optional episode tracer (repro.obs): drop-or-train decisions are
+        # terminal lifecycle events — a dropped episode must not look like
+        # one still waiting for the trainer
+        self.tracer = None
         self._lock = threading.RLock()  # guards: tasks/q_buffer/episodes
         self._cv = threading.Condition(self._lock)
+
+    def _trace_drop(self, episodes, reason: str) -> None:
+        tr = self.tracer
+        if tr is None:
+            return
+        t = tr.now()
+        for ep in episodes:
+            meta = getattr(ep, "meta", None)
+            trace = meta.get("trace_id") if isinstance(meta, dict) else None
+            if trace is not None:
+                tr.mark(trace, "dropped", t)
+                tr.instant(("manager", "queue"), reason, t, trace=trace)
 
     # -- task lifecycle -------------------------------------------------
     def submit(self, spec: TaskSpec, adapters=None, opt_state=None) -> TaskState:
@@ -319,8 +335,9 @@ class MultiTaskManager:
         with self._lock:
             st = self.tasks[task_id]
             if st.done:
-                n = 1 + len(self._partial.pop((task_id, group_key), []))
-                self.discarded_tail_rows += n
+                buf = self._partial.pop((task_id, group_key), [])
+                self.discarded_tail_rows += 1 + len(buf)
+                self._trace_drop([episode] + buf, "tail_drop")
                 return False
             lag = st.version - version
             if lag < 0:
@@ -328,10 +345,12 @@ class MultiTaskManager:
                     f"task {task_id} episode v{version} is newer than "
                     f"committed v{st.version}")
             if lag > self.max_staleness:
-                dropped = 1 + len(self._partial.pop((task_id, group_key), []))
+                buf = self._partial.pop((task_id, group_key), [])
+                dropped = 1 + len(buf)
                 self.stale_rows_dropped += dropped
                 st.stale_rows_dropped += dropped
                 self.stale_groups_dropped += 1
+                self._trace_drop([episode] + buf, "stale_drop")
                 return False
             buf = self._partial.setdefault((task_id, group_key), [])
             buf.append(episode)
@@ -369,10 +388,12 @@ class MultiTaskManager:
                     n = len(g.rows)
                     if st.done:
                         self.discarded_tail_rows += n
+                        self._trace_drop(g.rows, "tail_drop")
                     else:
                         self.stale_rows_dropped += n
                         st.stale_rows_dropped += n
                         self.stale_groups_dropped += 1
+                        self._trace_drop(g.rows, "stale_drop")
                 else:
                     keep.append(g)
             self.episodes[tid] = keep

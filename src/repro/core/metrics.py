@@ -79,6 +79,12 @@ class MetricsRecorder:
         # (t, used pages, total pages, fragmentation) of the paged KV pool
         self.page_samples: List[Tuple[float, int, int, float]] = []
         self.counters: Dict[str, int] = {}    # preemption/eviction/replay...
+        # ONE source of truth for event counters (ISSUE 9 satellite): the
+        # engine's RolloutStats (attached by the runtime) is merged into
+        # counters_snapshot() alongside the explicit incr() counters, so
+        # summarize() never depends on hand-mirrored incr calls staying in
+        # sync with the stats fields
+        self._rollout_stats = None
         # trainer hand-off accounting (async off-policy trainer, ROADMAP §2):
         # spans the trainer spent blocked in pop, and a step-function
         # timeline of the DISPATCHABLE backlog (whole micro-batches the
@@ -101,6 +107,31 @@ class MetricsRecorder:
         adapter_installs, replays, readmissions, ...)."""
         with self._lock:
             self.counters[name] = self.counters.get(name, 0) + n
+
+    def attach_rollout_stats(self, stats) -> None:
+        """Adopt the engine's RolloutStats as a counter source: its integer
+        event fields (parks, resumes, restores, prefix_hits, ...) appear in
+        counters_snapshot() by field name, live — no mirroring incr()
+        required and no end-of-run copy to forget."""
+        with self._lock:
+            self._rollout_stats = stats
+
+    def counters_snapshot(self) -> Dict[str, int]:
+        """Explicit incr() counters merged with the attached RolloutStats'
+        nonzero integer fields. Explicit counters win on a name collision
+        ("preemptions" counts preemption EVENTS via incr but preempted ROWS
+        in the stats — the recorder's own semantics take precedence)."""
+        import dataclasses
+        with self._lock:
+            merged = dict(self.counters)
+            stats = self._rollout_stats
+        if stats is not None:
+            for f in dataclasses.fields(stats):
+                v = getattr(stats, f.name)
+                if (isinstance(v, int) and not isinstance(v, bool)
+                        and v != 0 and f.name not in merged):
+                    merged[f.name] = v
+        return merged
 
     def record(self, pool: str, phase: str, task_id: str, start: float,
                end: float, devices: float = None):
@@ -404,13 +435,13 @@ def summarize(manager, rec: MetricsRecorder) -> Dict[str, float]:
     # the dense cache; restore-vs-replay counts ride the counters below
     # (n_restores / n_replays / n_replay_tokens_saved / n_snapshot_drops)
     out.update(rec.page_pool_stats())
-    # scheduler event counters (zero-valued keys omitted: absent == 0).
-    # kv_* entries are end-of-run gauges of the prefix cache (shared pages,
-    # index-held pages, HBM bytes per resident row) riding the counter
-    # channel — emitted without the n_ count prefix.
-    with rec._lock:
-        counters = dict(rec.counters)
-    for name, n in sorted(counters.items()):
+    # scheduler event counters (zero-valued keys omitted: absent == 0) —
+    # the unified snapshot: explicit incr() counters merged with the
+    # attached engine RolloutStats (one source of truth; ISSUE 9
+    # satellite). kv_* entries are end-of-run gauges of the prefix cache
+    # (shared pages, index-held pages, HBM bytes per resident row) riding
+    # the counter channel — emitted without the n_ count prefix.
+    for name, n in sorted(rec.counters_snapshot().items()):
         key = name if name.startswith("kv_") else f"n_{name}"
         out[key] = float(n)
     return out

@@ -223,6 +223,16 @@ class RuntimeConfig:
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0         # commits between snapshots (0 = off)
     env_threads: int = 4
+    trace: bool = False               # end-to-end episode tracing (ISSUE 9):
+                                      # every submission gets a trace id and
+                                      # per-stage lifecycle marks + track
+                                      # spans land in `runtime.tracer`
+                                      # (repro.obs) for Perfetto export and
+                                      # critical-path attribution; off by
+                                      # default — the hot loops then carry
+                                      # only a `is None` check
+    trace_capacity: int = 1_000_000   # tracer ring-buffer size (events);
+                                      # overflow drops oldest and counts
 
 
 class FailureInjector:
@@ -286,6 +296,11 @@ class MARLaaSRuntime:
         self.admission = AdmissionController(cfg, self.acfg)
         self.rec = MetricsRecorder({"rollout": rcfg.rollout_pool_devices,
                                     "train": rcfg.train_pool_devices})
+        self.tracer = None
+        if rcfg.trace:
+            from repro.obs import Tracer
+            self.tracer = Tracer(capacity=rcfg.trace_capacity)
+        self.mgr.tracer = self.tracer      # staleness/tail drops mark traces
         self.engine = RolloutEngine(cfg, base_params, max_len=rcfg.max_len,
                                     use_kernel=rcfg.use_kernel, seed=rcfg.seed)
         self.envs: Dict[str, object] = {}
@@ -311,7 +326,12 @@ class MARLaaSRuntime:
             resume_restore=rcfg.resume_restore,
             snapshot_budget_bytes=rcfg.snapshot_budget_bytes,
             prefix_cache=rcfg.prefix_cache,
-            on_stage=self._on_stage)
+            on_stage=self._on_stage,
+            tracer=self.tracer)
+        # ONE source of truth for counters (ISSUE 9 satellite): summarize()
+        # merges the engine's RolloutStats int fields with the recorder's
+        # explicit counters instead of relying on hand-mirrored incr calls
+        self.rec.attach_rollout_stats(self.cengine.stats)
         # LRU tenant -> stacked-LoRA slot map (rollout thread only). The
         # device write happens in _feed_continuous once the consumable
         # version is known (and only when it changed), so the residency's
@@ -440,7 +460,11 @@ class MARLaaSRuntime:
         prefill workers, splice/refill intervals from the rollout thread —
         the recorder is thread-safe. This is what makes prefill-stage vs
         decode-stage busy time separately measurable (Fig 5)."""
-        self.rec.record("rollout", phase, task_id, t0, t1,
+        from .metrics import PHASE_INTENSITY
+        if phase not in PHASE_INTENSITY:
+            raise ValueError(f"unknown stage phase {phase!r} — add it to "
+                             "PHASE_INTENSITY or fix the call site")
+        self.rec.record("rollout", phase, task_id, t0, t1,  # noqa: RA105
                         self.rcfg.rollout_pool_devices)
 
     def _on_adapter_evict(self, tid: str, slot: int):
@@ -488,9 +512,15 @@ class MARLaaSRuntime:
             group_size = self.mgr.spec_for(tid).group_size
             self.mgr.rollout_started(tid, len(reqs))
             for i, r in enumerate(reqs):
-                self.cengine.submit(r, meta={
-                    "task_id": tid, "version": version,
-                    "group": (round_no, i // group_size)})
+                meta = {"task_id": tid, "version": version,
+                        "group": (round_no, i // group_size)}
+                if self.tracer is not None:
+                    # trace is born at submission: the gap until the engine
+                    # pops it off its queue is the admission-wait component
+                    tr = self.tracer.new_trace(tid)
+                    meta["trace_id"] = tr
+                    self.tracer.mark(tr, "submitted")
+                self.cengine.submit(r, meta=meta)
             fed = True
         return fed
 
@@ -515,10 +545,16 @@ class MARLaaSRuntime:
 
     def _flush_decode_segment(self, now: float):
         if self._seg_tasks and self._seg_t0 is not None and now > self._seg_t0:
-            self.rec.record("rollout", "decode",
-                            "+".join(sorted(self._seg_tasks)),
+            name = "+".join(sorted(self._seg_tasks))
+            self.rec.record("rollout", "decode", name,
                             self._seg_t0, now,
                             self.rcfg.rollout_pool_devices)
+            if self.tracer is not None:
+                # the fused decode stream as one Perfetto track: each slice
+                # is a contiguous occupant-set run (same data the recorder
+                # books as decode busy time)
+                self.tracer.span(("rollout", "decode"), name,
+                                 self._seg_t0, now)
         self._seg_t0 = now
         self._seg_tasks = frozenset()
 
@@ -558,10 +594,18 @@ class MARLaaSRuntime:
         batch.sort(key=lambda c: c.submit_index)
         tb = to_trajectory_batch(batch, tid, comp.version, spec.group_size,
                                  pad_to=self.rcfg.max_len)
+        if self.tracer is not None:
+            tb.meta["trace_ids"] = self._trace_ids_of(batch)
         self.mgr.enqueue(tb)
         self.rec.record_train_backlog(time.monotonic(),
                                       self.mgr.dispatchable_rows())
         return True
+
+    @staticmethod
+    def _trace_ids_of(completions) -> List[int]:
+        """Trace ids riding a batch's completion metas (traced rows only)."""
+        return [c.meta["trace_id"] for c in completions
+                if isinstance(c.meta, dict) and "trace_id" in c.meta]
 
     def _rollout_loop_continuous(self):
         eng = self.cengine
@@ -646,24 +690,10 @@ class MARLaaSRuntime:
             self.rec.record_page_sample(now, int(ps["kv_pages_used"]),
                                         int(ps["kv_pages_total"]),
                                         ps["kv_page_frag"])
-            # restore-vs-replay counts land in summarize() as n_* counters
-            for name, n in (("restores", eng.stats.restores),
-                            ("replays", eng.stats.replays),
-                            ("replay_tokens_saved",
-                             eng.stats.replay_tokens_saved),
-                            ("snapshots", eng.stats.snapshots),
-                            ("snapshot_drops", eng.stats.snapshot_drops),
-                            ("pool_exhausted", eng.stats.pool_exhausted),
-                            ("prefix_hits", eng.stats.prefix_hits),
-                            ("prefix_hit_tokens",
-                             eng.stats.prefix_hit_tokens),
-                            ("cow_forks", eng.stats.cow_forks),
-                            ("device_resident_resumes",
-                             eng.stats.device_resident_resumes),
-                            ("fused_forced_tokens",
-                             eng.stats.fused_forced_tokens)):
-                if n:
-                    self.rec.incr(name, n)
+            # restore-vs-replay counts reach summarize() straight from
+            # RolloutStats via rec.counters_snapshot() — the hand-mirrored
+            # incr loop that used to sit here is gone (single source of
+            # truth; ISSUE 9 satellite)
             # sharing gauges ride the counter channel as end-of-run values
             for name in ("kv_shared_pages", "kv_prefix_pages",
                          "kv_hbm_bytes_per_row"):
@@ -701,7 +731,12 @@ class MARLaaSRuntime:
             # min(exp(old_lp - behavior_lp), is_cap) — behaviour logprobs
             # were recorded at sample time under the generating version
             batch["behavior_logprobs"] = jnp.asarray(tb.behavior_logprobs)
+        trace_ids = (tb.meta.get("trace_ids", ())
+                     if self.tracer is not None else ())
         t0 = time.monotonic()
+        if self.tracer is not None:
+            for tr in trace_ids:
+                self.tracer.mark(tr, "train", t0)
         new_adapters, new_opt, metrics = step_fn(self.base_params, st.adapters,
                                                  st.opt_state, batch)
         jax.block_until_ready(jax.tree.leaves(new_adapters)[0])
@@ -710,6 +745,12 @@ class MARLaaSRuntime:
                         self.rcfg.train_pool_devices)
         self.mgr.commit(tb.task_id, new_adapters, new_opt, trained_version,
                         reward_mean=float(np.mean(tb.rewards)))
+        if self.tracer is not None:
+            t_commit = self.tracer.now()
+            self.tracer.span(("train", "trainer"), tb.task_id, t0, t_commit,
+                             flow_in=0, flow_out=0)
+            for tr in trace_ids:
+                self.tracer.mark(tr, "committed", t_commit)
         self._rows_trained += tb.num_rows
         self.rec.record_train_backlog(time.monotonic(),
                                       self.mgr.dispatchable_rows())
@@ -775,6 +816,8 @@ class MARLaaSRuntime:
             spec = self.mgr.spec_for(tid)
             tb = to_trajectory_batch(rows, tid, newest, spec.group_size,
                                      pad_to=self.rcfg.max_len)
+            if self.tracer is not None:
+                tb.meta["trace_ids"] = self._trace_ids_of(rows)
             if self.mgr.version_of(tid) - oldest > 0:
                 self.rec.incr("stale_rows_trained", len(rows))
             # commit is checked against the OLDEST behaviour version in the

@@ -101,12 +101,15 @@ class _DecodeJob:
     entered_pool_at: float = 0.0
     on_done: Optional[Callable] = None
     multi_lora: bool = True
+    trace: Optional[int] = None     # repro.obs trace id (tracing enabled)
+    flow_in: int = 0                # pending hand-off arrow (resume→pool)
 
 
 class Simulator:
     """Virtual-time executor; policies drive it via schedule()/callbacks."""
 
-    def __init__(self, cfg: ModelConfig, hw: HardwareModel, seed: int = 0):
+    def __init__(self, cfg: ModelConfig, hw: HardwareModel, seed: int = 0,
+                 trace: bool = False):
         self.cfg = cfg
         self.hw = hw
         self.clock = SimClock()
@@ -115,6 +118,14 @@ class Simulator:
         self.rng = random.Random(seed)
         self.rec = MetricsRecorder({"rollout": hw.rollout_devices,
                                     "train": hw.train_devices})
+        # virtual-time episode tracing (ISSUE 9): the tracer reads the SIM
+        # clock, so sim traces share the threaded runtime's span structure
+        # (same canonical states, same park/resume flow arrows) with
+        # virtual timestamps — the parity property tests pin this
+        self.tracer = None
+        if trace:
+            from repro.obs import Tracer
+            self.tracer = Tracer(clock=self.clock)
         self.param_bytes = cfg.param_count() * 2
         # decode pool state
         self.decode_set: Dict[str, _DecodeJob] = {}
@@ -205,25 +216,69 @@ class Simulator:
         while self._decode_wait and not self.decode_set:
             nxt = self._decode_wait.pop(0)
             self.decode_set[nxt.task_id] = nxt
+            self._tr_pool_enter(nxt)
             if nxt.multi_lora:      # fused jobs can co-admit queued peers
                 while self._decode_wait and self._decode_wait[0].multi_lora:
                     p = self._decode_wait.pop(0)
                     self.decode_set[p.task_id] = p
+                    self._tr_pool_enter(p)
             break
         self._reschedule_decode()
 
+    # -- tracing hooks (virtual-time mirror of the engine's span model) ----
+    def _tr_pool_enter(self, j: _DecodeJob):
+        """Job joins the decode pool: open its residency span."""
+        if self.tracer is None or j.trace is None:
+            return
+        j.entered_pool_at = self.clock.t
+        self.tracer.mark(j.trace, "decode", self.clock.t)
+
+    def _tr_pool_exit(self, j: _DecodeJob, flow_out: int = 0):
+        """Close the residency span (park hand-off or completion)."""
+        if self.tracer is None or j.trace is None:
+            return
+        self.tracer.span(("rollout", "pool"), j.task_id,
+                         j.entered_pool_at, self.clock.t, trace=j.trace,
+                         flow_in=j.flow_in, flow_out=flow_out)
+        j.flow_in = 0
+
     def _job_segment_done(self, j: _DecodeJob):
+        tr = self.tracer if j.trace is not None else None
         j.seg_idx += 1
         if j.seg_idx >= len(j.segments):
+            if tr is not None:      # final segment is always decode
+                self._tr_pool_exit(j)
+                tr.mark(j.trace, "completed", self.clock.t)
             if j.on_done:
                 j.on_done()
             return
         kind, amount = j.segments[j.seg_idx]
         if kind == "env":
+            # park: the job leaves the pool for the env interaction and
+            # resumes via a (virtual, zero-duration) replay prefill — the
+            # SAME canonical state sequence and park/resume flow arrows the
+            # threaded engine emits, with the sim's instantaneous analogs
+            if tr is not None:
+                fid = tr.next_flow("park")
+                self._tr_pool_exit(j, flow_out=fid)
+                tr.mark(j.trace, "parked", self.clock.t)
+                tr.mark(j.trace, "env", self.clock.t)
+                rfid = tr.next_flow("resume")
+                tr.span(("env", "pool"), j.task_id, self.clock.t,
+                        self.clock.t + amount, trace=j.trace,
+                        flow_in=fid, flow_out=rfid)
+                j.flow_in = rfid
             self.rec.record("env", "env", j.task_id, self.clock.t,
                             self.clock.t + amount, 0)
+
             # after the external wait, advance to the next (decode) segment
-            self.schedule(amount, lambda: self._job_segment_done(j))
+            def resume():
+                if tr is not None:
+                    tr.mark(j.trace, "resume_queued", self.clock.t)
+                    tr.mark(j.trace, "prefill", self.clock.t)
+                self._job_segment_done(j)
+
+            self.schedule(amount, resume)
         else:
             j.tokens_left = amount
             self._job_enter_pool(j)
@@ -240,6 +295,7 @@ class Simulator:
             return
         self._advance_decode(self.clock.t)
         self.decode_set[j.task_id] = j
+        self._tr_pool_enter(j)
         self._reschedule_decode()
 
     # -- public phase API used by policies ---------------------------------
@@ -270,6 +326,14 @@ class Simulator:
                          tokens_left=segments[0][1], on_done=on_done,
                          multi_lora=multi_lora)
         t0 = self.clock.t
+        if self.tracer is not None:
+            # one trace per sim job (the sim's episode granularity): queued
+            # and prefill are instantaneous-start in virtual time
+            job.trace = self.tracer.new_trace(spec.task_id)
+            self.tracer.mark(job.trace, "queued", t0)
+            self.tracer.mark(job.trace, "prefill", t0)
+            self.tracer.span(("prefill", "pool"), spec.task_id, t0,
+                             t0 + prefill_s, trace=job.trace)
         self.rec.record("rollout", "prefill", spec.task_id, t0, t0 + prefill_s,
                         devs)
 
@@ -280,7 +344,8 @@ class Simulator:
         return job
 
     def submit_train(self, spec: TaskSpec, wl: WorkloadModel, version: int,
-                     on_done: Callable, *, pool_devices: Optional[int] = None):
+                     on_done: Callable, *, pool_devices: Optional[int] = None,
+                     trace_ids: Tuple[int, ...] = ()):
         """Serialized train engine (paper §4.5)."""
         devs = pool_devices or self.hw.train_devices
         N = self.cfg.active_param_count()
@@ -290,6 +355,12 @@ class Simulator:
                + self.hw.train_overhead_s)
         start_t = max(self.clock.t, self.train_busy_until)
         self.train_busy_until = start_t + dur
+        if self.tracer is not None and trace_ids:
+            self.tracer.span(("train", "pool"), spec.task_id, start_t,
+                             start_t + dur)
+            for tr in trace_ids:
+                self.tracer.mark(tr, "train", start_t)
+                self.tracer.mark(tr, "committed", start_t + dur)
         self.rec.record("train", "train", spec.task_id, start_t, start_t + dur,
                         devs)
         self.schedule(start_t + dur - self.clock.t, on_done)

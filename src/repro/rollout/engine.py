@@ -986,7 +986,7 @@ class ContinuousRolloutEngine:
                  paged_kv: bool = False, kv_page_size: int = 16,
                  kv_pool_pages: int = 0, resume_restore: bool = True,
                  snapshot_budget_bytes: int = 0, prefix_cache: bool = True,
-                 on_stage=None):
+                 on_stage=None, tracer=None):
         self.cfg = cfg
         self.base_params = base_params
         self.max_slots = max_slots
@@ -1047,6 +1047,12 @@ class ContinuousRolloutEngine:
         self._prefill_chunk_eff = effective_chunk(cfg, prefill_chunk)
         self.on_stage = on_stage    # optional (phase, task_id, t0, t1) hook
                                     # (called from worker threads too)
+        # episode tracer (repro.obs): None by default — every hook site
+        # below guards on it, so an untraced run pays one pointer compare
+        # per episode EVENT (install/park/evict), never per token
+        self._tracer = tracer
+        self._slot_tr_t0 = [0.0] * max_slots    # residency span starts
+        self._slot_tr_flow = [0] * max_slots    # incoming hand-off arrows
         self._master = jax.random.PRNGKey(seed)
         self._rng = np.random.RandomState(seed + 7919)
         self._own_pool = tool_executor is None
@@ -1172,9 +1178,56 @@ class ContinuousRolloutEngine:
         row = _Row(req, key, self._n_submitted, meta=meta,
                    submitted_at=time.monotonic())
         self._n_submitted += 1
+        if self._tracer is not None:
+            # the episode's trace id rides row.meta — the one piece of
+            # host state that provably survives park, preemption and
+            # snapshot/replay resume (it already carries the behaviour
+            # version for the same reason)
+            if not isinstance(row.meta, dict):
+                row.meta = {}           # engine-direct callers pass no meta
+            trace = row.meta.get("trace_id")
+            if trace is None:
+                trace = self._tracer.new_trace(req.task_id)
+                row.meta["trace_id"] = trace
+            self._tracer.mark(trace, "queued", row.submitted_at)
         with self._stage_lock:
             self._sched.push(row, self.stats.refills)
         return row.submit_index
+
+    # -- episode tracing helpers (all no-ops when tracer is None) ---------
+    def _trace_of(self, row: _Row):
+        m = row.meta
+        return m.get("trace_id") if isinstance(m, dict) else None
+
+    def _tr_install(self, slot: int, row: _Row, t_now: float,
+                    t_pre: float = None, pre_state: str = None):
+        """Row entered a decode slot: open its residency span, consume any
+        pending hand-off arrow (env resume / preempt reinstall), and mark
+        the lifecycle transition(s)."""
+        tr = self._tracer
+        if tr is None:
+            return
+        trace = self._trace_of(row)
+        if t_pre is not None and pre_state is not None:
+            tr.mark(trace, pre_state, t_pre)
+        tr.mark(trace, "decode", t_now)
+        self._slot_tr_t0[slot] = t_now
+        m = row.meta
+        self._slot_tr_flow[slot] = (m.pop("_flow_in", 0)
+                                    if isinstance(m, dict) else 0)
+
+    def _tr_vacate(self, slot: int, row: _Row, t_now: float,
+                   flow_out: int = 0):
+        """Row left its slot (evict/park/preempt): emit the residency span
+        on the slot's track, with flow arrows binding it to the hand-off
+        source/destination across threads."""
+        tr = self._tracer
+        if tr is None:
+            return
+        tr.span(("rollout", f"slot-{slot}"), row.req.task_id,
+                self._slot_tr_t0[slot], t_now, trace=self._trace_of(row),
+                flow_in=self._slot_tr_flow[slot], flow_out=flow_out)
+        self._slot_tr_flow[slot] = 0
 
     # -- prefill stage lifecycle ------------------------------------------
     def _ensure_stage(self):
@@ -1284,6 +1337,9 @@ class ContinuousRolloutEngine:
         lives on the row object itself, so the stamp survives park,
         preemption, and snapshot/replay resume."""
         meta = row.meta if isinstance(row.meta, dict) else {}
+        finished_at = time.monotonic()
+        if self._tracer is not None:
+            self._tracer.mark(self._trace_of(row), "completed", finished_at)
         return RolloutCompletion(
             task_id=row.req.task_id, prompt_len=row.prompt_len,
             tokens=list(prompt) + row.gen, gen_logprobs=row.lps,
@@ -1292,11 +1348,13 @@ class ContinuousRolloutEngine:
             version=int(meta.get("version", -1)),
             sampled_tokens=row.sampled, forced_tokens=row.forced,
             submit_index=row.submit_index, submitted_at=row.submitted_at,
-            started_at=row.started_at, finished_at=time.monotonic(),
+            started_at=row.started_at, finished_at=finished_at,
             finished_step=self.stats.decode_steps, meta=row.meta)
 
     def _evict(self, slot: int):
         row = self._rows[slot]
+        if self._tracer is not None:
+            self._tr_vacate(slot, row, time.monotonic())
         self._completed.append(self._completion(row, self._prompts[slot],
                                                 slot))
         self.stats.completions += 1
@@ -1589,6 +1647,7 @@ class ContinuousRolloutEngine:
                 now = time.monotonic()
                 self._rows[slot] = row
                 self._prompts[slot] = list(row.req.prompt)
+                self._tr_install(slot, row, now, t0, "restore")
                 # ownership transfer back: slot adopts the row's refcounts
                 self._assign_slot_pages(slot, row.dev_pages, row.dev_pos)
                 self._dev_parked.remove(row)
@@ -1647,6 +1706,7 @@ class ContinuousRolloutEngine:
             now = time.monotonic()
             self._rows[slot] = row
             self._prompts[slot] = list(row.req.prompt)
+            self._tr_install(slot, row, now, t0, "restore")
             self._assign_slot_pages(slot, pages, snap.pos)
             self._drop_snap(row)
             self.stats.restores += 1
@@ -1828,6 +1888,13 @@ class ContinuousRolloutEngine:
         row.replays += 1
         if self.paged_kv:
             self._park_or_snap(slot, row)
+        if self._tracer is not None:
+            fid = self._tracer.next_flow("preempt")
+            now = time.monotonic()
+            self._tr_vacate(slot, row, now, flow_out=fid)
+            self._tracer.mark(self._trace_of(row), "preempted", now)
+            if isinstance(row.meta, dict):
+                row.meta["_flow_in"] = fid    # consumed at reinstall
         self._rows[slot] = None
         self._prompts[slot] = None
         self.stats.preemptions += 1
@@ -2002,6 +2069,7 @@ class ContinuousRolloutEngine:
             installed += 1
             self._rows[slot] = row
             self._prompts[slot] = list(row.req.prompt)
+            self._tr_install(slot, row, now, t0, "prefill")
             self._assign_slot_pages(slot, shared + fresh, L)
             self._index_prompt(row, shared + fresh)
             self.stats.prefix_hits += 1
@@ -2215,9 +2283,15 @@ class ContinuousRolloutEngine:
             self.on_stage("prefill",
                           "+".join(sorted({r.req.task_id
                                            for _, r in incoming})), t0, now)
+        if self._tracer is not None:
+            self._tracer.span(("prefill", "fused"),
+                              "+".join(sorted({r.req.task_id
+                                               for _, r in incoming})),
+                              t0, now)
         for j, (slot, row) in enumerate(incoming):
             self._rows[slot] = row
             self._prompts[slot] = list(row.req.prompt)
+            self._tr_install(slot, row, now, t0, "prefill")
             if self.paged_kv:
                 self._assign_slot_pages(slot, pages_of[j], len(seqs[j]))
                 self._index_prompt(row, pages_of[j])
@@ -2319,6 +2393,7 @@ class ContinuousRolloutEngine:
             installed += 1
             self._rows[slot] = row
             self._prompts[slot] = list(row.req.prompt)
+            self._tr_install(slot, row, now)
             if self.paged_kv:
                 self._assign_slot_pages(slot, pages, rr.seq_len)
                 self._index_prompt(row, pages)
@@ -2368,6 +2443,10 @@ class ContinuousRolloutEngine:
             self.on_stage("splice",
                           "+".join(sorted({rr.row.req.task_id
                                            for rr in ready})), t0, now)
+        if self._tracer is not None:
+            self._tracer.span(("rollout", "splice"),
+                              "+".join(sorted({rr.row.req.task_id
+                                               for rr in ready})), t0, now)
         return True
 
     def _on_call(self, slot: int):
@@ -2383,6 +2462,11 @@ class ContinuousRolloutEngine:
             self._rows[slot], self._prompts[slot], self._pool, self._rng,
             self.sim_latency)
         self._pending_t0[slot] = time.monotonic()
+        if self._tracer is not None:
+            # freeze-in-slot baseline: the row stays resident, so the
+            # env window is a lifecycle state only (no park hand-off)
+            self._tracer.mark(self._trace_of(self._rows[slot]), "env",
+                              self._pending_t0[slot])
 
     def _park(self, slot: int):
         """Env-stage path: vacate the slot the moment the row samples CALL.
@@ -2401,10 +2485,17 @@ class ContinuousRolloutEngine:
             # bytes) or snapshot to host otherwise; the tool-response
             # resume splices them back instead of replaying prompt+prefix
             self._park_or_snap(slot, row)
+        fid = 0
+        if self._tracer is not None:
+            fid = self._tracer.next_flow("park")
+            now = time.monotonic()
+            self._tr_vacate(slot, row, now, flow_out=fid)
+            self._tracer.mark(self._trace_of(row), "parked", now)
         self._rows[slot] = None
         self._prompts[slot] = None
         self.stats.parks += 1
-        self._env.submit(row, query, row.req.task_id, latency)
+        job = self._env.submit(row, query, row.req.task_id, latency)
+        job.flow = fid
 
     def _pump_env_stage(self):
         """Resolve the env stage's response queue: expire timed-out jobs
@@ -2433,6 +2524,20 @@ class ContinuousRolloutEngine:
             self.stats.add_env_wait(tid, job.resolved_at - job.submitted_at)
             if self.on_stage is not None:
                 self.on_stage("env", tid, job.submitted_at, job.resolved_at)
+            if self._tracer is not None:
+                # env worker span + the two hand-off arrows: park→env
+                # (job.flow, opened at _park) and env→resume (opened
+                # here, consumed when the row reinstalls into a slot)
+                trace = self._trace_of(row)
+                fid = self._tracer.next_flow("resume")
+                self._tracer.span(("env", f"worker-{job.worker}"), tid,
+                                  job.started_at, job.resolved_at,
+                                  trace=trace, flow_in=job.flow,
+                                  flow_out=fid)
+                self._tracer.mark(trace, "env", job.started_at)
+                self._tracer.mark(trace, "resume_queued", job.resolved_at)
+                if isinstance(row.meta, dict):
+                    row.meta["_flow_in"] = fid
             row.forced_q = [tok.RESP] + list(job.response) + [tok.ENDRESP]
             row.status = "active"
             self.stats.resumes += 1
@@ -2464,6 +2569,11 @@ class ContinuousRolloutEngine:
                 self.stats.add_env_wait(tid, now - t0w)
                 if self.on_stage is not None:
                     self.on_stage("env", tid, t0w, now)
+                if self._tracer is not None:
+                    trace = self._trace_of(row)
+                    self._tracer.span(("env", "pool"), tid, t0w, now,
+                                      trace=trace)
+                    self._tracer.mark(trace, "decode", now)
                 row.forced_q = [tok.RESP] + list(resp) + [tok.ENDRESP]
                 row.status = "active"
                 del self._pending[slot], self._pending_t0[slot]

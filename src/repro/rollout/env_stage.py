@@ -75,6 +75,8 @@ class EnvJob:
     # completion for nothing (ISSUE 5 satellite)
     cancel: CancelToken = field(default_factory=CancelToken)
     state: str = "queued"        # queued | executing | done
+    worker: int = -1             # executing worker's id (tracer track)
+    flow: int = 0                # park→env hand-off arrow (repro.obs)
 
     @property
     def cancelled(self) -> bool:
@@ -99,6 +101,7 @@ class EnvWorker(threading.Thread):
                 if stage._stop.is_set():
                     return
                 continue
+            job.worker = self.worker_id
             if job.latency > 0 and not stage.sim_latency:
                 # interruptible: a timeout/abort wakes the worker NOW
                 job.cancel.wait(job.latency)

@@ -257,7 +257,9 @@ class PrefillWorker(threading.Thread):
             row = eng._sched.pop(eng.stats.refills, where=where)
             if row is not None:
                 eng._stage_inflight.append(row)
-            return row
+        if row is not None and eng._tracer is not None:
+            eng._tracer.mark(eng._trace_of(row), "prefill")
+        return row
 
     def _emit(self, job: _Job, first: int, lp: float,
               forced_lps: Optional[List[float]] = None):
@@ -269,6 +271,8 @@ class PrefillWorker(threading.Thread):
                          forced_first=bool(job.row.forced_q)
                          and not job.fused,
                          forced_lps=forced_lps or [])
+        if eng._tracer is not None:
+            eng._tracer.mark(eng._trace_of(job.row), "ready", ready.ready_at)
         with eng._stage_lock:
             if job.row not in eng._stage_inflight:
                 return    # aborted by drain() while we were prefilling
@@ -310,6 +314,12 @@ class PrefillWorker(threading.Thread):
             job.spent += now - t0
             if eng.on_stage is not None:
                 eng.on_stage("prefill", row.req.task_id, t0, now)
+            if eng._tracer is not None:
+                # one span per (chunk or whole-prompt) device call, on
+                # this worker's own track
+                eng._tracer.span(
+                    ("prefill", f"worker-{self.worker_id}"),
+                    row.req.task_id, t0, now, trace=eng._trace_of(row))
             return done
 
         if C == 0 or job.L <= C or cfg.family == "encdec":

@@ -232,6 +232,49 @@ def test_ra103_unbounded_condition_wait(tmp_path):
     assert "RA103" in _rules(found)
 
 
+# -- RA105: metrics phase-literal discipline (ISSUE 9 satellite) ---------
+
+PHASE_BAD_TYPO = """
+    class Runtime:
+        def hook(self, t0, t1):
+            self.rec.record("rollout", "decoed", "tid", t0, t1)
+"""
+
+PHASE_BAD_VARIABLE = """
+    def hook(rec, phase, t0, t1):
+        rec.record("rollout", phase, "tid", t0, t1)
+"""
+
+PHASE_GOOD = """
+    class Runtime:
+        def hook(self, rec, t0, t1):
+            rec.record("rollout", "prefill", "tid", t0, t1)
+            self.rec.record("train", "train", "tid", t0, t1)
+            rec.record("env", "env", "tid", t0, t1, 0)
+"""
+
+
+def test_ra105_unknown_phase_literal(tmp_path):
+    found = _findings(tmp_path, PHASE_BAD_TYPO)
+    assert "RA105" in _rules(found)
+    assert any("decoed" in f.message for f in found)
+
+
+def test_ra105_variable_phase(tmp_path):
+    assert "RA105" in _rules(_findings(tmp_path, PHASE_BAD_VARIABLE))
+
+
+def test_ra105_registered_literals_clean(tmp_path):
+    assert "RA105" not in _rules(_findings(tmp_path, PHASE_GOOD))
+
+
+def test_ra105_noqa_for_guarded_variable(tmp_path):
+    code = PHASE_BAD_VARIABLE.replace(
+        'rec.record("rollout", phase, "tid", t0, t1)',
+        'rec.record("rollout", phase, "tid", t0, t1)  # noqa: RA105')
+    assert "RA105" not in _rules(_findings(tmp_path, code))
+
+
 # -- RA2xx: JAX trace hygiene --------------------------------------------
 
 def test_ra201_branch_on_tracer(tmp_path):

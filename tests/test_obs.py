@@ -1,0 +1,350 @@
+"""End-to-end episode tracing (ISSUE 9): tracer invariants, Perfetto
+export structure, critical-path attribution, threaded-vs-simulated trace
+parity, and the counter/summary satellites.
+
+1. Components partition: per episode, the tracer's per-stage components
+   are the intervals between consecutive lifecycle marks — they sum to
+   the submission→commit E2E latency by construction, and the report
+   verifies the residual on real runs.
+2. Threaded engine traces: every episode of an agentic engine-direct run
+   (parks, resumes, multi-turn) yields a well-formed canonical state
+   sequence, park/resume flow arrows, and ≤1% component-sum residual.
+3. Parity: the virtual-time simulator emits the SAME canonical state
+   sequence and the SAME flow-kind chain for an episode with the same
+   tool-call count — one span model across both runtimes.
+4. Chrome export: process/thread metadata, X slices, s/f flow pairs with
+   matching ids, and the synthesized per-episode component slices the
+   report reads.
+5. Satellites: counters_snapshot() merges RolloutStats into the recorder
+   (explicit counters win collisions); summary math survives a
+   zero-length run.
+
+Agentic rows emit CALL deterministically (module-scoped sampler bias, the
+test_env_stage idiom), so both engines replay identical episodes.
+"""
+import json
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import tiny_lm
+from repro.data import tokenizer as tok
+from repro.envs.tasks import make_env
+from repro.lora.adapters import init_lora
+from repro.models import init_params
+import repro.rollout.engine as eng_mod
+import repro.rollout.prefill as pf_mod
+from repro.obs import COMPONENT_OF, TERMINAL_STATES, Tracer
+from repro.obs.report import analyze, load_episodes, main as report_main
+from repro.rollout.engine import ContinuousRolloutEngine, RolloutRequest
+
+CALL_AT = (2,)          # sampled-token counter that emits CALL (one park)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _biased_sampling():
+    """Deterministic CALL emission at the CALL_AT counters; EOS remapped
+    so rows run their full budget (identical across engines)."""
+    mp = pytest.MonkeyPatch()
+    orig = pf_mod._sample_rows
+
+    def biased(logits, keys, counters, temps):
+        s = orig(logits, keys, counters, temps)
+        s = jnp.where(s == tok.EOS, 10, s)
+        hit = jnp.zeros(counters.shape, bool)
+        for c in CALL_AT:
+            hit = hit | (counters == c)
+        return jnp.where(hit, tok.CALL, s)
+
+    mp.setattr(pf_mod, "_sample_rows", biased)
+    mp.setattr(eng_mod, "_sample_rows", biased)
+    yield
+    mp.undo()
+
+
+# -- 1. tracer core -------------------------------------------------------
+
+def _scripted_trace(tr: Tracer):
+    """One maximally-eventful episode: park/env/resume then train."""
+    a = tr.new_trace("tenantA")
+    tr.mark(a, "submitted", 0.0)
+    tr.mark(a, "queued", 0.5)
+    tr.mark(a, "prefill", 1.0)
+    tr.mark(a, "decode", 2.0)
+    fid = tr.next_flow("park")
+    tr.span(("rollout", "slot-0"), "tenantA", 2.0, 3.0, trace=a,
+            flow_out=fid)
+    tr.mark(a, "parked", 3.0)
+    tr.mark(a, "env", 3.25)
+    rf = tr.next_flow("resume")
+    tr.span(("env", "worker-0"), "tenantA", 3.25, 4.0, trace=a,
+            flow_in=fid, flow_out=rf)
+    tr.mark(a, "resume_queued", 4.0)
+    tr.mark(a, "prefill", 4.25)
+    tr.mark(a, "decode", 4.5)
+    tr.span(("rollout", "slot-1"), "tenantA", 4.5, 5.0, trace=a,
+            flow_in=rf)
+    tr.mark(a, "completed", 5.0)
+    tr.mark(a, "train", 5.5)
+    tr.mark(a, "committed", 6.0)
+    return a
+
+
+def test_components_partition_e2e():
+    """Intervals between consecutive marks are charged to the state
+    entered first, so components sum EXACTLY to t_last - t_first and
+    every non-terminal state has a component label."""
+    tr = Tracer()
+    a = _scripted_trace(tr)
+    info = tr.components()[a]
+    assert info["terminal"] == "committed"
+    assert info["task"] == "tenantA"
+    assert sum(info["components"].values()) == pytest.approx(
+        info["t1"] - info["t0"], abs=1e-12)
+    # both visits to prefill/decode accumulate into one component each
+    assert info["components"]["prefill"] == pytest.approx(1.25)
+    assert info["components"]["decode"] == pytest.approx(1.5)
+    assert info["components"]["env"] == pytest.approx(0.75)
+    assert set(info["components"]) <= set(COMPONENT_OF.values())
+    assert tr.state_sequence(a)[0] == "submitted"
+    assert tr.state_sequence(a)[-1] in TERMINAL_STATES
+    assert tr.flow_kinds_of(a) == ["park", "resume"]
+
+
+def test_ring_buffer_overflow_counts_drops():
+    tr = Tracer(capacity=4)
+    a = tr.new_trace("t")
+    for i in range(10):
+        tr.mark(a, "queued", float(i))
+    assert tr.dropped_events == 6
+    assert len(tr.marks()[a]) == 4
+
+
+def test_mark_none_trace_is_noop():
+    """Hot-path contract: untraced rows (trace None) cost one compare."""
+    tr = Tracer()
+    tr.mark(None, "decode", 1.0)
+    assert tr.marks() == {}
+
+
+def test_export_chrome_structure():
+    """Perfetto-loadable: process/thread metadata, X slices on real
+    tracks, paired s/f flow events, and the synthesized episodes process
+    carrying the component slices report.py reads."""
+    tr = Tracer()
+    _scripted_trace(tr)
+    tr.instant(("manager", "queue"), "stale_drop", 5.9)
+    doc = tr.export_chrome()
+    evs = doc["traceEvents"]
+    procs = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"rollout", "env", "episodes", "manager"} <= procs
+    threads = {e["args"]["name"] for e in evs
+               if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"slot-0", "slot-1", "worker-0", "tenantA#0"} <= threads
+    # every flow start has a matching finish with the same id, and the
+    # finish binds to the enclosing slice's start (bp == "e")
+    starts = {e["id"] for e in evs if e["ph"] == "s"}
+    finishes = {e["id"] for e in evs if e["ph"] == "f"}
+    assert starts and starts == finishes
+    assert all(e["bp"] == "e" for e in evs if e["ph"] == "f")
+    # episode component slices carry the decomposition
+    comp = [e for e in evs if e.get("cat") == "episode"]
+    assert {e["name"] for e in comp} == {
+        "admission_wait", "queue_wait", "prefill", "decode",
+        "env_queue_wait", "env", "resume_wait", "completed_wait", "train"}
+    assert all(e["args"]["terminal"] == "committed" for e in comp)
+    assert any(e["ph"] == "i" for e in evs)
+    assert doc["otherData"]["dropped_events"] == 0
+
+
+def test_report_cli(tmp_path):
+    """python -m repro.obs.report over a dumped trace: loads episodes,
+    zero residual, names the bottleneck."""
+    tr = Tracer()
+    _scripted_trace(tr)
+    p = tmp_path / "trace.json"
+    out_json = tmp_path / "report.json"
+    tr.dump_json(str(p))
+    assert report_main([str(p), "--json", str(out_json)]) == 0
+    rep = json.loads(out_json.read_text())
+    assert rep["episodes"] == 1
+    assert rep["max_relative_residual"] <= 1e-9
+    ten = rep["tenants"]["tenantA"]
+    assert ten["bottleneck"] == "decode"
+    assert ten["e2e_p50"] == pytest.approx(6.0)
+
+
+# -- 2./3. engine traces + sim parity ------------------------------------
+
+_CACHE = {}
+
+
+def _traced_engine_run():
+    """Engine-direct agentic run (env stage + disagg prefill) with the
+    tracer on; returns (tracer, completions by submit order)."""
+    if "threaded" in _CACHE:
+        return _CACHE["threaded"]
+    cfg = tiny_lm("granite-3-2b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    trees = [init_lora(jax.random.PRNGKey(1), cfg)]
+    agentic = make_env("hopsearch", kb_size=8, hops=2, seed=0)
+    agentic.env_latency_mean = 0.0
+    rng = random.Random(7)
+    reqs = []
+    for i in range(4):
+        prompt, truth = agentic.sample_prompt(rng)
+        reqs.append(RolloutRequest("hop", 0, prompt, truth, agentic,
+                                   max_new_tokens=6, seed=i, max_turns=2))
+    tr = Tracer()
+    eng = ContinuousRolloutEngine(cfg, params, max_slots=2, max_adapters=1,
+                                  max_len=96, seed=0, env_stage=True,
+                                  env_workers=2, tracer=tr)
+    eng.set_adapters(0, trees[0])
+    for r in reqs:
+        eng.submit(r)
+    comps = {}
+    deadline = time.monotonic() + 120
+    while not eng.idle() and time.monotonic() < deadline:
+        progressed = eng.step()
+        for c in eng.drain_completions():
+            comps[c.submit_index] = c
+        if not progressed:
+            time.sleep(0.0005)
+    assert len(comps) == len(reqs)
+    eng._env.halt()
+    _CACHE["threaded"] = (tr, comps)
+    return tr, comps
+
+
+def _canon(seq):
+    """Collapse a state sequence to its canonical shape: drop the
+    runtime-only 'submitted'/'ready' states (engine-direct runs have no
+    admission stage; 'ready' only appears under disaggregated prefill)
+    and the trainer tail — what remains is the episode's stage walk."""
+    keep = [s for s in seq if s not in ("submitted", "ready", "train",
+                                       "committed", "completed_wait")]
+    return keep
+
+
+def test_threaded_engine_traces_every_episode():
+    """Every episode: starts queued, ends completed, interleaves
+    parked→env→resume_queued→prefill→decode per tool turn, carries
+    matching park/resume flow arrows, and its components sum to the E2E
+    latency within 1%."""
+    tr, comps = _traced_engine_run()
+    infos = tr.components()
+    assert len(infos) == len(comps)
+    for trace, info in infos.items():
+        seq = tr.state_sequence(trace)
+        assert seq[0] == "queued"
+        assert seq[-1] == "completed"
+        assert "decode" in seq
+        n_parks = seq.count("parked")
+        assert n_parks >= 1          # biased sampler forces >= 1 CALL
+        # each park is followed by env -> resume_queued, then the row
+        # re-enters via prefill (replay) before decoding again
+        for i, s in enumerate(seq):
+            if s == "parked":
+                assert seq[i + 1] == "env"
+                assert seq[i + 2] == "resume_queued"
+        assert tr.flow_kinds_of(trace) == ["park", "resume"] * n_parks
+        e2e = info["t1"] - info["t0"]
+        assert e2e > 0
+        assert sum(info["components"].values()) == pytest.approx(
+            e2e, rel=0.01)
+        assert info["components"]["env"] > 0.0
+
+
+def test_trace_parity_threaded_vs_sim():
+    """The simulator's traces have the SAME span structure as the
+    threaded engine's: identical canonical per-episode state sequences
+    and identical flow-kind chains for an episode with the same number of
+    tool calls — stage-for-stage, arrow-for-arrow."""
+    from repro.configs import get_config
+    from repro.core.manager import TaskSpec
+    from repro.core.simulator import (HardwareModel, Simulator,
+                                      WorkloadModel)
+    tr, comps = _traced_engine_run()
+    # pick one threaded episode and count its tool turns
+    trace = min(tr.components())
+    thr_seq = _canon(tr.state_sequence(trace))
+    n_calls = thr_seq.count("parked")
+    sim = Simulator(get_config("qwen3-0.6b"), HardwareModel(), trace=True)
+    wl = WorkloadModel(prompt_len=64, gen_len=128, rows=4,
+                       n_tool_calls=n_calls, env_latency_mean=3.0)
+    done = []
+    sim.submit_rollout(TaskSpec("hop", "search"), wl, 0,
+                       on_done=lambda: done.append(1))
+    sim.run()
+    assert done
+    sim_trace = min(sim.tracer.components())
+    sim_seq = _canon(sim.tracer.state_sequence(sim_trace))
+    assert sim_seq == thr_seq
+    assert (sim.tracer.flow_kinds_of(sim_trace)
+            == tr.flow_kinds_of(trace))
+    # and the sim's components partition its virtual E2E exactly
+    info = sim.tracer.components()[sim_trace]
+    assert sum(info["components"].values()) == pytest.approx(
+        info["t1"] - info["t0"])
+
+
+def test_threaded_chrome_export_loads_in_report():
+    """The real engine run's export round-trips through the report:
+    every episode reconstructed, residual within 1%, bottleneck named."""
+    tr, _ = _traced_engine_run()
+    doc = tr.export_chrome()
+    res = analyze(load_episodes(doc))
+    assert res["episodes"] == len(tr.components())
+    assert res["max_relative_residual"] <= 0.01
+    assert res["tenants"]["hop"]["bottleneck"]
+
+
+# -- 5. satellites --------------------------------------------------------
+
+def test_counters_snapshot_merges_rollout_stats():
+    """ONE source of truth: RolloutStats int fields surface in
+    counters_snapshot()/summarize() without mirroring incr calls;
+    explicit counters win name collisions; bools/floats/zeros excluded."""
+    from repro.core.manager import MultiTaskManager
+    from repro.core.metrics import MetricsRecorder, summarize
+    from repro.rollout.engine import RolloutStats
+    rec = MetricsRecorder({"rollout": 1})
+    stats = RolloutStats()
+    stats.parks = 3
+    stats.preemptions = 7          # rows — collides with the event counter
+    stats.decode_seconds = 4.2     # float: never a counter
+    rec.attach_rollout_stats(stats)
+    rec.incr("preemptions")        # 1 preemption EVENT
+    snap = rec.counters_snapshot()
+    assert snap["parks"] == 3
+    assert snap["preemptions"] == 1          # explicit counter wins
+    assert "decode_seconds" not in snap
+    assert "completions" not in snap         # zero fields omitted
+    stats.parks = 5                          # live view, not a copy
+    assert rec.counters_snapshot()["parks"] == 5
+    out = summarize(MultiTaskManager(), rec)
+    assert out["n_parks"] == 5.0
+    assert out["n_preemptions"] == 1.0
+
+
+def test_summarize_zero_length_run():
+    """Degenerate run regression (satellite): a recorder that never saw
+    an interval or sample must summarize to zeros, not raise."""
+    from repro.core.manager import MultiTaskManager
+    from repro.core.metrics import MetricsRecorder, summarize
+    rec = MetricsRecorder({"rollout": 2, "train": 1})
+    assert rec.utilization_pct() == 0.0
+    assert rec.idle_pct() == 0.0
+    assert rec.slot_utilization_pct() == 0.0
+    assert rec._depth_stats([], ("a", "b")) == {}
+    assert rec.counters_snapshot() == {}
+    out = summarize(MultiTaskManager(), rec)
+    assert out["span_s"] == 0.0
+    assert out["utilization_pct"] == 0.0
+    assert out["idle_pct"] == 0.0
+    assert out["steps_per_hr"] == 0.0
+    assert out["slot_util_pct"] == 0.0
