@@ -21,6 +21,7 @@ import json
 import jax
 
 from repro.configs import REGISTRY, reduced, ModelConfig, LoRAConfig
+from repro.core.chaos import ChaosConfig
 from repro.core.manager import TaskSpec
 from repro.core.metrics import summarize
 from repro.core.runtime import MARLaaSRuntime, RuntimeConfig
@@ -122,6 +123,35 @@ def main():
     ap.add_argument("--min-train-rows", type=int, default=0,
                     help="micro-batch threshold in rows, rounded up to "
                          "complete GRPO groups (0 = a full round)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="deterministic fault-injection seed (ISSUE 10); "
+                         "each site gets an independent RNG stream, so "
+                         "the same seed replays the same fault script")
+    ap.add_argument("--chaos-prefill-kill", type=float, default=0.0,
+                    metavar="P", help="P(kill a prefill worker per job "
+                                      "pickup); the supervisor recovers "
+                                      "the job and respawns with backoff")
+    ap.add_argument("--chaos-env-kill", type=float, default=0.0,
+                    metavar="P", help="P(kill an env-stage worker per "
+                                      "tool-call pickup)")
+    ap.add_argument("--chaos-tool-transient", type=float, default=0.0,
+                    metavar="P", help="P(transient tool error per call); "
+                                      "retried with exponential backoff")
+    ap.add_argument("--chaos-tool-permanent", type=float, default=0.0,
+                    metavar="P", help="P(permanent tool error per call); "
+                                      "fails the episode and counts "
+                                      "toward the tenant's circuit "
+                                      "breaker")
+    ap.add_argument("--chaos-snapshot-drop", type=float, default=0.0,
+                    metavar="P", help="P(drop a parked-row KV snapshot); "
+                                      "resume falls back to token replay")
+    ap.add_argument("--chaos-torn-checkpoint", type=float, default=0.0,
+                    metavar="P", help="P(tear a checkpoint mid-publish); "
+                                      "restart must fall back to the "
+                                      "previous valid snapshot")
+    ap.add_argument("--chaos-max-faults", type=int, default=0,
+                    metavar="N", help="cap each site at N faults total "
+                                      "(0 = uncapped)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="end-to-end episode tracing (ISSUE 9): write a "
                          "Perfetto-loadable Chrome trace JSON here (open "
@@ -129,6 +159,16 @@ def main():
                          "latency report (per-tenant p50/p95/p99 and the "
                          "dominant bottleneck stage)")
     args = ap.parse_args()
+
+    chaos = ChaosConfig(
+        seed=args.chaos_seed,
+        prefill_worker_kill=args.chaos_prefill_kill,
+        env_worker_kill=args.chaos_env_kill,
+        tool_error_transient=args.chaos_tool_transient,
+        tool_error_permanent=args.chaos_tool_permanent,
+        snapshot_drop=args.chaos_snapshot_drop,
+        torn_checkpoint=args.chaos_torn_checkpoint,
+        max_faults_per_site=args.chaos_max_faults)
 
     cfg = base_config(args.preset)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -156,6 +196,7 @@ def main():
         async_train=args.async_train,
         max_staleness=args.max_staleness,
         min_train_rows=args.min_train_rows,
+        chaos=chaos if chaos.enabled else None,
         trace=bool(args.trace_out)))
     envs = MIXES[args.mix]
     for i in range(args.tasks):
@@ -173,6 +214,15 @@ def main():
     print("\nsystem metrics:")
     print(json.dumps({k: round(v, 3) for k, v in
                       summarize(rt.mgr, rt.rec).items()}, indent=2))
+    if rt.chaos is not None:
+        c = rt.rec.counters_snapshot()
+        fault = {k: v for k, v in sorted(c.items())
+                 if k.startswith(("chaos_", "supervisor_", "quarantine_"))
+                 or k in ("env_retries", "env_recovered", "env_wedged")}
+        acc = rt.row_accounting()
+        print(f"\nchaos: injected={dict(rt.chaos.counts())}")
+        print(f"fault handling: {json.dumps(fault)}")
+        print(f"row accounting: {json.dumps(acc)}")
     if args.paged_kv:
         st = rt.cengine.stats
         print(f"\npaged KV: restores={st.restores} replays={st.replays} "

@@ -28,6 +28,7 @@ RULES: Dict[str, str] = {
     "RA102": "guarded attribute accessed outside its lock",
     "RA103": "blocking call while holding a lock",
     "RA105": "rec.record() phase is not a PHASE_INTENSITY literal",
+    "RA106": "swallowed exception in a stage worker run() loop",
     "RA201": "Python control flow on a traced value in a jitted function",
     "RA202": "host sync on a traced value in a jitted function",
     "RA203": "mutation of captured state in a jitted function",
@@ -159,7 +160,7 @@ def analyze_paths(paths: Iterable[str]):
 
     ``lock_model`` is the cross-module lock graph (``locks.LockModel``)
     the runtime validator cross-checks against."""
-    from . import locks, pallas_rules, phases, tracing
+    from . import locks, pallas_rules, phases, robustness, tracing
 
     files = collect_files(paths)
     model = locks.build_model(files)
@@ -168,6 +169,7 @@ def analyze_paths(paths: Iterable[str]):
     findings += tracing.check(files)
     findings += pallas_rules.check(files)
     findings += phases.check(files)
+    findings += robustness.check(files)
     by_rel = {f.rel: f for f in files}
     findings = [f for f in findings
                 if f.file not in by_rel or not _suppressed(f, by_rel[f.file])]

@@ -248,6 +248,21 @@ class AdmissionController:
             return True
         return False
 
+    # -- quarantine (per-tenant circuit breaker, ISSUE 10) -----------------
+    def quarantine(self, task_id: str) -> int:
+        """Pause a quarantined tenant's admission: its bytes free up for
+        the healthy tenants (reusing the preemption accounting — the
+        charge parks, it is not forgotten) until the half-open probe
+        readmits it. Returns the bytes freed."""
+        return self.preempt(task_id)
+
+    def try_unquarantine(self, task_id: str) -> bool:
+        """Re-charge a quarantined tenant's parked reservation for its
+        half-open probe round. Soft like try_readmit: False means the
+        budget is currently full — the caller retries next tick (the probe
+        itself is not blocked; this is the accounting side)."""
+        return self.try_readmit(task_id)
+
     def release(self, task_id: str):
         """Finished (or cancelled) task: drop its reservation wherever it
         is — admitted or parked in the preempted set."""

@@ -63,7 +63,8 @@ class TaskState:
     opt_state: Any = None           # φ_t^(v)
     version: int = 0
     steps_done: int = 0
-    status: str = "pending"         # pending|admitted|preempted|finished
+    status: str = "pending"         # pending|admitted|preempted|
+                                    # quarantined|finished
     rollout_issued_version: int = -1   # highest v handed to the rollout engine
     rounds_issued_for_version: int = 0  # rollout rounds issued under the
                                         # CURRENT version (async staleness
@@ -72,6 +73,14 @@ class TaskState:
                                        # continuous engine for this task
     rollout_rows_total: int = 0        # lifetime rows streamed through slots
     stale_rows_dropped: int = 0        # rows refused by the staleness window
+    failed_rows: int = 0               # episodes lost to permanent tool
+                                       # errors (incl. poisoned-group
+                                       # siblings) — counted, never trained
+    quarantine_dropped_rows: int = 0   # rows drained while the tenant's
+                                       # circuit breaker was open
+    abandoned: bool = False            # breaker gave up (trips > max_trips):
+                                       # terminal — the run finishes without
+                                       # this tenant reaching target_steps
     adapter_slot: Optional[int] = None  # stacked-LoRA slot while resident
     adapter_installs: int = 0          # times the adapter was (re)installed
     preempt_count: int = 0             # admission-driven preemptions suffered
@@ -84,7 +93,7 @@ class TaskState:
 
     @property
     def done(self) -> bool:
-        return self.steps_done >= self.spec.target_steps
+        return self.abandoned or self.steps_done >= self.spec.target_steps
 
 
 @dataclass
@@ -124,6 +133,24 @@ class MultiTaskManager:
         self.stale_groups_dropped = 0
         self.stale_batches_dropped = 0
         self.discarded_tail_rows = 0   # rows arriving after their task done
+        # fault accounting (ISSUE 10): with these two, the PR-7 invariant
+        # extends to completed == trained + stale_dropped + discarded_tails
+        # + failed + quarantine_dropped — no episode is ever silently lost
+        self.failed_rows = 0           # permanent tool errors + poisoned-
+                                       # group siblings
+        self.quarantine_dropped_rows = 0
+        # rows committed by the trainer (runtime increments on commit);
+        # lives here rather than on the runtime so it serializes with the
+        # checkpoint manifest and the invariant survives a restart
+        self.rows_trained = 0
+        # completed rows lost to a checkpoint restart (their round had no
+        # serialized batch/group, so it regenerates); load_checkpoint
+        # computes this so the invariant stays exact across incarnations
+        self.orphaned_rows = 0
+        # GRPO groups poisoned by a failed episode: a group missing a row
+        # can never train, so late siblings count failed instead of
+        # buffering in _partial forever
+        self._failed_groups: set = set()
         # optional episode tracer (repro.obs): drop-or-train decisions are
         # terminal lifecycle events — a dropped episode must not look like
         # one still waiting for the trainer
@@ -294,6 +321,10 @@ class MultiTaskManager:
                 raise ValueError(
                     f"task {batch.task_id} batch v{batch.version} is newer "
                     f"than committed v{st.version}")
+            if st.status == "quarantined":
+                self.quarantine_dropped_rows += batch.num_rows
+                st.quarantine_dropped_rows += batch.num_rows
+                return False
             if st.done or lag > self.max_staleness:
                 self.stale_batches_dropped += 1
                 self.stale_rows_dropped += batch.num_rows
@@ -334,10 +365,23 @@ class MultiTaskManager:
         row can never train) and counted. Returns whether admitted."""
         with self._lock:
             st = self.tasks[task_id]
+            if st.status == "quarantined":
+                buf = self._partial.pop((task_id, group_key), [])
+                n = 1 + len(buf)
+                self.quarantine_dropped_rows += n
+                st.quarantine_dropped_rows += n
+                self._trace_drop([episode] + buf, "quarantine_drop")
+                return False
             if st.done:
                 buf = self._partial.pop((task_id, group_key), [])
                 self.discarded_tail_rows += 1 + len(buf)
                 self._trace_drop([episode] + buf, "tail_drop")
+                return False
+            if (task_id, group_key) in self._failed_groups:
+                # a sibling already failed: this group can never complete
+                self.failed_rows += 1
+                st.failed_rows += 1
+                self._trace_drop([episode], "failed_drop")
                 return False
             lag = st.version - version
             if lag < 0:
@@ -365,6 +409,117 @@ class MultiTaskManager:
                 self.episodes.setdefault(task_id, deque()).append(g)
                 self._cv.notify_all()
             return True
+
+    def fail_episode(self, task_id: str, group_key, episode) -> int:
+        """One episode finished with a permanent tool error (async feed):
+        count it failed, poison its GRPO group (already-buffered siblings
+        drop with it; late ones drop on arrival — a group missing a row
+        can never train), and return the rows lost."""
+        with self._lock:
+            st = self.tasks[task_id]
+            buf = self._partial.pop((task_id, group_key), [])
+            n = 1 + len(buf)
+            self._failed_groups.add((task_id, group_key))
+            self.failed_rows += n
+            st.failed_rows += n
+            self._trace_drop([episode] + buf, "failed_drop")
+            return n
+
+    def note_failed(self, task_id: str, n: int = 1):
+        """Count rows lost to tool errors outside the async feed (sync
+        round assembly books its own group poisoning)."""
+        with self._lock:
+            st = self.tasks[task_id]
+            self.failed_rows += n
+            st.failed_rows += n
+
+    def note_quarantine_dropped(self, task_id: str, n: int = 1):
+        """Count rows the engine aborted (or the runtime discarded) while
+        the tenant's breaker was open."""
+        with self._lock:
+            st = self.tasks[task_id]
+            self.quarantine_dropped_rows += n
+            st.quarantine_dropped_rows += n
+
+    def round_failed(self, task_id: str):
+        """Sync mode: an issued round produced NO trainable rows (every
+        episode failed) — re-arm issuance so the tenant isn't wedged
+        waiting for a commit that can never come."""
+        with self._lock:
+            st = self.tasks[task_id]
+            if (st.status == "admitted" and not st.done
+                    and st.rollout_issued_version >= st.version):
+                st.rollout_issued_version = st.version - 1
+                self._cv.notify_all()
+
+    # -- per-tenant quarantine (circuit breaker, ISSUE 10) -----------------
+    def quarantine(self, task_id: str) -> bool:
+        """Breaker tripped open: the tenant issues no new rounds and its
+        arriving rows drop (counted) until unquarantined. Other tenants
+        are untouched — that isolation is the point."""
+        with self._lock:
+            st = self.tasks[task_id]
+            if st.status != "admitted" or st.done:
+                return False
+            st.status = "quarantined"
+            self._cv.notify_all()
+            return True
+
+    def unquarantine(self, task_id: str) -> bool:
+        """Half-open probe (or full recovery): readmit the tenant and
+        re-arm issuance — the quarantined rounds' issue budget was spent
+        on drained work, so without the reset the probe round could never
+        issue and the breaker would never see an outcome."""
+        with self._lock:
+            st = self.tasks.get(task_id)
+            if st is None or st.status != "quarantined":
+                return False
+            st.status = "finished" if st.done else "admitted"
+            st.rounds_issued_for_version = 0
+            st.rollout_issued_version = st.version - 1
+            self._cv.notify_all()
+            return True
+
+    def drain_tenant(self, task_id: str) -> int:
+        """Drop one tenant's queued work — ready groups, partial rows,
+        buffered sync rounds — with counted drops. Returns rows dropped."""
+        with self._lock:
+            return self._drain_tenant_locked(task_id)
+
+    def _drain_tenant_locked(self, task_id: str) -> int:   # held: _lock
+        st = self.tasks[task_id]
+        n = 0
+        for g in self.episodes.pop(task_id, ()):
+            n += len(g.rows)
+            self._trace_drop(g.rows, "quarantine_drop")
+        for key in [k for k in self._partial if k[0] == task_id]:
+            rows = self._partial.pop(key)
+            n += len(rows)
+            self._trace_drop(rows, "quarantine_drop")
+        keep: Deque[TrajectoryBatch] = deque()
+        for tb in self.q_buffer:
+            if tb.task_id == task_id:
+                n += tb.num_rows
+            else:
+                keep.append(tb)
+        self.q_buffer = keep
+        self._failed_groups = {k for k in self._failed_groups
+                               if k[0] != task_id}
+        self.quarantine_dropped_rows += n
+        st.quarantine_dropped_rows += n
+        return n
+
+    def abandon(self, task_id: str) -> int:
+        """Terminal give-up (breaker trips exhausted): drain the tenant's
+        queued work and mark it done-without-finishing, so the run can
+        complete without it. Returns rows dropped by the drain."""
+        with self._lock:
+            st = self.tasks[task_id]
+            n = self._drain_tenant_locked(task_id)
+            st.abandoned = True
+            st.status = "finished"
+            self._cv.notify_all()
+            return n
 
     def train_threshold(self, spec: TaskSpec) -> int:
         """Micro-batch size in rows for one tenant: ``min_train_rows``
@@ -496,6 +651,23 @@ class MultiTaskManager:
                 self._cv.notify_all()
             return n
 
+    def rebind_episode_envs(self, envs: Dict[str, object]) -> int:
+        """Re-attach live env handles to restored completed episodes
+        (checkpointed episodes serialize with ``env=None`` — env objects
+        hold RNGs/sessions that don't pickle). Returns rows rebound."""
+        n = 0
+        with self._lock:
+            for tid, dq in self.episodes.items():
+                env = envs.get(tid)
+                if env is None:
+                    continue
+                for g in dq:
+                    for c in g.rows:
+                        if c.env is None:
+                            c.env = env
+                            n += 1
+        return n
+
     def _clear_inflight(self, task_id: str) -> None:   # held: _lock
         """Retire the oldest in-flight train item for `task_id` (its commit
         just landed)."""
@@ -511,6 +683,8 @@ class MultiTaskManager:
         for key in [k for k in self._partial if k[0] == task_id]:
             n += len(self._partial.pop(key))
         self.discarded_tail_rows += n
+        self._failed_groups = {k for k in self._failed_groups
+                               if k[0] != task_id}
 
     # -- Algorithm 1, line 15: commit θ,φ^(v+1) ---------------------------
     def commit(self, task_id: str, adapters, opt_state, trained_version: int,
@@ -571,7 +745,9 @@ class MultiTaskManager:
             return {"stale_rows_dropped": self.stale_rows_dropped,
                     "stale_groups_dropped": self.stale_groups_dropped,
                     "stale_batches_dropped": self.stale_batches_dropped,
-                    "discarded_tail_rows": self.discarded_tail_rows}
+                    "discarded_tail_rows": self.discarded_tail_rows,
+                    "failed_rows": self.failed_rows,
+                    "quarantine_dropped_rows": self.quarantine_dropped_rows}
 
     def all_done(self) -> bool:
         with self._lock:

@@ -94,6 +94,9 @@ class MetricsRecorder:
         # device-busy time.
         self.trainer_waits: List[Tuple[float, float]] = []
         self.backlog_samples: List[Tuple[float, int]] = []  # (t, rows)
+        # (t, tenant, state) circuit-breaker transition timeline (ISSUE 10):
+        # closed -> open -> half_open -> closed/abandoned per tenant
+        self.breaker_samples: List[Tuple[float, str, str]] = []
         self.t0: Optional[float] = None
         self.t1: Optional[float] = None
         # prefill workers record concurrently with the decode/train threads
@@ -174,6 +177,19 @@ class MetricsRecorder:
             return
         with self._lock:
             self.page_samples.append((t, used, total, frag))
+
+    def record_breaker_sample(self, t: float, task_id: str, state: str):
+        """One tenant circuit-breaker transition (quarantine story): the
+        state holds until the tenant's next transition."""
+        with self._lock:
+            self.breaker_samples.append((t, task_id, state))
+
+    def breaker_timeline(self, task_id: Optional[str] = None
+                         ) -> List[Tuple[float, str, str]]:
+        """Breaker transitions in time order, optionally one tenant's."""
+        with self._lock:
+            return [s for s in self.breaker_samples
+                    if task_id is None or s[1] == task_id]
 
     def record_trainer_wait(self, start: float, end: float):
         """The trainer blocked in pop (no admissible micro-batch) over

@@ -89,9 +89,7 @@ than stalling the batch.
 """
 from __future__ import annotations
 
-import faulthandler
 import random
-import sys
 import threading
 import time
 from collections import deque
@@ -111,28 +109,11 @@ from repro.rollout.engine import (ContinuousRolloutEngine, RolloutEngine,
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_step import TrainConfig, init_opt_state, make_train_step
 from .admission import AdmissionConfig, AdmissionController
+from .chaos import ChaosConfig, ChaosInjector
 from .manager import MultiTaskManager, TaskSpec
 from .metrics import MetricsRecorder
-
-
-def join_or_raise(threads: List[threading.Thread], timeout_s: float = 10.0):
-    """Join `threads` within one shared deadline; raise loudly on leaks.
-
-    A thread still alive after the stop flag + join timeout is a wedged
-    stage (deadlocked lock, stuck tool call, hung device op). Silently
-    returning would leak it into the caller's process — later runs then
-    fight it for slots/devices and failures surface far from the cause.
-    Instead: dump every thread's stack (faulthandler) and raise."""
-    deadline = time.monotonic() + timeout_s
-    for t in threads:
-        t.join(timeout=max(0.0, deadline - time.monotonic()))
-    leaked = [t for t in threads if t.is_alive()]
-    if leaked:
-        names = ", ".join(t.name for t in leaked)
-        faulthandler.dump_traceback(file=sys.stderr)
-        raise RuntimeError(
-            f"runtime thread(s) still alive {timeout_s:.0f}s after stop: "
-            f"{names} — all thread stacks dumped to stderr")
+from .supervisor import (ABANDONED, CLOSED, HALF_OPEN, OPEN,  # noqa: F401
+                         TenantBreaker, join_or_raise)
 
 
 @dataclass
@@ -233,6 +214,29 @@ class RuntimeConfig:
                                       # only a `is None` check
     trace_capacity: int = 1_000_000   # tracer ring-buffer size (events);
                                       # overflow drops oldest and counts
+    chaos: Optional[ChaosConfig] = None   # deterministic fault injection
+                                      # (ISSUE 10): seeded per-site streams
+                                      # kill stage workers, fail tool calls,
+                                      # drop snapshots, tear checkpoints —
+                                      # None = no injector object at all,
+                                      # the hot paths carry one `is None`
+    tool_retry_max: int = 3           # per-tool-call transient retries
+                                      # (exponential backoff + jitter on the
+                                      # env-stage queue, no worker blocked)
+    tool_retry_base_s: float = 0.05   # first-retry backoff
+    tool_retry_max_s: float = 2.0     # backoff ceiling
+    tool_retry_episode_cap: int = 0   # total retries per EPISODE across its
+                                      # turns (0 = uncapped): a flapping
+                                      # tool can't spin one row forever
+    supervisor_wedge_s: float = 0.0   # env worker with no heartbeat for
+                                      # this long while executing is poisoned
+                                      # and replaced (0 = liveness only)
+    breaker_fail_threshold: int = 5   # consecutive tool-error episodes that
+                                      # trip a tenant's circuit breaker open
+    breaker_cooldown_s: float = 2.0   # open -> half-open probe delay
+    breaker_max_trips: int = 3        # re-trips before the tenant is
+                                      # abandoned (drained + marked done)
+    checkpoint_keep_last: int = 0     # snapshot retention (0 = keep all)
 
 
 class FailureInjector:
@@ -308,6 +312,12 @@ class MARLaaSRuntime:
         self._train_cfg_base = train_cfg or TrainConfig()
         self._train_steps: Dict[int, object] = {}   # group_size -> jitted fn
         self._tool_pool = ThreadPoolExecutor(max_workers=rcfg.env_threads)
+        # deterministic chaos (ISSUE 10): one injector shared by every stage
+        # (engine worker kills, env-stage tool faults, snapshot drops) and
+        # the checkpoint store (torn publishes)
+        self.chaos: Optional[ChaosInjector] = (
+            ChaosInjector(rcfg.chaos)
+            if rcfg.chaos is not None and rcfg.chaos.enabled else None)
         self.cengine = ContinuousRolloutEngine(
             cfg, base_params, max_slots=rcfg.max_slots,
             max_adapters=rcfg.max_adapter_slots, max_len=rcfg.max_len,
@@ -327,7 +337,13 @@ class MARLaaSRuntime:
             snapshot_budget_bytes=rcfg.snapshot_budget_bytes,
             prefix_cache=rcfg.prefix_cache,
             on_stage=self._on_stage,
-            tracer=self.tracer)
+            tracer=self.tracer,
+            chaos=self.chaos,
+            tool_retry_max=rcfg.tool_retry_max,
+            tool_retry_base_s=rcfg.tool_retry_base_s,
+            tool_retry_max_s=rcfg.tool_retry_max_s,
+            tool_retry_episode_cap=rcfg.tool_retry_episode_cap,
+            supervise_wedge_s=rcfg.supervisor_wedge_s)
         # ONE source of truth for counters (ISSUE 9 satellite): summarize()
         # merges the engine's RolloutStats int fields with the recorder's
         # explicit counters instead of relying on hand-mirrored incr calls
@@ -350,10 +366,28 @@ class MARLaaSRuntime:
         # per-tenant round counter: GRPO group identity for the episode
         # queue is (round, group-within-round) — rollout thread only
         self._round_seq: Dict[str, int] = {}
-        # cumulative completed/trained row counts feeding the recorder's
-        # trainer-backlog timeline (each written by exactly one thread)
+        # cumulative completed row count feeding the recorder's
+        # trainer-backlog timeline (rollout thread only; the trained-row
+        # twin lives on the manager — mgr.rows_trained — so it survives
+        # checkpoint restarts and the conservation invariant holds across
+        # incarnations, not just within one)
         self._rows_completed = 0
-        self._rows_trained = 0
+        # per-tenant circuit breaker (ISSUE 10): tool-error episodes are the
+        # failure signal, natural finishes the success signal; transitions
+        # are applied on the rollout thread (the only thread that may touch
+        # the engine), admission-side effects queued to the driver
+        self.breaker: Optional[TenantBreaker] = (
+            TenantBreaker(fail_threshold=rcfg.breaker_fail_threshold,
+                          cooldown_s=rcfg.breaker_cooldown_s,
+                          max_trips=rcfg.breaker_max_trips)
+            if rcfg.rollout_mode == "continuous" else None)
+        # quarantine/readmit/abandon byte accounting requested by the
+        # rollout thread, executed by the driver's admission tick
+        self._quarantine_admission_q: deque = deque()
+        # sync mode: failed-row counts per issued round (tid, version) — a
+        # round missing rows can never pack, so its completion check is
+        # len(batch) + failed >= rows_per_batch (rollout thread only)
+        self._sync_failed: Dict[tuple, int] = {}
         self._stop = threading.Event()
         self.failure = failure
         self.error: Optional[BaseException] = None
@@ -567,7 +601,26 @@ class MARLaaSRuntime:
         tid = comp.task_id
         self.mgr.rollout_row_done(tid)
         self._rows_completed += 1
+        if comp.finish_reason == "quarantined":
+            # engine-aborted row of a tripped tenant: counted, never trained
+            self.mgr.note_quarantine_dropped(tid, 1)
+            return False
+        failed = comp.finish_reason == "tool_error"
+        if self.breaker is not None:
+            if failed:
+                self.breaker.record_failure(tid)
+            elif comp.finish_reason in ("eos", "budget", "capacity",
+                                        "turn_limit"):
+                # natural finishes close a half-open probe; degraded-but-
+                # finished rows (tool_timeout, straggler) are neutral
+                self.breaker.record_success(tid)
         if self.rcfg.async_train:
+            if failed:
+                # permanent tool error: the episode's GRPO group is poisoned
+                # (siblings drop with it — a group missing a row can never
+                # train), all counted as failed rows
+                self.mgr.fail_episode(tid, comp.meta.get("group"), comp)
+                return False
             # event-driven feed: the episode joins its GRPO group in the
             # per-tenant queue the moment it evicts — no round assembly
             advanced = self.mgr.enqueue_episode(tid, comp.version,
@@ -576,19 +629,35 @@ class MARLaaSRuntime:
                                           self.mgr.dispatchable_rows())
             return advanced
         st = self.mgr.state(tid)
+        key = (tid, comp.version)
         if st.done or st.version - comp.version > self.mgr.max_staleness:
             # this round can never train: drop the completion AND any
             # already-buffered siblings (previously they sat in `rounds`
             # forever — the partial-entry leak)
-            stale = rounds.pop((tid, comp.version), [])
+            stale = rounds.pop(key, [])
+            self._sync_failed.pop(key, None)
             self.rec.incr("orphaned_completions", 1 + len(stale))
             return False
-        batch = rounds.setdefault((tid, comp.version), [])
-        batch.append(comp)
         spec = self.mgr.spec_for(tid)
-        if len(batch) < spec.rows_per_batch:
+        if failed:
+            self._sync_failed[key] = self._sync_failed.get(key, 0) + 1
+            self.mgr.note_failed(tid, 1)
+        else:
+            rounds.setdefault(key, []).append(comp)
+        batch = rounds.get(key, [])
+        n_failed = self._sync_failed.get(key, 0)
+        if len(batch) + n_failed < spec.rows_per_batch:
             return False
-        del rounds[(tid, comp.version)]
+        rounds.pop(key, None)
+        self._sync_failed.pop(key, None)
+        if n_failed:
+            # a round missing rows can never pack into full GRPO groups:
+            # the surviving siblings drop with the failures and issuance is
+            # re-armed so the tenant isn't wedged waiting for a commit
+            if batch:
+                self.mgr.note_failed(tid, len(batch))
+            self.mgr.round_failed(tid)
+            return False
         # completions arrive in eviction order; GRPO groups are contiguous
         # rows sharing a prompt, so restore submission order before packing
         batch.sort(key=lambda c: c.submit_index)
@@ -606,6 +675,44 @@ class MARLaaSRuntime:
         """Trace ids riding a batch's completion metas (traced rows only)."""
         return [c.meta["trace_id"] for c in completions
                 if isinstance(c.meta, dict) and "trace_id" in c.meta]
+
+    def _poll_breaker(self, rounds: Dict[tuple, list]):
+        """Apply pending circuit-breaker transitions (rollout thread only —
+        quarantine aborts the tenant's engine rows, and the engine is
+        single-threaded). Admission byte accounting is queued to the
+        driver's tick; everything else happens here."""
+        now = time.monotonic()
+        for tid, state in self.breaker.poll(now):
+            self.rec.record_breaker_sample(now, tid, state)
+            if self.tracer is not None:
+                self.tracer.instant(("supervisor", "breaker"),
+                                    f"{tid}:{state}", now)
+            if state == OPEN:
+                self.rec.incr("quarantine_trips")
+                self.mgr.quarantine(tid)
+                # in-flight rows abort through the normal completion path
+                # (finish_reason "quarantined" -> counted drops); queued
+                # manager work drains with counted drops too
+                self.cengine.abort_tenant(tid)
+                self.mgr.drain_tenant(tid)
+                for key in [k for k in rounds if k[0] == tid]:
+                    self.mgr.note_quarantine_dropped(tid,
+                                                     len(rounds.pop(key)))
+                for key in [k for k in self._sync_failed if k[0] == tid]:
+                    del self._sync_failed[key]
+                self._quarantine_admission_q.append(("quarantine", tid))
+            elif state == HALF_OPEN:
+                self.rec.incr("quarantine_probes")
+                self.mgr.unquarantine(tid)     # probe round may issue
+                self._quarantine_admission_q.append(("readmit", tid))
+            elif state == CLOSED:
+                self.rec.incr("quarantine_recoveries")
+            elif state == ABANDONED:
+                self.rec.incr("quarantine_abandoned")
+                self.cengine.abort_tenant(tid)
+                self.mgr.abandon(tid)          # done-without-finishing: the
+                                               # admission tick releases its
+                                               # parked bytes via st.done
 
     def _rollout_loop_continuous(self):
         eng = self.cengine
@@ -654,6 +761,8 @@ class MARLaaSRuntime:
             for comp in eng.drain_completions():
                 if self._handle_completion(comp, rounds):
                     progressed = True
+            if self.breaker is not None:
+                self._poll_breaker(rounds)
             if not progressed and not fed:
                 if self.mgr.all_done() and eng.idle():
                     clean = True
@@ -699,6 +808,23 @@ class MARLaaSRuntime:
                          "kv_hbm_bytes_per_row"):
                 if ps.get(name):
                     self.rec.incr(name, int(ps[name]))
+        # fault-tolerance accounting -> summary counters (merged BEFORE the
+        # halts below — a wedged worker makes halt raise, and the restart/
+        # retry story should survive into the recorder regardless)
+        # supervisor.counters is tick-thread-only (this thread) — it is not
+        # the recorder's lock-guarded dict of the same name
+        for name, n in eng.supervisor.counters.items():  # noqa: RA102
+            if n:
+                self.rec.incr(f"supervisor_{name}", n)
+        if eng._env is not None:
+            for name in ("retries", "recovered", "wedged"):
+                n = getattr(eng._env, name)
+                if n:
+                    self.rec.incr(f"env_{name}", n)
+        if self.chaos is not None:
+            for site, n in self.chaos.counts().items():
+                if n:
+                    self.rec.incr(f"chaos_{site}", n)
         if self.rcfg.env_stage:
             self.rec.record_env_sample(now, *eng.env_depths())
             if eng._env is not None:
@@ -751,7 +877,7 @@ class MARLaaSRuntime:
                              flow_in=0, flow_out=0)
             for tr in trace_ids:
                 self.tracer.mark(tr, "committed", t_commit)
-        self._rows_trained += tb.num_rows
+        self.mgr.rows_trained += tb.num_rows
         self.rec.record_train_backlog(time.monotonic(),
                                       self.mgr.dispatchable_rows())
         if self.failure:
@@ -760,7 +886,9 @@ class MARLaaSRuntime:
                 self.mgr.total_steps_done()
                 % self.rcfg.checkpoint_every == 0):
             from repro.checkpoint.store import save_checkpoint
-            save_checkpoint(self.rcfg.checkpoint_dir, self.mgr)
+            save_checkpoint(self.rcfg.checkpoint_dir, self.mgr,
+                            keep_last_n=self.rcfg.checkpoint_keep_last,
+                            chaos=self.chaos)
 
     def _train_loop(self):
         try:
@@ -879,6 +1007,17 @@ class MARLaaSRuntime:
     def _admission_tick(self):
         """One driver pass: release finished, re-admit preempted, admit
         pending (highest priority first, preempting if allowed)."""
+        # quarantine byte accounting requested by the rollout thread: a
+        # tripped tenant's reservation parks (frees budget for the healthy),
+        # a half-open probe re-charges it — soft, retried next tick if full
+        while self._quarantine_admission_q:
+            action, tid = self._quarantine_admission_q.popleft()
+            if action == "quarantine":
+                self.admission.quarantine(tid)
+            elif action == "readmit":
+                if not self.admission.try_unquarantine(tid):
+                    self._quarantine_admission_q.append(("readmit", tid))
+                    break              # budget full now; retry next tick
         for tid, st in self.mgr.task_items():
             if st.done and (tid in self.admission.admitted()
                             or tid in self.admission.preempted()):
@@ -935,6 +1074,79 @@ class MARLaaSRuntime:
                 self.rec.incr(name, n)
         if self.error:
             raise self.error
+
+    @property
+    def _rows_trained(self) -> int:
+        # checkpoint-restart moved the canonical counter onto the manager
+        # (it serializes with the manifest); kept as a read-only alias
+        return self.mgr.rows_trained
+
+    def row_accounting(self) -> Dict[str, int]:
+        """Every issued row's terminal fate. The conservation invariant the
+        chaos tests assert exactly (extending PR 7's):
+
+            completed == trained + stale_dropped + discarded_tails
+                         + failed + quarantine_dropped [+ orphaned]
+
+        `orphaned` is nonzero only on aborted runs — rows stranded at the
+        stop flag, or completed rows a checkpoint restart could not carry
+        over (their round regenerates; `Manager.orphaned_rows` counts the
+        lost copies). A clean single-incarnation run retires every row
+        through one of the other paths."""
+        d = self.mgr.drop_counters()
+        c = self.rec.counters_snapshot()
+        return {
+            "completed": sum(st.rollout_rows_total
+                             for _, st in self.mgr.task_items()),
+            "trained": self.mgr.rows_trained,
+            "stale_dropped": d["stale_rows_dropped"],
+            "discarded_tails": d["discarded_tail_rows"],
+            "failed": d["failed_rows"],
+            "quarantine_dropped": d["quarantine_dropped_rows"],
+            "orphaned": (c.get("orphaned_completions", 0)
+                         + self.mgr.orphaned_rows),
+        }
+
+    def adopt_checkpoint(self, path) -> None:
+        """Restore manager state from a snapshot into THIS (fresh) runtime:
+        tasks re-enter pending with their trained adapters/optimizer state,
+        surviving completed-episode queues rebind live env handles (envs
+        don't serialize), and per-tenant datagens are rebuilt exactly as
+        `submit_task` would."""
+        from repro.checkpoint.store import load_checkpoint
+        load_checkpoint(path, self.mgr)
+        for tid, st in self.mgr.task_items():
+            self.envs[tid] = make_env(st.spec.env_name)
+            self.datagens[tid] = random.Random(
+                hash((self.rcfg.seed, tid)) % (2 ** 31))
+        self.mgr.rebind_episode_envs(self.envs)
+
+    def run_with_recovery(self, timeout_s: float = 600.0,
+                          max_restarts: int = 2) -> "MARLaaSRuntime":
+        """Run to completion, restarting from the newest valid checkpoint
+        when a stage escalation (or injected crash) kills the run — the
+        supervisor's last resort when restart-in-place can't help. Returns
+        the runtime instance that finished (a fresh one after a restart:
+        engine state is not trusted after a crash, only checkpoints are)."""
+        rt = self
+        for attempt in range(max_restarts + 1):
+            try:
+                rt.run(timeout_s)
+                return rt
+            except BaseException:
+                if attempt >= max_restarts or not rt.rcfg.checkpoint_dir:
+                    raise
+                from repro.checkpoint.store import latest_checkpoint
+                path = latest_checkpoint(rt.rcfg.checkpoint_dir)
+                if path is None:
+                    raise               # nothing to restart from
+                fresh = MARLaaSRuntime(rt.cfg, rt.base_params, rt.rcfg,
+                                       rt.acfg, rt._train_cfg_base,
+                                       failure=None)
+                fresh.adopt_checkpoint(path)
+                fresh.rec.incr("checkpoint_restarts")
+                rt = fresh
+        return rt
 
     def _run_async(self, timeout_s):
         rt = threading.Thread(target=self._rollout_loop, daemon=True,

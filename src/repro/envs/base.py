@@ -33,6 +33,26 @@ from typing import List, Optional, Sequence, Tuple
 from repro.data import tokenizer as tok
 
 
+class ToolError(RuntimeError):
+    """A tool/environment endpoint failure during a session call (ISSUE
+    10). Unlike an arbitrary exception — which is a BUG in our stack and
+    stays fatal — a ToolError is an expected operational outcome of
+    talking to external tools, and the env stage handles it as one:
+    ``TransientToolError`` is retried with exponential backoff + jitter
+    (capped per call and per episode), ``PermanentToolError`` (or an
+    exhausted retry budget) finishes the episode with
+    ``finish_reason="tool_error"`` — counted, never trained, and feeding
+    the per-tenant circuit breaker."""
+
+
+class TransientToolError(ToolError):
+    """Retryable: rate limit, timeout, flaky endpoint — try again."""
+
+
+class PermanentToolError(ToolError):
+    """Non-retryable: malformed query, dead endpoint — fail the episode."""
+
+
 class CancelToken:
     """Cooperative cancellation for in-flight tool calls (ISSUE 5
     satellite, ROADMAP PR-4 follow-on).

@@ -65,6 +65,32 @@ def load_episodes(trace: Dict) -> List[Dict]:
     return out
 
 
+def load_faults(trace: Dict) -> Dict:
+    """Fault/recovery attribution (ISSUE 10) from the supervisor's instant
+    marks: per-stage restart counts and the per-tenant circuit-breaker
+    transition sequence (``<tenant>:<state>`` instants on the breaker
+    thread)."""
+    events = trace.get("traceEvents", [])
+    # stage names live in thread_name metadata, keyed (pid, tid)
+    names = {(ev.get("pid"), ev.get("tid")): ev.get("args", {}).get("name")
+             for ev in events
+             if ev.get("ph") == "M" and ev.get("name") == "thread_name"}
+    restarts: Dict[str, int] = {}
+    breaker: Dict[str, List[str]] = {}
+    for ev in events:
+        if ev.get("cat") != "supervisor" or ev.get("ph") != "i":
+            continue
+        name = ev.get("name", "")
+        if ":" in name:
+            tid, _, state = name.rpartition(":")
+            breaker.setdefault(tid, []).append(state)
+        elif name == "restart":
+            stage = names.get((ev.get("pid"), ev.get("tid")), "?")
+            restarts[stage] = restarts.get(stage, 0) + 1
+    return {"stage_restarts": restarts,
+            "breaker_transitions": {t: s for t, s in sorted(breaker.items())}}
+
+
 def analyze(episodes: List[Dict]) -> Dict:
     """Per-tenant aggregation + global additivity check."""
     tenants: Dict[str, Dict] = {}
@@ -104,6 +130,13 @@ def format_report(result: Dict) -> str:
     lines = [f"episodes: {result['episodes']}   "
              f"max component-sum residual: "
              f"{100 * result['max_relative_residual']:.3f}% of E2E"]
+    faults = result.get("faults")
+    if faults and (faults["stage_restarts"] or faults["breaker_transitions"]):
+        lines.append("faults/recovery:")
+        for stage, n in sorted(faults["stage_restarts"].items()):
+            lines.append(f"  {stage}: {n} restart(s)")
+        for tid, seq in faults["breaker_transitions"].items():
+            lines.append(f"  breaker {tid}: {' -> '.join(seq)}")
     hdr = (f"{'tenant':20s} {'eps':>4s} {'e2e p50':>9s} {'p95':>9s} "
            f"{'p99':>9s}  bottleneck (mean seconds by component)")
     lines.append(hdr)
@@ -133,6 +166,7 @@ def main(argv: Optional[List[str]] = None) -> int:
               file=sys.stderr)
         return 1
     result = analyze(episodes)
+    result["faults"] = load_faults(trace)
     print(format_report(result))
     if args.json:
         with open(args.json, "w") as f:

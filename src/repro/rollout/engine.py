@@ -148,7 +148,8 @@ import numpy as np
 
 from repro.configs import ModelConfig
 from repro.data import tokenizer as tok
-from repro.envs.base import CancelToken, Env, call_session
+from repro.core.supervisor import StageSupervisor
+from repro.envs.base import CancelToken, Env, ToolError, call_session
 from repro.lora.adapters import batched_ctx, init_stacked_buffer, stack_adapters
 from repro.models import (decode_step, forward_prefill_chunk, forward_seq,
                           init_cache, init_paged_cache, lm_logits)
@@ -214,6 +215,9 @@ class RolloutStats:
     # environment-interaction stage extras
     parks: int = 0                 # rows vacated from their slot on CALL
     resumes: int = 0               # tool responses turned into resume jobs
+    tool_errors: int = 0           # episodes finished by a permanent tool
+                                   # failure / exhausted retry budget
+                                   # (finish_reason "tool_error")
     # paged-KV / snapshot-restore extras (rollout/kvcache.py)
     restores: int = 0              # rows resumed by splicing saved KV pages
                                    # back (NO prefill replay ran)
@@ -631,7 +635,7 @@ class _Row:
                  "forced", "status", "forced_q", "finish_reason", "key",
                  "submit_index", "meta", "submitted_at", "started_at",
                  "replays", "session", "turns", "snap", "dev_pages",
-                 "dev_pos")
+                 "dev_pos", "tool_retries")
 
     def __init__(self, req: RolloutRequest, key, submit_index: int,
                  meta=None, submitted_at: float = 0.0):
@@ -651,6 +655,8 @@ class _Row:
         self.submitted_at = submitted_at
         self.started_at = 0.0
         self.replays = 0              # times preempted and re-queued
+        self.tool_retries = 0         # transient tool-error retries spent
+                                      # (per-episode retry cap accounting)
         self.session = None           # per-episode ToolSession (lazy; kept
                                       # across park/preempt/replay)
         self.turns = 0                # tool calls dispatched this episode
@@ -986,7 +992,11 @@ class ContinuousRolloutEngine:
                  paged_kv: bool = False, kv_page_size: int = 16,
                  kv_pool_pages: int = 0, resume_restore: bool = True,
                  snapshot_budget_bytes: int = 0, prefix_cache: bool = True,
-                 on_stage=None, tracer=None):
+                 on_stage=None, tracer=None, chaos=None,
+                 tool_retry_max: int = 3, tool_retry_base_s: float = 0.05,
+                 tool_retry_max_s: float = 2.0,
+                 tool_retry_episode_cap: int = 0,
+                 supervise_wedge_s: float = 0.0):
         self.cfg = cfg
         self.base_params = base_params
         self.max_slots = max_slots
@@ -1040,10 +1050,14 @@ class ContinuousRolloutEngine:
         self.disagg_prefill = disagg_prefill
         self.prefill_workers = max(1, prefill_workers)
         self.env_stage = env_stage
+        self._chaos = chaos          # ChaosInjector or None (fault drills)
         self._env: Optional[EnvStage] = EnvStage(
             max(1, env_workers),
             max_inflight_per_tenant=env_inflight_per_tenant,
-            sim_latency=sim_latency) if env_stage else None
+            sim_latency=sim_latency, retry_max=tool_retry_max,
+            retry_episode_cap=tool_retry_episode_cap,
+            retry_base_s=tool_retry_base_s, retry_max_s=tool_retry_max_s,
+            seed=seed, chaos=chaos) if env_stage else None
         self._prefill_chunk_eff = effective_chunk(cfg, prefill_chunk)
         self.on_stage = on_stage    # optional (phase, task_id, t0, t1) hook
                                     # (called from worker threads too)
@@ -1096,8 +1110,27 @@ class ContinuousRolloutEngine:
         self._stage_stop = threading.Event()
         self._stage_error: Optional[BaseException] = None
         self._workers: List[PrefillWorker] = []
+        self._next_pwid = 0     # unique prefill-worker ids across respawns
         self._pkernels: Optional[PrefillKernels] = None
         self._splice_fn = None
+        # -- stage supervision (ISSUE 10) ----------------------------------
+        # dead/wedged workers are detected on the step() tick, their
+        # stranded work recovered, and the pool restarted to complement
+        # under bounded exponential backoff; past the restart budget the
+        # supervisor raises on the engine thread (-> runtime.error ->
+        # checkpoint-restart)
+        self.supervise_wedge_s = supervise_wedge_s   # 0 = liveness only
+        self.supervisor = StageSupervisor(tracer=tracer)
+        if env_stage:
+            self.supervisor.register(
+                "env_worker", healthy=self._env_stage_healthy,
+                recover=self._env.recover_dead,
+                restart=self._env._ensure_workers)
+        if disagg_prefill:
+            self.supervisor.register(
+                "prefill_worker", healthy=self._prefill_stage_healthy,
+                recover=self._recover_prefill_claims,
+                restart=self._ensure_stage)
 
     # -- build ----------------------------------------------------------
     def _ensure_built(self):
@@ -1244,8 +1277,12 @@ class ContinuousRolloutEngine:
         if len(alive) >= self.prefill_workers:
             return
         self._stage_stop.clear()
-        fresh = [PrefillWorker(self, i)
-                 for i in range(len(alive), self.prefill_workers)]
+        fresh = []
+        for _ in range(self.prefill_workers - len(alive)):
+            # unique ids across respawns: a replacement must not shadow a
+            # dead worker's claimed-row ownership (supervisor recovery)
+            fresh.append(PrefillWorker(self, self._next_pwid))
+            self._next_pwid += 1
         self._workers = alive + fresh
         for w in fresh:
             w.start()
@@ -1256,7 +1293,44 @@ class ContinuousRolloutEngine:
         self._stage_stop.set()
         for w in self._workers:
             w.join(timeout=30)
+        self._recover_prefill_claims()   # chaos-killed workers strand rows
         self._workers = []
+
+    # -- stage supervision callables (engine thread only) -----------------
+    def _env_stage_healthy(self) -> bool:
+        if self.supervise_wedge_s > 0:
+            self._env.mark_wedged(self.supervise_wedge_s)
+        return self._env.healthy()
+
+    def _prefill_stage_healthy(self) -> bool:
+        if self._stacked is None or not self._workers:
+            return True          # stage not started (or halted): nothing
+                                 # to supervise — step() does first start
+        if self._stage_error is not None:
+            return True          # a REAL worker error is about to raise on
+                                 # the engine thread (fatal) — restarting
+                                 # first would just mask the cause
+        alive = [w for w in self._workers if w.is_alive()]
+        return len(alive) >= self.prefill_workers
+
+    def _recover_prefill_claims(self) -> int:
+        """Requeue rows a dead prefill worker stranded mid-prefill: still
+        in ``_stage_inflight`` (so not aborted) but never emitted and with
+        no live owner — they re-enter the scheduler queue and prefill
+        again from scratch (prefill is deterministic; the re-run is
+        token-identical)."""
+        n = 0
+        with self._stage_lock:
+            for w in self._workers:
+                if w.is_alive():
+                    continue
+                for row in list(w.claimed):
+                    w.claimed.remove(row)
+                    if row in self._stage_inflight:
+                        self._stage_inflight.remove(row)
+                        self._sched.push(row, self.stats.refills)
+                        n += 1
+        return n
 
     def _raise_stage_error(self):
         if self._stage_error is not None:
@@ -1426,6 +1500,12 @@ class ContinuousRolloutEngine:
         memory pressure the snapshot is dropped and the row replays from
         tokens instead (identical output, recomputed)."""
         if not self.resume_restore:
+            return
+        if self._chaos is not None and self._chaos.fire("snapshot_drop"):
+            # simulated host-memory pressure: the row falls back to token
+            # replay — identical output, recomputed prefix
+            row.snap = None
+            self.stats.snapshot_drops += 1
             return
         pos = self._slot_pos[slot]
         n_pg = self._row_pages_needed(pos)
@@ -1933,6 +2013,55 @@ class ContinuousRolloutEngine:
             self._preempt_slot(slot)
             freed += 1
         return freed
+
+    def abort_tenant(self, task_id: str, reason: str = "quarantined") -> int:
+        """Abort EVERY in-flight episode of one tenant — resident rows,
+        queued / mid-prefill / ready-to-splice rows, and env-parked jobs —
+        each yielding exactly one completion with ``reason`` as its
+        finish_reason (the runtime counts them as quarantine drops).
+        Other tenants' rows and scheduling order are untouched."""
+        n = 0
+        if self._env is not None:
+            for job in self._env.cancel_tenant(task_id):
+                row = job.row
+                if row.status == "done":
+                    continue     # expired earlier; already completed
+                row.status, row.finish_reason = "done", reason
+                self._complete_parked(row)
+                n += 1
+        for slot, r in enumerate(self._rows):
+            if r is not None and r.req.task_id == task_id:
+                r.status, r.finish_reason = "done", reason
+                self._evict(slot)    # cancels a pending tool future too
+                n += 1
+        with self._stage_lock:
+            drained: List[_Row] = []
+            while True:
+                row = self._sched.pop(
+                    self.stats.refills,
+                    where=lambda r: r.req.task_id == task_id)
+                if row is None:
+                    break
+                drained.append(row)
+            # mid-prefill rows: removing them from _stage_inflight makes
+            # the owning worker's eventual _emit a no-op (abort idiom the
+            # drain() path established)
+            for row in list(self._stage_inflight):
+                if row.req.task_id == task_id:
+                    self._stage_inflight.remove(row)
+                    drained.append(row)
+            keep: Deque[ReadyRow] = deque()
+            for rr in self._ready:
+                if rr.row.req.task_id == task_id:
+                    drained.append(rr.row)
+                else:
+                    keep.append(rr)
+            self._ready = keep
+        for row in drained:
+            row.status, row.finish_reason = "done", reason
+            self._complete_parked(row)
+            n += 1
+        return n
 
     # -- radix prefix reuse + GRPO-group sharing ---------------------------
     def _radix_on(self) -> bool:
@@ -2516,9 +2645,18 @@ class ContinuousRolloutEngine:
         for job in self._env.drain_resolved():
             row = job.row
             if job.error is not None:
+                # ToolError (permanent / retries exhausted) is an expected
+                # EPISODE outcome: the row finishes with finish_reason
+                # tool_error — counted, never trained, feeding the tenant
+                # breaker. Anything else is a bug in our stack and stays
+                # fatal, so chaos-off behaviour is unchanged.
                 row.status, row.finish_reason = "done", "tool_error"
+                self.stats.tool_errors += 1
+                if self._tracer is not None:
+                    self._tracer.mark(self._trace_of(row), "tool_error")
                 self._complete_parked(row)
-                first_error = first_error or job.error
+                if not isinstance(job.error, ToolError):
+                    first_error = first_error or job.error
                 continue
             tid = row.req.task_id
             self.stats.add_env_wait(tid, job.resolved_at - job.submitted_at)
@@ -2554,6 +2692,10 @@ class ContinuousRolloutEngine:
         any device work happened (refill/splice or decode)."""
         now = time.monotonic()
         progressed = False
+        # stage supervision: detect dead/wedged workers, recover their
+        # stranded work, respawn to complement under backoff (no-op while
+        # every pool is at complement — one healthy() call per stage)
+        self.supervisor.tick(now)
         # env-interaction stage: expire + resume parked rows (env_stage
         # mode); the baseline freeze-in-slot path resolves futures below
         if self._env is not None:
@@ -2604,7 +2746,10 @@ class ContinuousRolloutEngine:
                     raise RuntimeError(
                         "no adapters installed — call set_adapters()")
             else:
-                self._ensure_stage()
+                if not self._workers:
+                    self._ensure_stage()  # first start / post-halt only;
+                                          # replacements are the
+                                          # supervisor's (backoff-gated)
                 if self._splice_ready_rows():
                     progressed = True
         elif self._refill_free_slots():

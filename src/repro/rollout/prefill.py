@@ -217,6 +217,11 @@ class PrefillWorker(threading.Thread):
                          name=f"prefill-worker-{worker_id}")
         self.eng = engine
         self.worker_id = worker_id
+        self.last_beat = time.monotonic()  # liveness heartbeat (supervisor)
+        self.claimed: List = []  # rows popped but not yet emitted (mutated
+                                 # under eng._stage_lock) — the supervisor
+                                 # requeues these if this worker dies
+        self.chaos_killed = False
 
     # -- queue interaction (under the engine's stage lock) -----------------
     def _try_pop(self):
@@ -257,6 +262,7 @@ class PrefillWorker(threading.Thread):
             row = eng._sched.pop(eng.stats.refills, where=where)
             if row is not None:
                 eng._stage_inflight.append(row)
+                self.claimed.append(row)
         if row is not None and eng._tracer is not None:
             eng._tracer.mark(eng._trace_of(row), "prefill")
         return row
@@ -274,6 +280,8 @@ class PrefillWorker(threading.Thread):
         if eng._tracer is not None:
             eng._tracer.mark(eng._trace_of(job.row), "ready", ready.ready_at)
         with eng._stage_lock:
+            if job.row in self.claimed:
+                self.claimed.remove(job.row)
             if job.row not in eng._stage_inflight:
                 return    # aborted by drain() while we were prefilling
             eng._stage_inflight.remove(job.row)
@@ -372,7 +380,15 @@ class PrefillWorker(threading.Thread):
         jobs: Deque[_Job] = deque()
         try:
             while not eng._stage_stop.is_set():
+                self.last_beat = time.monotonic()
                 row = self._try_pop()
+                if row is not None and eng._chaos is not None \
+                        and eng._chaos.fire("prefill_worker_kill"):
+                    # simulated abrupt death: skip the finally requeue —
+                    # the claimed rows stay stranded in _stage_inflight
+                    # until the supervisor's recovery requeues them
+                    self.chaos_killed = True
+                    return
                 if row is not None:
                     # response-prefill fusion: fold a resume's whole forced
                     # block into the prefill when the job will run as ONE
@@ -401,9 +417,14 @@ class PrefillWorker(threading.Thread):
         finally:
             # hand unfinished rows back so abort/drain accounting sees them
             # (rows drain() already swept out of _stage_inflight were
-            # aborted there — dropping them keeps one completion each)
-            with eng._stage_lock:
-                for job in jobs:
-                    if job.row in eng._stage_inflight:
-                        eng._stage_inflight.remove(job.row)
-                        eng._sched.push(job.row, eng.stats.refills)
+            # aborted there — dropping them keeps one completion each);
+            # a chaos-killed worker deliberately strands its rows — the
+            # supervisor's recovery path is what's under test
+            if not self.chaos_killed:
+                with eng._stage_lock:
+                    for job in jobs:
+                        if job.row in eng._stage_inflight:
+                            eng._stage_inflight.remove(job.row)
+                            eng._sched.push(job.row, eng.stats.refills)
+                        if job.row in self.claimed:
+                            self.claimed.remove(job.row)
